@@ -1,0 +1,72 @@
+"""Paper Fig. 5: separate vs joint operators; Eq. 7 (var) vs Eq. 12 (SRM).
+
+The paper's two operator-design insights, measured as wall-clock on this
+host's CPU via XLA (the TVM analogue) for the MLP layer sizes at the
+paper's mini-batch sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import pfp_math
+
+LAYERS = [(784, 100), (100, 100), (100, 10)]
+
+
+def _mats(key, b, k, n):
+    ks = jax.random.split(key, 4)
+    mu_x = jax.random.normal(ks[0], (b, k))
+    var_x = jax.nn.softplus(jax.random.normal(ks[1], (b, k)))
+    mu_w = 0.1 * jax.random.normal(ks[2], (k, n))
+    var_w = 0.01 * jax.nn.softplus(jax.random.normal(ks[3], (k, n)))
+    return mu_x, var_x, mu_w, var_w
+
+
+@jax.jit
+def joint_srm(mu_x, srm_x, mu_w, srm_w):
+    return pfp_math.dense_moments_srm(mu_x, srm_x, mu_w, srm_w)
+
+
+@jax.jit
+def joint_var(mu_x, var_x, mu_w, var_w):
+    return pfp_math.dense_moments_var(mu_x, var_x, mu_w, var_w)
+
+
+@jax.jit
+def separate_mean(mu_x, mu_w):
+    return mu_x @ mu_w
+
+
+@jax.jit
+def separate_var(mu_x, var_x, mu_w, var_w):
+    # separate operator cannot reuse the mean-path tiles: recomputes squares
+    return (var_x @ jnp.square(mu_w) + jnp.square(mu_x) @ var_w
+            + var_x @ var_w)
+
+
+def run(quick: bool = True):
+    lines = []
+    for b in ([10] if quick else [1, 10, 100]):
+        for k, n in LAYERS:
+            mu_x, var_x, mu_w, var_w = _mats(jax.random.PRNGKey(b), b, k, n)
+            srm_x = var_x + jnp.square(mu_x)
+            srm_w = var_w + jnp.square(mu_w)
+
+            t_joint_srm = time_fn(joint_srm, mu_x, srm_x, mu_w, srm_w)
+            t_joint_var = time_fn(joint_var, mu_x, var_x, mu_w, var_w)
+            t_sep = (time_fn(separate_mean, mu_x, mu_w)
+                     + time_fn(separate_var, mu_x, var_x, mu_w, var_w))
+            tag = f"b{b}_{k}x{n}"
+            lines.append(emit(f"fig5/joint_srm/{tag}", t_joint_srm,
+                              "Eq.12 3-matmul"))
+            lines.append(emit(f"fig5/joint_var/{tag}", t_joint_var,
+                              "Eq.7 4-matmul"))
+            lines.append(emit(f"fig5/separate/{tag}", t_sep,
+                              f"speedup_joint={t_sep / t_joint_srm:.2f}x"))
+    return lines
+
+
+if __name__ == "__main__":
+    run(quick=False)

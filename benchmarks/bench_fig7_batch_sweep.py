@@ -1,0 +1,57 @@
+"""Paper Fig. 7: latency & speedup vs mini-batch size — PFP vs SVI(30).
+
+The paper's headline: PFP's single analytic pass vs 30 sampled forward
+passes, swept over mini-batch sizes; the speedup is largest at batch 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.bayes.convert import svi_to_pfp
+from repro.core.modes import Mode
+from repro.models.simple import mlp_forward, mlp_init
+from repro.nn.module import Context
+
+N_SVI = 30
+
+
+def run(quick: bool = True):
+    lines = []
+    params = mlp_init(jax.random.PRNGKey(0), d_hidden=100)
+    pfp_params = svi_to_pfp(params)
+
+    @jax.jit
+    def pfp_fn(x):
+        out = mlp_forward(pfp_params, x, Context(mode=Mode.PFP))
+        return out.mean, out.var
+
+    @jax.jit
+    def det_fn(x):
+        return mlp_forward(params, x, Context(mode=Mode.DETERMINISTIC))
+
+    @jax.jit
+    def svi_fn(x, key):
+        def one(k):
+            return mlp_forward(params, x,
+                               Context(mode=Mode.SVI, key=k))
+        return jax.vmap(one)(jax.random.split(key, N_SVI))
+
+    key = jax.random.PRNGKey(1)
+    batches = [1, 10, 100] if quick else [1, 4, 16, 64, 256]
+    for b in batches:
+        x = jax.random.normal(jax.random.fold_in(key, b), (b, 784))
+        t_pfp = time_fn(pfp_fn, x)
+        t_det = time_fn(det_fn, x)
+        t_svi = time_fn(svi_fn, x, key, iters=5)
+        lines.append(emit(f"fig7/det/b{b}", t_det, ""))
+        lines.append(emit(f"fig7/pfp/b{b}", t_pfp,
+                          f"vs_det={t_pfp / t_det:.1f}x_slower"))
+        lines.append(emit(f"fig7/svi30/b{b}", t_svi,
+                          f"pfp_speedup={t_svi / t_pfp:.0f}x"))
+    return lines
+
+
+if __name__ == "__main__":
+    run(quick=False)

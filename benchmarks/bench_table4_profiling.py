@@ -1,0 +1,96 @@
+"""Paper Table 4 / Fig. 6: per-layer latency profile of the PFP networks.
+
+Times each PFP layer of the MLP and LeNet-5 separately (jit per layer) at
+mini-batch 10, reporting the latency fraction per operator type — the
+paper's observation that "trivial" ops (ReLU, MaxPool) become hot under
+PFP is the quantity of interest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.bayes.convert import svi_to_pfp
+from repro.core.gaussian import GaussianTensor
+from repro.core.modes import Mode
+from repro.core.pfp_layers import (pfp_activation, pfp_conv2d_im2col,
+                                   pfp_dense, pfp_maxpool2d)
+from repro.models.simple import lenet5_init, mlp_init
+from repro.nn.module import Context, resolve_weight
+
+B = 10
+
+
+def _w(params, name):
+    ctx = Context(mode=Mode.PFP)
+    return resolve_weight(params[name]["w"], ctx)
+
+
+def run(quick: bool = True):
+    lines = []
+    # ---- MLP ----------------------------------------------------------
+    params = svi_to_pfp(mlp_init(jax.random.PRNGKey(0), d_hidden=100))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 784))
+    layers = []
+    h = x
+    w0 = _w(params, "dense0")
+    f_d0 = jax.jit(lambda a: pfp_dense(a, w0.to_srm()))
+    layers.append(("dense0", f_d0, (h,)))
+    h1 = f_d0(h)
+    f_r = jax.jit(lambda g: pfp_activation(g, "relu"))
+    layers.append(("relu", f_r, (h1,)))
+    h2 = f_r(h1)
+    w1 = _w(params, "dense1")
+    f_d1 = jax.jit(lambda g: pfp_dense(g, w1.to_srm()))
+    layers.append(("dense1", f_d1, (h2,)))
+    h3 = f_r(f_d1(h2))
+    w2 = _w(params, "dense2")
+    f_d2 = jax.jit(lambda g: pfp_dense(g, w2.to_srm()))
+    layers.append(("dense2", f_d2, (h3,)))
+
+    times = {n: time_fn(f, *a) for n, f, a in layers}
+    total = sum(times.values())
+    for n, t in times.items():
+        lines.append(emit(f"table4/mlp/{n}", t,
+                          f"fraction={t / total:.2%}"))
+    lines.append(emit("table4/mlp/total", total, ""))
+
+    # ---- LeNet-5 --------------------------------------------------------
+    lp = svi_to_pfp(lenet5_init(jax.random.PRNGKey(2)))
+    img = jax.random.normal(jax.random.PRNGKey(3), (B, 28, 28, 1))
+    ctx = Context(mode=Mode.PFP)
+    cw0 = resolve_weight(lp["conv0"]["w"], ctx)
+    f_c0 = jax.jit(lambda a: pfp_conv2d_im2col(a, cw0, padding="SAME"))
+    g0 = f_c0(img)
+    f_r2 = jax.jit(lambda g: pfp_activation(g, "relu"))
+    a0 = f_r2(g0)
+    f_p = jax.jit(lambda g: pfp_maxpool2d(g.to_var()))
+    p0 = f_p(a0)
+    cw1 = resolve_weight(lp["conv1"]["w"], ctx)
+    f_c1 = jax.jit(lambda a: pfp_conv2d_im2col(a.to_srm(), cw1, padding="SAME"))
+    g1 = f_c1(p0)
+    a1 = f_r2(g1)
+    p1 = f_p(a1)
+    flat = p1.reshape(B, -1)
+    dw0 = _w(lp, "dense0")
+    f_fd = jax.jit(lambda g: pfp_dense(g.to_srm(), dw0.to_srm()))
+
+    lenet_layers = [
+        ("conv0", f_c0, (img,)), ("relu0", f_r2, (g0,)),
+        ("maxpool0", f_p, (a0,)), ("conv1", f_c1, (p0,)),
+        ("relu1", f_r2, (g1,)), ("maxpool1", f_p, (a1,)),
+        ("dense0", f_fd, (flat,)),
+    ]
+    times = {n: time_fn(f, *a) for n, f, a in lenet_layers}
+    total = sum(times.values())
+    for n, t in times.items():
+        lines.append(emit(f"table4/lenet5/{n}", t,
+                          f"fraction={t / total:.2%}"))
+    lines.append(emit("table4/lenet5/total", total,
+                      "relu+pool hot under PFP (paper Fig. 6)"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

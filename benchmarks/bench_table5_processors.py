@@ -1,0 +1,74 @@
+"""Paper Table 5: Deterministic vs SVI vs PFP, tuned vs untuned.
+
+One host CPU here (the Cortex-A72 analogue); "untuned" = eager
+(no codegen), "tuned" = XLA-jitted — mirroring the paper's untuned/tuned
+TVM axis. Also emits the analytic TPU-v5e roofline projection of the same
+three programs from the dry-run FLOPs (Table 5's cross-processor axis,
+adapted to the hardware this framework targets).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.bayes.convert import svi_to_pfp
+from repro.core.modes import Mode
+from repro.models.simple import mlp_forward, mlp_init
+from repro.nn.module import Context
+
+N_SVI = 30
+B = 10
+
+
+def run(quick: bool = True):
+    lines = []
+    params = mlp_init(jax.random.PRNGKey(0), d_hidden=100)
+    pfp_params = svi_to_pfp(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 784))
+
+    def det(x):
+        return mlp_forward(params, x, Context(mode=Mode.DETERMINISTIC))
+
+    def pfp(x):
+        out = mlp_forward(pfp_params, x, Context(mode=Mode.PFP))
+        return out.mean, out.var
+
+    def svi(x, key):
+        def one(k):
+            return mlp_forward(params, x, Context(mode=Mode.SVI, key=k))
+        return jax.vmap(one)(jax.random.split(key, N_SVI))
+
+    key = jax.random.PRNGKey(2)
+    with jax.disable_jit():
+        t_det_untuned = time_fn(det, x, iters=3)
+        t_pfp_untuned = time_fn(pfp, x, iters=3)
+    t_det = time_fn(jax.jit(det), x)
+    t_pfp = time_fn(jax.jit(pfp), x)
+    t_svi = time_fn(jax.jit(svi), x, key, iters=5)
+
+    lines.append(emit("table5/det_untuned", t_det_untuned, ""))
+    lines.append(emit("table5/det_tuned", t_det,
+                      f"codegen={t_det_untuned / t_det:.0f}x"))
+    lines.append(emit("table5/pfp_untuned", t_pfp_untuned, ""))
+    lines.append(emit("table5/pfp_tuned", t_pfp,
+                      f"codegen={t_pfp_untuned / t_pfp:.0f}x;"
+                      f"vs_det={t_pfp / t_det:.1f}x"))
+    lines.append(emit("table5/svi30_tuned", t_svi,
+                      f"pfp_speedup={t_svi / t_pfp:.0f}x"))
+
+    # Analytic TPU projection (per-chip, batch 10): FLOP-bound estimate.
+    mlp_flops = 2 * (784 * 100 + 100 * 100 + 100 * 10) * B
+    det_s = mlp_flops / 197e12
+    pfp_s = 3 * mlp_flops / 197e12    # SRM joint operator: 3x matmuls
+    svi_s = N_SVI * mlp_flops / 197e12
+    lines.append(emit("table5/tpu_proj_det", det_s, "analytic"))
+    lines.append(emit("table5/tpu_proj_pfp", pfp_s,
+                      f"vs_det=3.0x (SRM; Eq.7 would be 4x)"))
+    lines.append(emit("table5/tpu_proj_svi30", svi_s,
+                      f"pfp_speedup={svi_s / pfp_s:.0f}x"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: timing, CSV emission, model builders."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-clock seconds per call (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(line)
+    return line
+
+
+def trained_paper_models(quick: bool = True):
+    """SVI-train the paper's MLP (and LeNet-5 unless quick) on synthetic
+    Dirty-MNIST; returns dict name -> (params, forward_fn, evals)."""
+    from repro.data.dirty_mnist import batches, dirty_mnist
+    from repro.models.simple import (lenet5_forward, lenet5_init,
+                                     mlp_forward, mlp_init)
+    from repro.bayes.variational import KLSchedule
+    from repro.nn.module import Context
+    from repro.training.optimizer import Adam
+    from repro.training.train_loop import init_train_state, make_svi_train_step
+
+    n_train = 1200 if quick else 4000
+    epochs = 25 if quick else 60
+    (x_train, y_train), evals = dirty_mnist(n_train=n_train,
+                                            n_eval=300 if quick else 1000)
+    out = {}
+    specs = [("mlp", mlp_init(jax.random.PRNGKey(0),
+                              d_hidden=64 if quick else 100,
+                              sigma_init=1e-3),
+              lambda p, x, c: mlp_forward(p, x.reshape(x.shape[0], -1), c))]
+    if not quick:
+        specs.append(("lenet5", lenet5_init(jax.random.PRNGKey(1),
+                                            sigma_init=1e-3),
+                      lambda p, x, c: lenet5_forward(
+                          p, x[..., None], c)))
+    for name, params, fwd in specs:
+        def loss_fwd(p, batch, ctx, _f=fwd):
+            return _f(p, batch["x"], ctx), 0.0
+
+        opt = Adam(learning_rate=3e-3)
+        step = jax.jit(make_svi_train_step(
+            loss_fwd, opt, num_data=n_train,
+            kl_schedule=KLSchedule(0.25, 150)))
+        state = init_train_state(params, opt)
+        for i, (bx, by) in enumerate(batches(x_train, y_train, 100,
+                                             epochs=epochs)):
+            state, _ = step(state, {"x": jnp.asarray(bx),
+                                    "targets": jnp.asarray(by)},
+                            jax.random.PRNGKey(i))
+        out[name] = (state.params, fwd, evals)
+    return out

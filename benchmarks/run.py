@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the slow versions
+(LeNet-5 training, full batch sweeps); default is the quick profile used
+by bench_output.txt.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (e.g. fig7,table5)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_fig5_formulations, bench_fig7_batch_sweep,
+                            bench_table1_quality, bench_table2_schedules,
+                            bench_table3_maxpool, bench_table4_profiling,
+                            bench_table5_processors)
+
+    benches = {
+        "table1": bench_table1_quality,
+        "fig5": bench_fig5_formulations,
+        "table2": bench_table2_schedules,
+        "table3": bench_table3_maxpool,
+        "table4": bench_table4_profiling,
+        "fig7": bench_fig7_batch_sweep,
+        "table5": bench_table5_processors,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        try:
+            benches[name].run(quick=not args.full)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILURES: {[n for n, _ in failures]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""End-to-end driver: SVI-train a Bayesian decoder LM, convert, PFP-decode.
+
+Defaults run a ~8M-parameter granite-family model for 100 steps in a few
+minutes on CPU; ``--preset 100m --steps 300`` is the full-size run this
+driver is written for (same code path the pod launcher uses: checkpointing,
+step monitoring, deterministic restartable data).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps N] [--preset 100m]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bayes.convert import svi_to_pfp
+from repro.bayes.variational import KLSchedule
+from repro.configs import get_config
+from repro.core.modes import Mode
+from repro.data.tokens import TokenPipeline
+from repro.models import lm
+from repro.nn.module import Context
+from repro.training.checkpoint import CheckpointManager
+from repro.training.fault_tolerance import StepMonitor
+from repro.training.optimizer import Adam, cosine_schedule
+from repro.training.train_loop import init_train_state, make_svi_train_step
+
+
+def make_cfg(preset: str):
+    base = get_config("granite-8b")
+    if preset == "100m":
+        return dataclasses.replace(
+            base, num_layers=8, d_model=640, num_heads=10, num_kv_heads=2,
+            head_dim=64, d_ff=1792, vocab_size=8192)
+    return dataclasses.replace(
+        base, num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=768, vocab_size=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--preset", default="small", choices=["small", "100m"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/pfp_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.preset)
+    print(f"model: {cfg.name}-style, ~{cfg.param_count() / 1e6:.0f}M params")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=0)
+    num_data = args.batch * args.seq * args.steps
+
+    def fwd(p, batch, ctx):
+        logits, aux, _ = lm.forward(p, cfg, batch, ctx)
+        return logits, aux
+
+    opt = Adam(learning_rate=cosine_schedule(3e-3, 20, args.steps),
+               clip_norm=1.0)
+    step = jax.jit(make_svi_train_step(
+        fwd, opt, num_data=num_data,
+        kl_schedule=KLSchedule(0.25, args.steps)))
+    state = init_train_state(params, opt)
+
+    mgr = CheckpointManager(args.ckpt_dir, keep_last=2)
+    monitor = StepMonitor()
+    losses = []
+    for i in range(args.steps):
+        t0 = time.perf_counter()
+        batch = jax.tree_util.tree_map(jnp.asarray, pipe.batch(i))
+        state, m = step(state, batch, jax.random.PRNGKey(i))
+        dt = time.perf_counter() - t0
+        verdict = monitor.record(i, dt)
+        losses.append(float(m["loss"]))
+        if i % 10 == 0 or verdict == "straggle":
+            print(f"step {i:4d} loss={losses[-1]:.3f} "
+                  f"nll={float(m['nll']):.3f} {dt * 1e3:.0f}ms [{verdict}]")
+        if (i + 1) % 50 == 0:
+            mgr.save(i + 1, state)          # async snapshot
+    mgr.wait()
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(learned bigram structure: {'yes' if losses[-1] < losses[0] - 0.5 else 'partial'})")
+
+    print("== convert to PFP and decode with uncertainty ==")
+    pfp_params = svi_to_pfp(state.params, dtype=jnp.float32)
+    ctx = Context(mode=Mode.PFP)
+    prompt = jnp.asarray(pipe.batch(999)["tokens"][:2, :16])
+    last, states = lm.prefill(pfp_params, cfg, {"tokens": prompt}, ctx,
+                              max_len=32)
+    from repro.serving.decode import uncertainty_decode
+
+    pos = 16
+    for t in range(6):
+        out = uncertainty_decode(last.mean, last.var, jax.random.PRNGKey(t))
+        print(f"  token={np.asarray(out.token)} "
+              f"MI={np.asarray(out.mutual_info).round(3)} "
+              f"abstain={np.asarray(out.abstain)}")
+        dec_in = {"tokens": out.token[:, None],
+                  "positions": jnp.full((2, 1), pos, jnp.int32),
+                  "cache_len": jnp.full((2,), pos, jnp.int32)}
+        last_l, states = lm.decode_step(pfp_params, cfg, dec_in, states, ctx)
+        last = last_l
+        pos += 1
+
+
+if __name__ == "__main__":
+    main()

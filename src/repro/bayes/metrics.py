@@ -1,0 +1,73 @@
+"""Uncertainty metrics (paper §2.2, Eqs. 1-3) and AUROC.
+
+Sample-based (SVI or PFP-with-logit-sampling, paper Eq. 11):
+    total   = Shannon entropy of the mean predictive   H[E_n p_n]   (Eq. 1)
+    aleatoric = mean softmax entropy                   E_n H[p_n]   (Eq. 2)
+    epistemic = mutual information                     Eq.1 - Eq.2  (Eq. 3)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def _entropy(p, axis=-1):
+    return -jnp.sum(p * jnp.log(p + _EPS), axis=axis)
+
+
+def predictive_metrics_from_samples(logits_samples):
+    """logits_samples: (N, B, K) -> dict of (B,) metric arrays."""
+    probs = jax.nn.softmax(logits_samples, axis=-1)          # (N, B, K)
+    mean_probs = jnp.mean(probs, axis=0)                     # (B, K)
+    total = _entropy(mean_probs)                             # Eq. 1
+    aleatoric = jnp.mean(_entropy(probs), axis=0)            # Eq. 2
+    mi = total - aleatoric                                   # Eq. 3
+    pred = jnp.argmax(mean_probs, axis=-1)
+    return {"total": total, "aleatoric": aleatoric, "mi": mi, "pred": pred,
+            "mean_probs": mean_probs}
+
+
+def sample_pfp_logits(key, mean, var, num_samples: int):
+    """Paper Eq. 11: l ~ N(mu_PFP, sigma^2_PFP) as a post-processing step."""
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    eps = jax.random.normal(key, (num_samples,) + mean.shape, mean.dtype)
+    return mean + eps * std
+
+
+def pfp_predictive_metrics(key, logit_mean, logit_var, num_samples: int = 100):
+    samples = sample_pfp_logits(key, logit_mean, logit_var, num_samples)
+    return predictive_metrics_from_samples(samples)
+
+
+def auroc(scores_pos, scores_neg) -> float:
+    """AUROC via the Mann-Whitney U statistic (ties get half credit).
+
+    scores_pos: uncertainty scores for OOD (positive class),
+    scores_neg: for in-domain. Returns a Python float in [0, 1].
+    """
+    import numpy as np
+
+    pos = np.asarray(scores_pos)
+    neg = np.asarray(scores_neg)
+    order = np.concatenate([pos, neg])
+    n_pos, n_neg = len(pos), len(neg)
+    ranks = np.empty(len(order))
+    ranks[np.argsort(order, kind="mergesort")] = np.arange(1, len(order) + 1)
+    # tie correction: average ranks per unique value
+    uniq, inv = np.unique(order, return_inverse=True)
+    rank_sum = np.zeros(len(uniq))
+    rank_cnt = np.zeros(len(uniq))
+    np.add.at(rank_sum, inv, ranks)
+    np.add.at(rank_cnt, inv, 1)
+    avg_rank = rank_sum / rank_cnt
+    ranks = avg_rank[inv]
+    u = ranks[:n_pos].sum() - n_pos * (n_pos + 1) / 2
+    return float(u / (n_pos * n_neg))
+
+
+def accuracy(pred, labels) -> float:
+    import numpy as np
+
+    return float(np.mean(np.asarray(pred) == np.asarray(labels)))

@@ -1,0 +1,12 @@
+"""llama-3.2-vision-90b — VLM backbone: cross-attn image layers every 5th
+layer; vision frontend is a STUB (input_specs provides patch embeddings)
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab_size=128256, activation="silu", gated_mlp=True,
+    norm="rmsnorm", positional="rope",
+    cross_attn_every=5, num_image_tokens=1024,
+)

@@ -1,0 +1,16 @@
+"""Core PFP library: Gaussian tensors, moment algebra, PFP layers/attention."""
+from repro.core.gaussian import GaussianTensor, as_gaussian, is_gaussian, SRM, VAR
+from repro.core.modes import Mode
+from repro.core import pfp_math, pfp_layers, pfp_attention
+
+__all__ = [
+    "GaussianTensor",
+    "as_gaussian",
+    "is_gaussian",
+    "SRM",
+    "VAR",
+    "Mode",
+    "pfp_math",
+    "pfp_layers",
+    "pfp_attention",
+]

@@ -1,0 +1,171 @@
+"""GaussianTensor: the fundamental data type of the Probabilistic Forward Pass.
+
+A GaussianTensor carries, per element, the first moment (mean) and a second
+moment in one of two *representations* (the paper's §5 "Variance and Second
+Raw Moment" design):
+
+  - ``rep='var'``: ``second`` holds the variance ``Var[x]``.
+  - ``rep='srm'``: ``second`` holds the second raw moment ``E[x^2]``.
+
+The representation tag is *static* (pytree aux data) so jit traces one
+program per representation and no runtime branching happens. Conversions use
+``E[x^2] = mu^2 + Var[x]`` and are explicit — the framework follows the
+paper's contract: compute layers consume SRM and emit VAR; activation
+functions consume VAR and emit SRM; anything else must convert explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+VAR = "var"
+SRM = "srm"
+
+# Floor applied when interpreting `second` as a variance. Keeps erf/exp and
+# rsqrt paths finite when a distribution collapses to a point mass.
+VAR_EPS = 1e-12
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GaussianTensor:
+    """Elementwise-independent Gaussian tensor (mean + second moment)."""
+
+    mean: jax.Array
+    second: jax.Array
+    rep: str = VAR  # static: 'var' | 'srm'
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.mean, self.second), (self.rep,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mean, second = children
+        return cls(mean=mean, second=second, rep=aux[0])
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_mean_var(cls, mean, var) -> "GaussianTensor":
+        return cls(mean=mean, second=var, rep=VAR)
+
+    @classmethod
+    def from_mean_srm(cls, mean, srm) -> "GaussianTensor":
+        return cls(mean=mean, second=srm, rep=SRM)
+
+    @classmethod
+    def deterministic(cls, x) -> "GaussianTensor":
+        """A point mass: Var = 0 (used for deterministic inputs, Eq. 13)."""
+        return cls(mean=x, second=jnp.zeros_like(x), rep=VAR)
+
+    # -- shape/dtype plumbing ----------------------------------------------
+    @property
+    def shape(self):
+        return self.mean.shape
+
+    @property
+    def dtype(self):
+        return self.mean.dtype
+
+    @property
+    def ndim(self):
+        return self.mean.ndim
+
+    def astype(self, dtype) -> "GaussianTensor":
+        return GaussianTensor(self.mean.astype(dtype), self.second.astype(dtype), self.rep)
+
+    def reshape(self, *shape) -> "GaussianTensor":
+        return GaussianTensor(self.mean.reshape(*shape), self.second.reshape(*shape), self.rep)
+
+    def transpose(self, *axes) -> "GaussianTensor":
+        return GaussianTensor(self.mean.transpose(*axes), self.second.transpose(*axes), self.rep)
+
+    def __getitem__(self, idx) -> "GaussianTensor":
+        return GaussianTensor(self.mean[idx], self.second[idx], self.rep)
+
+    # -- representation conversion (paper §5) --------------------------------
+    @property
+    def var(self) -> jax.Array:
+        """Variance, converting from SRM if necessary."""
+        if self.rep == VAR:
+            return self.second
+        return self.second - jnp.square(self.mean)
+
+    @property
+    def srm(self) -> jax.Array:
+        """Second raw moment E[x^2], converting from VAR if necessary."""
+        if self.rep == SRM:
+            return self.second
+        return self.second + jnp.square(self.mean)
+
+    @property
+    def std(self) -> jax.Array:
+        return jnp.sqrt(jnp.maximum(self.var, VAR_EPS))
+
+    def to_var(self) -> "GaussianTensor":
+        if self.rep == VAR:
+            return self
+        return GaussianTensor(self.mean, self.var, VAR)
+
+    def to_srm(self) -> "GaussianTensor":
+        if self.rep == SRM:
+            return self
+        return GaussianTensor(self.mean, self.srm, SRM)
+
+    def to_rep(self, rep: str) -> "GaussianTensor":
+        return self.to_var() if rep == VAR else self.to_srm()
+
+    # -- exact Gaussian algebra (independence assumed) ------------------------
+    def __add__(self, other: Any) -> "GaussianTensor":
+        """Sum of independent Gaussians: means add, variances add."""
+        if isinstance(other, GaussianTensor):
+            return GaussianTensor(
+                self.mean + other.mean, self.var + other.var, VAR
+            )
+        # deterministic shift: variance unchanged
+        return GaussianTensor(self.mean + other, self.var, VAR)
+
+    __radd__ = __add__
+
+    def __mul__(self, other: Any) -> "GaussianTensor":
+        """Product with a *deterministic* scalar/array (affine map).
+
+        For products of two GaussianTensors use
+        :func:`repro.core.pfp_math.product_moments` (variance couples).
+        """
+        if isinstance(other, GaussianTensor):
+            raise TypeError(
+                "Use pfp_math.gaussian_product for products of two "
+                "GaussianTensors; __mul__ only supports deterministic scale."
+            )
+        return GaussianTensor(self.mean * other, self.var * jnp.square(other), VAR)
+
+    __rmul__ = __mul__
+
+    def affine(self, scale, shift=None) -> "GaussianTensor":
+        """y = scale * x + shift with deterministic scale/shift (exact)."""
+        mean = self.mean * scale
+        var = self.var * jnp.square(scale)
+        if shift is not None:
+            mean = mean + shift
+        return GaussianTensor(mean, var, VAR)
+
+    # -- sampling (for SVI comparison / logit sampling, paper Eq. 11) ---------
+    def sample(self, key: jax.Array, num_samples: int | None = None) -> jax.Array:
+        shape = self.shape if num_samples is None else (num_samples, *self.shape)
+        eps = jax.random.normal(key, shape, dtype=self.mean.dtype)
+        return self.mean + eps * self.std
+
+
+def as_gaussian(x: Any) -> GaussianTensor:
+    """Lift a plain array to a point-mass GaussianTensor; pass through GTs."""
+    if isinstance(x, GaussianTensor):
+        return x
+    return GaussianTensor.deterministic(x)
+
+
+def is_gaussian(x: Any) -> bool:
+    return isinstance(x, GaussianTensor)

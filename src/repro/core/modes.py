@@ -1,0 +1,25 @@
+"""Execution modes — the framework's first-class switch.
+
+Every model in the zoo runs in three modes over a *single* parameter pytree
+of variational Gaussians (mu, rho):
+
+  DETERMINISTIC : forward on weight means only (paper's "Deterministic NN")
+  SVI           : K reparameterized weight samples, K forward passes
+                  (the paper's baseline; training uses K=1 inside the ELBO)
+  PFP           : one analytic moment-propagating pass (the contribution)
+"""
+from __future__ import annotations
+
+import enum
+
+
+class Mode(str, enum.Enum):
+    DETERMINISTIC = "deterministic"
+    SVI = "svi"
+    PFP = "pfp"
+
+    @classmethod
+    def parse(cls, value: "Mode | str") -> "Mode":
+        if isinstance(value, Mode):
+            return value
+        return cls(value.lower())

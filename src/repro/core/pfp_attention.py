@@ -1,0 +1,93 @@
+"""Mean-field PFP attention: moment propagation through softmax attention.
+
+The paper defines PFP for MLPs/CNNs only. For the transformer architectures
+this framework targets, attention is handled with a documented extension
+(DESIGN.md §4):
+
+  1. Attention *probabilities* A are computed from the score means
+     (optionally probit-corrected by score variances). Given A treated as
+     deterministic, the output is an affine map of V, so
+
+         E[out]   = A @ mu_v
+         Var[out] = A^2 @ var_v          (exact under that treatment)
+
+  2. Score variances (needed for the correction mode) follow the same
+     product-of-independent-Gaussians algebra as the PFP dense layer.
+
+This keeps the paper's joint-operator principle: the Pallas kernel
+(`repro/kernels/pfp_attention.py`) computes A, A@mu_v and A^2@var_v in one
+flash-attention-style pass with a shared online softmax.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pfp_math
+from repro.core.gaussian import VAR, GaussianTensor, as_gaussian
+
+MEAN_FIELD = "mean_field"
+VARIANCE_CORRECTED = "variance_corrected"
+
+
+def pfp_attention_weights(
+    q: GaussianTensor,
+    k: GaussianTensor,
+    scale: float,
+    mask: Optional[jax.Array] = None,
+    mode: str = MEAN_FIELD,
+) -> jax.Array:
+    """Attention probabilities from Gaussian Q/K. Shape (B, H, Tq, Tk)."""
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.mean, k.mean) * scale
+    if mode == VARIANCE_CORRECTED:
+        qv, kv = q.var, k.var
+        score_var = (
+            jnp.einsum("bhqd,bhkd->bhqk", qv, kv)
+            + jnp.einsum("bhqd,bhkd->bhqk", qv, jnp.square(k.mean))
+            + jnp.einsum("bhqd,bhkd->bhqk", jnp.square(q.mean), kv)
+        ) * (scale * scale)
+        scores = pfp_math.probit_corrected_logits(scores, score_var)
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def pfp_attention(
+    q: GaussianTensor,
+    k: GaussianTensor,
+    v: GaussianTensor,
+    scale: float,
+    mask: Optional[jax.Array] = None,
+    mode: str = MEAN_FIELD,
+) -> GaussianTensor:
+    """PFP attention over (B, H, T, D) GaussianTensors. Emits VAR."""
+    q, k, v = as_gaussian(q), as_gaussian(k), as_gaussian(v)
+    probs = pfp_attention_weights(q, k, scale, mask=mask, mode=mode)
+    mean = jnp.einsum("bhqk,bhkd->bhqd", probs, v.mean)
+    var = jnp.einsum("bhqk,bhkd->bhqd", jnp.square(probs), v.var)
+    return GaussianTensor(mean, var, VAR)
+
+
+def pfp_attention_decode(
+    q: GaussianTensor,
+    k_cache_mean: jax.Array,
+    v_cache: GaussianTensor,
+    scale: float,
+    mask: Optional[jax.Array] = None,
+    mode: str = MEAN_FIELD,
+    k_cache_var: Optional[jax.Array] = None,
+) -> GaussianTensor:
+    """Single-token decode against a (mu_k, mu_v, var_v[, var_k]) cache.
+
+    q: (B, H, 1, D); caches: (B, H, S, D). The cache stores V variances so
+    epistemic uncertainty survives into every later decode step; K variances
+    are optional (only used by the corrected mode).
+    """
+    k = GaussianTensor(
+        k_cache_mean,
+        k_cache_var if k_cache_var is not None else jnp.zeros_like(k_cache_mean),
+        VAR,
+    )
+    return pfp_attention(q, k, v_cache, scale, mask=mask, mode=mode)

@@ -1,0 +1,223 @@
+"""GaussianTensor-level PFP layer primitives.
+
+These are the composable building blocks the model zoo is assembled from.
+They enforce the paper's representation contract:
+
+  compute layers (dense / einsum / conv / embedding)  : consume SRM, emit VAR
+  activation functions                                : consume VAR, emit SRM
+
+so a [dense -> act -> dense -> act ...] chain performs zero representation
+conversions (paper §5, Fig. 5). Layers that need the other representation
+convert explicitly via GaussianTensor.to_var()/.to_srm().
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pfp_math
+from repro.core.gaussian import SRM, VAR, GaussianTensor, as_gaussian, is_gaussian
+
+Activation = Callable[[jax.Array], jax.Array]
+
+# Registry of moment-matched activations: name -> fn(mean, var) -> (mean, srm)
+ACTIVATION_MOMENTS = {
+    "relu": pfp_math.relu_moments,
+    "gelu": pfp_math.gelu_moments,
+    "silu": pfp_math.silu_moments,
+    "tanh": pfp_math.tanh_moments,
+    "sigmoid": pfp_math.sigmoid_moments,
+    "identity": lambda m, v: (m, v + jnp.square(m)),
+}
+
+DETERMINISTIC_ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+}
+
+
+def pfp_activation(x: GaussianTensor, kind: str) -> GaussianTensor:
+    """Moment-matched elementwise activation. VAR in, SRM out."""
+    fn = ACTIVATION_MOMENTS[kind]
+    mean, srm = fn(x.mean, x.var)
+    return GaussianTensor(mean, srm, SRM)
+
+
+def pfp_einsum(
+    subscripts: str,
+    x: GaussianTensor | jax.Array,
+    w: GaussianTensor,
+    formulation: str = "srm",
+) -> GaussianTensor:
+    """PFP generalized contraction (the paper's dense layer, Eqs. 4/12/13).
+
+    Works for any einsum in which each output element is a sum of products
+    of *distinct* (x, w) pairs — true for dense layers, batched projections
+    and im2col convolutions — so variances add exactly under the PFP
+    independence assumption.
+
+    Deterministic ``x`` triggers the first-layer simplification (Eq. 13).
+    Emits VAR (compute-layer contract).
+    """
+    if not is_gaussian(x):
+        # First-layer simplification: sigma^2_a = x^2 . sigma^2_w   (Eq. 13)
+        mean = jnp.einsum(subscripts, x, w.mean)
+        var = jnp.einsum(subscripts, jnp.square(x), w.var)
+        return GaussianTensor(mean, var, VAR)
+
+    mean = jnp.einsum(subscripts, x.mean, w.mean)
+    if formulation == "srm":
+        # Eq. 12: three contractions total, reuses precomputed SRMs.
+        var = jnp.einsum(subscripts, x.srm, w.srm) - jnp.einsum(
+            subscripts, jnp.square(x.mean), jnp.square(w.mean)
+        )
+    elif formulation == "var":
+        # Eq. 7: four contractions; kept for the Fig. 5 ablation.
+        xv, wv = x.var, w.var
+        var = (
+            jnp.einsum(subscripts, xv, jnp.square(w.mean))
+            + jnp.einsum(subscripts, jnp.square(x.mean), wv)
+            + jnp.einsum(subscripts, xv, wv)
+        )
+    else:
+        raise ValueError(f"unknown formulation: {formulation}")
+    return GaussianTensor(mean, var, VAR)
+
+
+def pfp_dense(
+    x: GaussianTensor | jax.Array,
+    w: GaussianTensor,
+    b: Optional[GaussianTensor] = None,
+    formulation: str = "srm",
+) -> GaussianTensor:
+    """PFP dense layer: y = x @ W (+ b), x: (..., K), W: (K, N)."""
+    out = pfp_einsum("...k,kn->...n", x, w, formulation=formulation)
+    if b is not None:
+        # Bias configs per paper §5: none / deterministic / probabilistic.
+        out = GaussianTensor(out.mean + b.mean, out.var + b.var, VAR)
+    return out
+
+
+def pfp_embedding(table: GaussianTensor, ids: jax.Array) -> GaussianTensor:
+    """Bayesian embedding lookup: gather (mu, sigma^2) rows. Emits VAR."""
+    return GaussianTensor(table.mean[ids], table.var[ids], VAR)
+
+
+def pfp_rmsnorm(
+    x: GaussianTensor, gain: jax.Array, eps: float = 1e-6
+) -> GaussianTensor:
+    """RMSNorm under PFP via the delta method.
+
+    rms^2(x) = mean_j x_j^2, so E[rms^2] = mean_j E[x_j^2] = mean(SRM) — the
+    normalizer is computed from the *second raw moments* and then treated as
+    a deterministic per-token scalar, making the layer affine (exact given
+    the scalar). Emits VAR.
+    """
+    srm = x.srm
+    norm = jax.lax.rsqrt(jnp.mean(srm, axis=-1, keepdims=True) + eps)
+    scale = norm * gain
+    return GaussianTensor(x.mean * scale, x.var * jnp.square(scale), VAR)
+
+
+def pfp_layernorm(
+    x: GaussianTensor,
+    gain: jax.Array,
+    bias: Optional[jax.Array] = None,
+    eps: float = 1e-6,
+) -> GaussianTensor:
+    """LayerNorm under PFP (delta method on mean/variance of the token)."""
+    mu_tok = jnp.mean(x.mean, axis=-1, keepdims=True)
+    # E[var_j + (mu_j - mu_tok)^2] — total second-moment spread of the token.
+    spread = jnp.mean(x.var + jnp.square(x.mean - mu_tok), axis=-1, keepdims=True)
+    norm = jax.lax.rsqrt(spread + eps)
+    scale = norm * gain
+    mean = (x.mean - mu_tok) * scale
+    if bias is not None:
+        mean = mean + bias
+    return GaussianTensor(mean, x.var * jnp.square(scale), VAR)
+
+
+def pfp_glu_product(a: GaussianTensor, b: GaussianTensor) -> GaussianTensor:
+    """Gated product a * b of independent GaussianTensors (exact).
+
+    In SRM representation this is two elementwise multiplies (the
+    representation-contract payoff for SwiGLU/GeGLU/RG-LRU gates).
+    """
+    mean, srm = pfp_math.product_srm(a.mean, a.srm, b.mean, b.srm)
+    return GaussianTensor(mean, srm, SRM)
+
+
+def pfp_residual(x: GaussianTensor, y: GaussianTensor) -> GaussianTensor:
+    """Residual add: independent Gaussians — means add, variances add."""
+    return GaussianTensor(x.mean + y.mean, x.var + y.var, VAR)
+
+
+def pfp_maxpool2d(x: GaussianTensor, window: int = 2) -> GaussianTensor:
+    """PFP max pool (NHWC) via a tournament of Clark pairwise maxes.
+
+    Matches the paper's vectorized fixed-kernel Max Pool (k=2) design:
+    reduce W pairs, then H pairs — three Clark maxes per 2x2 window.
+    Consumes VAR, emits VAR (paper: pooling layers keep variances).
+    """
+    assert window == 2, "production path specializes k=2 like the paper"
+    m, v = x.mean, x.var
+
+    def _pair_reduce(m, v, axis):
+        lo_m, hi_m = _split_pairs(m, axis)
+        lo_v, hi_v = _split_pairs(v, axis)
+        mean, srm = pfp_math.clark_max_moments(lo_m, lo_v, hi_m, hi_v)
+        return mean, jnp.maximum(srm - jnp.square(mean), 0.0)
+
+    m, v = _pair_reduce(m, v, axis=2)  # W
+    m, v = _pair_reduce(m, v, axis=1)  # H
+    return GaussianTensor(m, v, VAR)
+
+
+def _split_pairs(a: jax.Array, axis: int):
+    n = a.shape[axis]
+    assert n % 2 == 0, f"pool axis {axis} not divisible by 2: {a.shape}"
+    new_shape = a.shape[:axis] + (n // 2, 2) + a.shape[axis + 1 :]
+    a = a.reshape(new_shape)
+    lo = jax.lax.index_in_dim(a, 0, axis + 1, keepdims=False)
+    hi = jax.lax.index_in_dim(a, 1, axis + 1, keepdims=False)
+    return lo, hi
+
+
+def pfp_conv2d_im2col(
+    x: GaussianTensor | jax.Array,
+    w: GaussianTensor,
+    stride: int = 1,
+    padding: str = "VALID",
+    formulation: str = "srm",
+) -> GaussianTensor:
+    """PFP conv2d (NHWC, HWIO) via im2col + the PFP dense contraction.
+
+    The TPU-native adaptation of the paper's conv operator: patches are
+    extracted once and shared by the mean and variance matmuls (joint
+    operator), so the MXU does three GEMMs on an identical layout.
+    """
+    kh, kw, cin, cout = w.shape
+    # conv_general_dilated_patches emits features channel-major: (cin, kh, kw).
+    w2 = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+
+    def _patches(arr):
+        p = jax.lax.conv_general_dilated_patches(
+            arr,
+            filter_shape=(kh, kw),
+            window_strides=(stride, stride),
+            padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return p  # (N, Ho, Wo, cin*kh*kw)
+
+    if not is_gaussian(x):
+        xp = _patches(x)
+        return pfp_dense(xp, w2)
+    xp = GaussianTensor(_patches(x.mean), _patches(x.srm), SRM)
+    return pfp_dense(xp, w2, formulation=formulation)

@@ -1,0 +1,225 @@
+"""Moment algebra for the Probabilistic Forward Pass.
+
+All functions operate on raw arrays (mean, variance) so they can be shared
+between the pure-JAX reference layers, the Pallas kernel bodies and the
+tests. Higher-level GaussianTensor wrappers live in ``pfp_layers``.
+
+Closed forms implemented:
+  * ReLU moment matching            — paper Eqs. (8), (9)        [exact]
+  * product of independent Gaussians                              [exact]
+  * Clark (1961) max of two Gaussians                             [exact
+    first two moments of the max; re-Gaussianization is the usual PFP
+    moment-matching approximation]
+  * Gaussian CDF/PDF helpers, probit-corrected softmax logits
+
+Generic nonlinearities (GELU / SiLU / tanh / sigmoid / softplus / GeGLU
+gates) use Gauss–Hermite quadrature moment matching: for X ~ N(mu, var),
+
+    E[f(X)^k] ≈ 1/sqrt(pi) * sum_i w_i f(mu + sqrt(2 var) xi_i)^k
+
+which is exact in the node-count limit, fully vectorized (a handful of
+fused multiply-adds per element — VPU-friendly on TPU) and differentiable.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gaussian import VAR_EPS
+
+_SQRT_2 = math.sqrt(2.0)
+_SQRT_2PI = math.sqrt(2.0 * math.pi)
+_INV_SQRT_PI = 1.0 / math.sqrt(math.pi)
+# Probit approximation constant: sigmoid(x) ~= Phi(lambda x), lambda^2 = pi/8
+_PROBIT_LAMBDA_SQ = math.pi / 8.0
+
+
+def normal_pdf(x):
+    return jnp.exp(-0.5 * jnp.square(x)) / _SQRT_2PI
+
+
+def normal_cdf(x):
+    return 0.5 * (1.0 + jax.lax.erf(x / _SQRT_2))
+
+
+# ---------------------------------------------------------------------------
+# ReLU moment matching — paper Eqs. (8) and (9). Consumes VAR, emits SRM
+# (the paper's representation contract for activation functions).
+# ---------------------------------------------------------------------------
+def relu_moments(mean, var):
+    """Moment-matched ReLU on N(mean, var).
+
+    Returns ``(mean_out, srm_out)`` where ``srm_out = E[relu(X)^2]``.
+    Exact for Gaussian inputs; the PFP approximation is re-interpreting the
+    (truncated) output as Gaussian downstream (paper Fig. 2).
+    """
+    safe_var = jnp.maximum(var, VAR_EPS)
+    std = jnp.sqrt(safe_var)
+    t = mean / (std * _SQRT_2)
+    cdf_term = 0.5 * (1.0 + jax.lax.erf(t))                 # P(X > 0)
+    pdf_term = std * jnp.exp(-0.5 * jnp.square(mean) / safe_var) / _SQRT_2PI
+    mean_out = mean * cdf_term + pdf_term                    # Eq. (8)
+    srm_out = (safe_var + jnp.square(mean)) * cdf_term + mean * pdf_term  # Eq. (9)
+    # Point-mass fallback keeps the var -> 0 limit exact.
+    det_mean = jnp.maximum(mean, 0.0)
+    is_det = var <= VAR_EPS
+    mean_out = jnp.where(is_det, det_mean, mean_out)
+    srm_out = jnp.where(is_det, jnp.square(det_mean), jnp.maximum(srm_out, 0.0))
+    return mean_out, srm_out
+
+
+# ---------------------------------------------------------------------------
+# Gauss–Hermite moment matching for arbitrary elementwise nonlinearities.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _gh_nodes(num_nodes: int):
+    # NOTE: cache numpy (not jnp) — jnp constants created under a trace must
+    # not leak across traces through the cache.
+    nodes, weights = np.polynomial.hermite.hermgauss(num_nodes)
+    return nodes, weights * _INV_SQRT_PI
+
+
+def gauss_hermite_moments(f: Callable, mean, var, num_nodes: int = 8):
+    """E[f(X)], E[f(X)^2] for X ~ N(mean, var) via Gauss–Hermite quadrature.
+
+    Returns ``(mean_out, srm_out)`` (activation contract: emits SRM).
+    """
+    nodes_np, weights_np = _gh_nodes(num_nodes)
+    nodes = jnp.asarray(nodes_np, dtype=mean.dtype)
+    weights = jnp.asarray(weights_np, dtype=mean.dtype)
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    # (..., nodes) broadcast; keeps memory at num_nodes x input.
+    x = mean[..., None] + (_SQRT_2 * std)[..., None] * nodes
+    fx = f(x)
+    mean_out = jnp.sum(fx * weights, axis=-1)
+    srm_out = jnp.sum(jnp.square(fx) * weights, axis=-1)
+    return mean_out, srm_out
+
+
+def gelu_moments(mean, var, num_nodes: int = 8):
+    return gauss_hermite_moments(jax.nn.gelu, mean, var, num_nodes)
+
+
+def silu_moments(mean, var, num_nodes: int = 8):
+    return gauss_hermite_moments(jax.nn.silu, mean, var, num_nodes)
+
+
+def tanh_moments(mean, var, num_nodes: int = 8):
+    return gauss_hermite_moments(jnp.tanh, mean, var, num_nodes)
+
+
+def sigmoid_moments(mean, var, num_nodes: int = 8):
+    return gauss_hermite_moments(jax.nn.sigmoid, mean, var, num_nodes)
+
+
+def gelu_mean_closed_form(mean, var):
+    """Exact E[GELU(X)] = E[X Phi(X)] for X ~ N(mean, var).
+
+    Via Stein's lemma: E[X Phi(X)] = mu Phi(d) + var phi(d)/s with
+    s = sqrt(1 + var), d = mu / s. Used to cross-check the quadrature.
+    """
+    s = jnp.sqrt(1.0 + var)
+    d = mean / s
+    return mean * normal_cdf(d) + var * normal_pdf(d) / s
+
+
+# ---------------------------------------------------------------------------
+# Exact product / max algebra.
+# ---------------------------------------------------------------------------
+def product_moments(mean_a, var_a, mean_b, var_b):
+    """Moments of X*Y for independent Gaussians (exact).
+
+    Returns (mean, var). In SRM representation this is simply
+    E[XY] = mu_a mu_b and E[(XY)^2] = E[X^2] E[Y^2] — the cheapest form,
+    which the gating layers exploit.
+    """
+    mean = mean_a * mean_b
+    var = (
+        jnp.square(mean_a) * var_b
+        + jnp.square(mean_b) * var_a
+        + var_a * var_b
+    )
+    return mean, var
+
+
+def product_srm(mean_a, srm_a, mean_b, srm_b):
+    """Product in SRM representation (exact, 2 multiplies per element)."""
+    return mean_a * mean_b, srm_a * srm_b
+
+
+def clark_max_moments(mean_a, var_a, mean_b, var_b):
+    """First two moments of max(X, Y), X ⟂ Y Gaussian (Clark 1961).
+
+    Returns ``(mean, srm)``. The PFP max-pool re-Gaussianizes the result and
+    reduces a window by a tournament of pairwise maxes.
+    """
+    theta_sq = var_a + var_b
+    safe_theta = jnp.sqrt(jnp.maximum(theta_sq, VAR_EPS))
+    alpha = (mean_a - mean_b) / safe_theta
+    cdf_a = normal_cdf(alpha)
+    cdf_b = normal_cdf(-alpha)
+    pdf = normal_pdf(alpha)
+    mean = mean_a * cdf_a + mean_b * cdf_b + safe_theta * pdf
+    srm = (
+        (jnp.square(mean_a) + var_a) * cdf_a
+        + (jnp.square(mean_b) + var_b) * cdf_b
+        + (mean_a + mean_b) * safe_theta * pdf
+    )
+    # Degenerate (both deterministic) limit.
+    det = theta_sq <= VAR_EPS
+    det_mean = jnp.maximum(mean_a, mean_b)
+    mean = jnp.where(det, det_mean, mean)
+    srm = jnp.where(det, jnp.square(det_mean), srm)
+    return mean, srm
+
+
+# ---------------------------------------------------------------------------
+# PFP dense-layer moment propagation (paper Eqs. 4, 5/7, 12, 13).
+# These are the *reference* (pure jnp) forms; the fused Pallas kernel in
+# repro/kernels/pfp_dense.py computes the same quantities tile-by-tile.
+# ---------------------------------------------------------------------------
+def dense_moments_srm(mean_x, srm_x, mean_w, srm_w):
+    """Joint dense moments, second-raw-moment formulation (Eq. 4 + Eq. 12).
+
+    x: (..., K), w: (K, N). Returns (mean_a, var_a) — compute layers emit
+    variance (paper contract). Three matmuls total (vs four for Eq. 7).
+    """
+    mean_a = mean_x @ mean_w
+    var_a = srm_x @ srm_w - jnp.square(mean_x) @ jnp.square(mean_w)
+    return mean_a, var_a
+
+
+def dense_moments_var(mean_x, var_x, mean_w, var_w):
+    """Joint dense moments, mean/variance formulation (Eq. 4 + Eq. 7).
+
+    Four matmuls; kept for the Fig. 5 formulation ablation.
+    """
+    mean_a = mean_x @ mean_w
+    mean_x_sq = jnp.square(mean_x)
+    mean_w_sq = jnp.square(mean_w)
+    var_a = var_x @ mean_w_sq + mean_x_sq @ var_w + var_x @ var_w
+    return mean_a, var_a
+
+
+def dense_moments_first_layer(x, mean_w, var_w):
+    """First-layer simplification for deterministic inputs (Eq. 13)."""
+    mean_a = x @ mean_w
+    var_a = jnp.square(x) @ var_w
+    return mean_a, var_a
+
+
+# ---------------------------------------------------------------------------
+# Probit-corrected softmax scores (mean-field attention option).
+# ---------------------------------------------------------------------------
+def probit_corrected_logits(mean, var):
+    """E[softmax]-style correction: scale logits by 1/sqrt(1 + pi/8 var).
+
+    With var=0 this is the identity; used by the `variance_corrected`
+    attention mode to fold score uncertainty into the attention weights.
+    """
+    return mean / jnp.sqrt(1.0 + _PROBIT_LAMBDA_SQ * var)

@@ -1,0 +1,14 @@
+"""PFP Pallas TPU kernels — the compute hot-spots the paper optimizes.
+
+Paper (TVM/ARM)                      ->  here (Pallas/TPU)
+  joint PFP dense operator               pfp_dense.py   (3 MXU matmuls/tile)
+  PFP ReLU / moment-matched act          pfp_activations.py (VPU, fused mu+srm)
+  vectorized Max Pool k=2                pfp_maxpool.py (Clark tournament)
+  — (beyond paper: transformers)         pfp_attention.py (flash-style joint
+                                          mean/variance online softmax)
+
+`ops.py` holds the jit'd public wrappers; `ref.py` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,151 @@
+"""Public jit'd wrappers for the PFP Pallas kernels.
+
+Responsibilities:
+  * shape plumbing — flatten leading batch dims, pad to block multiples,
+    slice results back (padding along K contributes exact zeros to all
+    accumulators, so results are unaffected);
+  * dispatch — ``impl='kernel'`` runs the Pallas kernel (interpret=True
+    automatically off-TPU), ``impl='xla'`` runs the pure-jnp oracle from
+    ``ref.py`` (what the pjit'd production graphs use — XLA already fuses
+    the joint-operator structure there; the Pallas kernels are the
+    TPU-core-level statement of the same schedule);
+  * a process-wide default so models can flip implementations globally.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.pfp_activations import pfp_activation_pallas
+from repro.kernels.pfp_attention import pfp_attention_pallas
+from repro.kernels.pfp_dense import pfp_dense_pallas
+from repro.kernels.pfp_maxpool import pfp_maxpool2d_pallas
+
+Impl = Literal["kernel", "xla"]
+_DEFAULT_IMPL: Impl = "xla"
+
+
+def set_default_impl(impl: Impl) -> None:
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> Impl:
+    return _DEFAULT_IMPL
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a, mult, axis):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def pfp_dense(
+    mu_x, srm_x, mu_w, srm_w,
+    *, impl: Impl | None = None,
+    block_m: int = 128, block_n: int = 128, block_k: int = 512,
+    first_layer: bool = False,
+):
+    """Joint PFP dense for (..., K) x (K, N). Returns (mean, var)."""
+    impl = impl or _DEFAULT_IMPL
+    lead = mu_x.shape[:-1]
+    kdim = mu_x.shape[-1]
+    n = mu_w.shape[-1]
+    mu2 = mu_x.reshape(-1, kdim)
+    srm2 = srm_x.reshape(-1, kdim)
+
+    if impl == "xla":
+        if first_layer:
+            mu, var = ref.pfp_dense_first_layer_ref(mu2, mu_w, srm_w)
+        else:
+            mu, var = ref.pfp_dense_ref(mu2, srm2, mu_w, srm_w)
+    else:
+        m = mu2.shape[0]
+        bm = min(block_m, _ceil_mult(m))
+        bn = min(block_n, _ceil_mult(n))
+        bk = min(block_k, _ceil_mult(kdim))
+        mu2p = _pad_to(_pad_to(mu2, bm, 0), bk, 1)
+        srm2p = _pad_to(_pad_to(srm2, bm, 0), bk, 1)
+        mwp = _pad_to(_pad_to(mu_w, bk, 0), bn, 1)
+        swp = _pad_to(_pad_to(srm_w, bk, 0), bn, 1)
+        mu, var = pfp_dense_pallas(
+            mu2p, srm2p, mwp, swp,
+            block_m=bm, block_n=bn, block_k=bk,
+            interpret=_interpret(), first_layer=first_layer,
+        )
+        mu, var = mu[:m, :n], var[:m, :n]
+    return mu.reshape(*lead, n), var.reshape(*lead, n)
+
+
+def pfp_activation(mu, var, *, kind: str = "relu", impl: Impl | None = None,
+                   block_rows: int = 256, block_cols: int = 512):
+    """Fused moment-matched activation for any shape. Returns (mean, srm)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "xla":
+        fn = {"relu": ref.pfp_relu_ref, "gelu": ref.pfp_gelu_ref,
+              "silu": ref.pfp_silu_ref}[kind]
+        return fn(mu, var)
+    shape = mu.shape
+    cols = shape[-1]
+    mu2 = mu.reshape(-1, cols)
+    var2 = var.reshape(-1, cols)
+    m = mu2.shape[0]
+    bm = min(block_rows, _ceil_mult(m, 8))
+    bn = min(block_cols, _ceil_mult(cols))
+    mu2 = _pad_to(mu2, bm, 0)
+    # Pad variances with ones (not zeros) to dodge the det-branch select;
+    # padded outputs are sliced away regardless.
+    var2 = _pad_to(var2, bm, 0)
+    mu2 = _pad_to(mu2, bn, 1)
+    var2 = _pad_to(var2, bn, 1)
+    mo, so = pfp_activation_pallas(
+        mu2, var2, kind=kind, block_rows=bm, block_cols=bn,
+        interpret=_interpret(),
+    )
+    mo = mo[:m, :cols].reshape(shape)
+    so = so[:m, :cols].reshape(shape)
+    return mo, so
+
+
+def pfp_maxpool2d(mu, var, *, impl: Impl | None = None):
+    """2x2/2 PFP max pool on NHWC. Returns (mean, var)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "xla":
+        return ref.pfp_maxpool2d_ref(mu, var)
+    return pfp_maxpool2d_pallas(mu, var, interpret=_interpret())
+
+
+def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float, causal: bool = True,
+                  impl: Impl | None = None, block_q: int = 128, block_k: int = 128):
+    """Mean-field PFP attention (B, H, T, D). Returns (mean, var)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "xla":
+        return ref.pfp_attention_ref(q_mu, k_mu, v_mu, v_var, scale, causal)
+    return pfp_attention_pallas(
+        q_mu, k_mu, v_mu, v_var, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )
+
+
+def _ceil_mult(x: int, base: int = 128) -> int:
+    """Largest 'nice' block <= x: next multiple of base if x >= base else x."""
+    if x >= base:
+        return base
+    return x
+
+
+__all__ = [
+    "pfp_dense", "pfp_activation", "pfp_maxpool2d", "pfp_attention",
+    "set_default_impl", "get_default_impl",
+]

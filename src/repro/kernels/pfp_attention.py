@@ -1,0 +1,177 @@
+"""Flash-style PFP attention Pallas kernel (mean-field, joint mu/var pass).
+
+One online-softmax sweep produces BOTH attention outputs:
+
+    out_mu  = softmax(q mu_k^T) @ mu_v
+    out_var = softmax(q mu_k^T)^2 @ var_v
+
+The square of the attention probabilities shares the same running max m and
+normalizer l as the probabilities themselves: if p = exp(s - m)/l then
+p^2 = exp(2(s - m))/l^2, so the variance accumulator is rescaled by
+alpha^2 = exp(2(m_old - m_new)) where the mean accumulator uses alpha, and
+is divided by l^2 at the end. This is the joint-operator principle applied
+to attention: mu_v and var_v tiles ride the same K-loop, and the score tile
+s is computed once for both paths.
+
+Grid: (B*H, Tq/bq, Tk/bk); the Tk axis is sequential with fp32 accumulators
+(m, l broadcast over 128 lanes; acc_mu, acc_var of shape (bq, d)) in VMEM.
+Causality is right-aligned (decode/prefill-with-cache friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except ImportError:  # pragma: no cover
+    _VMEM = None
+
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_mu_ref, v_var_ref,
+    out_mu_ref, out_var_ref,
+    m_ref, l_ref, acc_mu_ref, acc_var_ref,
+    *, scale: float, bq: int, bk: int, tq: int, tk: int, tk_valid: int,
+    causal: bool, nk: int,
+):
+    qi = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_mu_ref[...] = jnp.zeros_like(acc_mu_ref)
+        acc_var_ref[...] = jnp.zeros_like(acc_var_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                            # (bq, bk)
+
+    k_idx = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = k_idx < tk_valid
+    if causal:
+        q_idx = (
+            qi * bq
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            + (tk_valid - tq)                            # right-aligned
+        )
+        valid = jnp.logical_and(valid, q_idx >= k_idx)
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                                # (bq, 1)
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)           # (bq, 1)
+    m_next = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_next)                     # (bq, 1)
+    p = jnp.exp(s - m_next)                              # (bq, bk)
+    p = jnp.where(valid, p, 0.0)
+    l_next = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+    v_mu = v_mu_ref[0].astype(jnp.float32)               # (bk, d)
+    v_var = v_var_ref[0].astype(jnp.float32)
+    acc_mu_ref[...] = acc_mu_ref[...] * alpha + jnp.dot(
+        p, v_mu, preferred_element_type=jnp.float32
+    )
+    acc_var_ref[...] = acc_var_ref[...] * jnp.square(alpha) + jnp.dot(
+        jnp.square(p), v_var, preferred_element_type=jnp.float32
+    )
+
+    m_ref[...] = jnp.broadcast_to(m_next, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_next, l_ref.shape)
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        out_mu_ref[0] = acc_mu_ref[...] / l
+        out_var_ref[0] = acc_var_ref[...] / jnp.square(l)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "block_q", "block_k", "interpret"),
+)
+def pfp_attention_pallas(
+    q_mu,
+    k_mu,
+    v_mu,
+    v_var,
+    *,
+    scale: float,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """(B, H, Tq, D) x (B, H, Tk, D) -> mean/var (B, H, Tq, D), fp32."""
+    b, h, tq, d = q_mu.shape
+    tk = k_mu.shape[2]
+    bq = min(block_q, tq)
+    bk = min(block_k, tk)
+
+    def _pad_t(a, t_to):
+        pad = t_to - a.shape[2]
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return a
+
+    tq_p = tq + ((-tq) % bq)
+    tk_p = tk + ((-tk) % bk)
+    q_mu = _pad_t(q_mu, tq_p)
+    k_mu, v_mu, v_var = (_pad_t(a, tk_p) for a in (k_mu, v_mu, v_var))
+
+    bh = b * h
+    q_mu = q_mu.reshape(bh, tq_p, d)
+    k_mu = k_mu.reshape(bh, tk_p, d)
+    v_mu = v_mu.reshape(bh, tk_p, d)
+    v_var = v_var.reshape(bh, tk_p, d)
+    nk = tk_p // bk
+
+    q_spec = pl.BlockSpec((1, bq, d), lambda bh_, i, k_: (bh_, i, 0))
+    kv_spec = pl.BlockSpec((1, bk, d), lambda bh_, i, k_: (bh_, k_, 0))
+    out_spec = pl.BlockSpec((1, bq, d), lambda bh_, i, k_: (bh_, i, 0))
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, bq=bq, bk=bk, tq=tq, tk=tk_p, tk_valid=tk,
+        causal=causal, nk=nk,
+    )
+    scratch = [
+        _scratch((bq, _LANES)),
+        _scratch((bq, _LANES)),
+        _scratch((bq, d)),
+        _scratch((bq, d)),
+    ]
+    fn = pl.pallas_call(
+        kernel,
+        grid=(bh, tq_p // bq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, kv_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, tq_p, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, tq_p, d), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )
+    out_mu, out_var = fn(q_mu, k_mu, v_mu, v_var)
+    out_mu = out_mu.reshape(b, h, tq_p, d)[:, :, :tq]
+    out_var = out_var.reshape(b, h, tq_p, d)[:, :, :tq]
+    return out_mu, out_var
+
+
+def _scratch(shape):
+    if _VMEM is not None:
+        return _VMEM(shape, jnp.float32)
+    return pl.MemoryRef(shape, jnp.float32)  # pragma: no cover

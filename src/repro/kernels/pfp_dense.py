@@ -1,0 +1,165 @@
+"""Fused joint PFP dense Pallas kernel — the paper's flagship operator on TPU.
+
+The paper's two key operator insights (TVM §5) map to one kernel design:
+
+  * joint operator  — the mean and variance paths are computed in the SAME
+    grid step, so each (bm, bk) tile of mu_x / srm_x and (bk, bn) tile of
+    mu_w / srm_w is loaded into VMEM once and feeds all three MXU matmuls;
+  * SRM formulation — Eq. 12 needs 3 matmuls (mu.mu, srm.srm, mu^2.mu^2)
+    instead of Eq. 7's 4, and consumes the SRMs the previous activation
+    already produced (no conversion pass over HBM).
+
+Grid: (M/bm, N/bn, K/bk) with the K axis 'arbitrary' (sequential) so the
+fp32 accumulators live in VMEM across K steps. Block shapes default to
+MXU-aligned (128, 128) tiles with bk=512.
+
+A `first_layer` variant implements Eq. 13 (deterministic inputs): two
+matmuls, no mu^2 correction accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are versioned; interpret mode ignores them.
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _dense_kernel(mu_x_ref, srm_x_ref, mu_w_ref, srm_w_ref,
+                  mu_out_ref, var_out_ref, acc_musq_ref, *, nk: int):
+    """One (i, j, k) grid step of the joint PFP dense operator."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        mu_out_ref[...] = jnp.zeros_like(mu_out_ref)
+        var_out_ref[...] = jnp.zeros_like(var_out_ref)
+        acc_musq_ref[...] = jnp.zeros_like(acc_musq_ref)
+
+    mu_x = mu_x_ref[...]
+    mu_w = mu_w_ref[...]
+    # Three MXU matmuls sharing the tiles already resident in VMEM.
+    mu_out_ref[...] += jnp.dot(mu_x, mu_w, preferred_element_type=jnp.float32)
+    var_out_ref[...] += jnp.dot(
+        srm_x_ref[...], srm_w_ref[...], preferred_element_type=jnp.float32
+    )
+    acc_musq_ref[...] += jnp.dot(
+        jnp.square(mu_x), jnp.square(mu_w), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        # Eq. 12: sigma^2 = E[x^2].E[w^2] - (mu_x.mu_w)^2 (per-j, reduced).
+        var_out_ref[...] = var_out_ref[...] - acc_musq_ref[...]
+
+
+def _first_layer_kernel(x_ref, mu_w_ref, var_w_ref,
+                        mu_out_ref, var_out_ref, *, nk: int):
+    """Eq. 13: mu = x.mu_w ; var = x^2.var_w — two MXU matmuls."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        mu_out_ref[...] = jnp.zeros_like(mu_out_ref)
+        var_out_ref[...] = jnp.zeros_like(var_out_ref)
+
+    x = x_ref[...]
+    mu_out_ref[...] += jnp.dot(x, mu_w_ref[...], preferred_element_type=jnp.float32)
+    var_out_ref[...] += jnp.dot(
+        jnp.square(x), var_w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _compiler_params(nk_parallel: bool = False):
+    if pltpu is None:
+        return None
+    dims = ("parallel", "parallel", "arbitrary")
+    for cls_name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, cls_name, None)
+        if cls is not None:
+            try:
+                return cls(dimension_semantics=dims)
+            except TypeError:  # pragma: no cover
+                continue
+    return None
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "first_layer"),
+)
+def pfp_dense_pallas(
+    mu_x,
+    srm_x,
+    mu_w,
+    srm_w,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+    first_layer: bool = False,
+):
+    """Joint PFP dense: (M,K)x(K,N) -> mean (M,N), variance (M,N) in fp32.
+
+    For ``first_layer=True`` the inputs are interpreted as
+    (x, x_unused, mu_w, var_w) per Eq. 13; pass ``srm_x=x``.
+
+    Shapes must be multiples of the block sizes — `ops.pfp_dense` pads.
+    """
+    m, kdim = mu_x.shape
+    _, n = mu_w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim, bm, bn, bk)
+    nk = kdim // bk
+    grid = (m // bm, n // bn, nk)
+
+    in_specs_x = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    in_specs_w = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+    ]
+
+    common = dict(
+        grid=grid,
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    params = _compiler_params()
+    if params is not None and not interpret:
+        common["compiler_params"] = params
+
+    if first_layer:
+        fn = pl.pallas_call(
+            functools.partial(_first_layer_kernel, nk=nk),
+            in_specs=[in_specs_x, in_specs_w, in_specs_w],
+            **common,
+        )
+        mu, var = fn(mu_x, mu_w, srm_w)
+        return mu, var
+
+    fn = pl.pallas_call(
+        functools.partial(_dense_kernel, nk=nk),
+        in_specs=[in_specs_x, in_specs_x, in_specs_w, in_specs_w],
+        scratch_shapes=[_scratch((bm, bn))],
+        **common,
+    )
+    mu, var = fn(mu_x, srm_x, mu_w, srm_w)
+    return mu, var
+
+
+def _scratch(shape):
+    if _VMEM is not None:
+        return _VMEM(shape, jnp.float32)
+    return pl.MemoryRef(shape, jnp.float32)  # pragma: no cover

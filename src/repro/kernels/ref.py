@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the bit-level specification the kernels are tested against
+(interpret=True on CPU, sweeping shapes and dtypes). They are themselves
+thin compositions of `repro.core.pfp_math`, which is validated against
+Monte-Carlo sampling in tests/test_pfp_vs_monte_carlo.py — so the chain is
+kernel -> oracle -> sampled ground truth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pfp_math
+
+
+# -- pfp_dense ---------------------------------------------------------------
+def pfp_dense_ref(mu_x, srm_x, mu_w, srm_w):
+    """Joint PFP dense (SRM formulation, Eq. 4 + Eq. 12). fp32 accumulate."""
+    f32 = jnp.float32
+    mu = jnp.dot(mu_x.astype(f32), mu_w.astype(f32))
+    var = jnp.dot(srm_x.astype(f32), srm_w.astype(f32)) - jnp.dot(
+        jnp.square(mu_x.astype(f32)), jnp.square(mu_w.astype(f32))
+    )
+    return mu, var
+
+
+def pfp_dense_first_layer_ref(x, mu_w, var_w):
+    """First-layer simplification (Eq. 13): deterministic inputs."""
+    f32 = jnp.float32
+    mu = jnp.dot(x.astype(f32), mu_w.astype(f32))
+    var = jnp.dot(jnp.square(x.astype(f32)), var_w.astype(f32))
+    return mu, var
+
+
+# -- pfp_activations ---------------------------------------------------------
+def pfp_relu_ref(mu, var):
+    return pfp_math.relu_moments(mu.astype(jnp.float32), var.astype(jnp.float32))
+
+
+def pfp_gelu_ref(mu, var, num_nodes: int = 8):
+    return pfp_math.gelu_moments(
+        mu.astype(jnp.float32), var.astype(jnp.float32), num_nodes
+    )
+
+
+def pfp_silu_ref(mu, var, num_nodes: int = 8):
+    return pfp_math.silu_moments(
+        mu.astype(jnp.float32), var.astype(jnp.float32), num_nodes
+    )
+
+
+# -- pfp_maxpool -------------------------------------------------------------
+def pfp_maxpool2d_ref(mu, var):
+    """2x2/stride-2 PFP max pool on NHWC via Clark tournament (VAR->VAR)."""
+    n, h, w, c = mu.shape
+    mu00, mu01 = mu[:, :, 0::2, :], mu[:, :, 1::2, :]
+    v00, v01 = var[:, :, 0::2, :], var[:, :, 1::2, :]
+    m_w, s_w = pfp_math.clark_max_moments(mu00, v00, mu01, v01)
+    v_w = jnp.maximum(s_w - jnp.square(m_w), 0.0)
+    m0, m1 = m_w[:, 0::2], m_w[:, 1::2]
+    v0, v1 = v_w[:, 0::2], v_w[:, 1::2]
+    m, s = pfp_math.clark_max_moments(m0, v0, m1, v1)
+    return m, jnp.maximum(s - jnp.square(m), 0.0)
+
+
+# -- pfp_attention -----------------------------------------------------------
+def pfp_attention_ref(q_mu, k_mu, v_mu, v_var, scale, causal=True):
+    """Mean-field PFP attention oracle over (B, H, T, D)."""
+    f32 = jnp.float32
+    s = jnp.einsum("bhqd,bhkd->bhqk", q_mu.astype(f32), k_mu.astype(f32)) * scale
+    if causal:
+        tq, tk = s.shape[-2], s.shape[-1]
+        idx_q = jnp.arange(tq)[:, None] + (tk - tq)  # right-aligned causal
+        mask = idx_q >= jnp.arange(tk)[None, :]
+        s = jnp.where(mask, s, jnp.finfo(f32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    out_mu = jnp.einsum("bhqk,bhkd->bhqd", p, v_mu.astype(f32))
+    out_var = jnp.einsum("bhqk,bhkd->bhqd", jnp.square(p), v_var.astype(f32))
+    return out_mu, out_var

@@ -1,0 +1,287 @@
+"""Program builders for the dry-run and the launchers.
+
+Maps every (arch x input-shape) cell to a concrete jittable program plus
+abstract argument specs (ShapeDtypeStructs — never allocated) and
+shardings:
+
+  train_4k     -> SVI ELBO train step (the paper's training mode, 1 MC
+                  sample, remat'd scan, Adam) — fp32 variational params
+  prefill_32k  -> PFP prefill (single analytic pass, fills decode state)
+                  — bf16 converted (mu, srm) deployment params
+  decode_32k / long_500k -> PFP serve step (1 new token against a
+                  seq_len-sized state) — bf16 deployment params
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.bayes.convert import svi_to_pfp
+from repro.bayes.variational import KLSchedule
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.core.modes import Mode
+from repro.launch import sharding as shlib
+from repro.models import lm
+from repro.nn.module import Context
+from repro.serving.decode import make_prefill_step, make_serve_step
+from repro.training.optimizer import Adam
+from repro.training.train_loop import (TrainState, init_train_state,
+                                       make_svi_train_step)
+
+
+class Program(NamedTuple):
+    name: str
+    fn: Any                 # jittable callable
+    arg_specs: tuple        # pytree of ShapeDtypeStruct per positional arg
+    in_shardings: tuple
+    donate_argnums: tuple
+    meta: dict
+
+
+def _sds(tree, dtype=None):
+    def mk(x):
+        dt = dtype if (dtype is not None and
+                       jnp.issubdtype(x.dtype, jnp.floating)) else x.dtype
+        return jax.ShapeDtypeStruct(x.shape, dt)
+
+    return jax.tree_util.tree_map(mk, tree)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                compute_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = shape.global_batch
+    t = 1 if shape.kind == "decode" else shape.seq_len
+    specs: dict = {}
+    if cfg.embed_inputs:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    else:
+        specs["frame_embeddings"] = jax.ShapeDtypeStruct(
+            (b, t, cfg.d_model), compute_dtype)
+    if cfg.family == "vlm":
+        specs["image_embeddings"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), compute_dtype)
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    if shape.kind == "decode":
+        specs["positions"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        specs["cache_len"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return specs
+
+
+def variational_param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def pfp_param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    var_specs = variational_param_specs(cfg)
+    return jax.eval_shape(
+        functools.partial(svi_to_pfp, rep="srm", dtype=dtype), var_specs)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    st = jax.eval_shape(
+        functools.partial(lm.init_decode_state, cfg, batch, max_len))
+    return _sds(st, dtype)
+
+
+def build_program(arch: str, shape_name: str, mesh, *,
+                  mode_override: Optional[str] = None,
+                  query_chunk: Optional[int] = None,
+                  formulation: str = "srm",
+                  serve_params: str = "tp",
+                  logical_rules: Optional[dict] = None) -> Program:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+
+    # Bind logical activation-sharding anchors for this (cfg, shape, mesh).
+    from repro.launch.mesh import dp_axes
+    from repro.nn import pjit_hints
+
+    batch_axes = dp_axes(mesh)
+    # Train: shard the residual stream's d_model over 'model' (the scan-
+    # saved carries dominate memory). Serve: keep it unsharded — with
+    # TP-only weights that leaves exactly Megatron's two partial-sum
+    # reductions per layer instead of AG(x)+AR(out) on every projection.
+    embed_axis = "model" if shape.kind == "train" else None
+    seq_axis = None
+    if cfg.family == "ssm":
+        # Attention-free: the 'model' axis carries no TP for activations, so
+        # fold it into the batch shards (else e.g. the (B,T,50280) mamba
+        # logits only shard 16-way and blow the per-device HBM budget).
+        # When the batch can't fill it (prefill_32k: batch 32), the
+        # constrain() fallback drops 'model' from the batch dim and the seq
+        # dim picks it up instead (sequence parallelism — the conv halo and
+        # SSD chunk-state exchange become collective-permutes).
+        batch_axes = batch_axes + ("model",)
+        embed_axis = None  # 'model' is consumed by batch or seq
+        seq_axis = "model"
+    rules = {
+        "mesh": mesh,
+        # The d_model axis of layer-boundary activations shards over 'model'
+        # so the scan-saved residual stream (the dominant train-time temp:
+        # L x (B,T,D) fp32 for backward) splits 16-ways beyond the batch.
+        "batch": batch_axes,
+        "state_batch": dp_axes(mesh),  # KV-cache batch dim (constrain_kv)
+        "seq": seq_axis,
+        "embed": embed_axis,
+        "vocab": "model",
+        "expert": "model",     # EP: experts across the TP axis
+        "capacity": "data",    # expert-buffer slots across the DP axis
+        "ffn": None,
+    }
+    if logical_rules:
+        rules.update(logical_rules)
+    pjit_hints.set_rules(rules)
+
+    meta["formulation"] = formulation
+    if serve_params == "auto" or serve_params == "tp":
+        # TP-only weights kill the per-layer AG/AR storm (§Perf cell A) but
+        # replicate params over 'data': only safe when the bf16 (mu, srm)
+        # deployment pytree fits comfortably alongside the KV/state cache.
+        if cfg.param_count() * 2 * 2 / 16 > 4e9:  # >4 GB/dev at TP-16
+            serve_params = "fsdp"
+        else:
+            serve_params = "tp"
+    meta["serve_params"] = serve_params
+    serve_tp = serve_params == "tp"
+    if shape.kind == "train":
+        return _train_program(cfg, shape, mesh, meta, mode_override)
+    if shape.kind == "prefill":
+        return _prefill_program(cfg, shape, mesh, meta, mode_override,
+                                formulation, serve_tp)
+    return _decode_program(cfg, shape, mesh, meta, mode_override, formulation,
+                           serve_tp)
+
+
+def _train_program(cfg, shape, mesh, meta, mode_override) -> Program:
+    optimizer = Adam(learning_rate=1e-3, clip_norm=1.0)
+    mode = Mode.parse(mode_override) if mode_override else Mode.SVI
+
+    # Grad-accumulation microbatching: big models trade steps for activation
+    # memory (the per-microbatch live set shrinks linearly). NOTE §Perf:
+    # scaling this by active params was tried and REFUTED — MoE train
+    # collectives are dispatch-dominated, and fewer microbatches only
+    # inflated activation memory (llama4: 21 -> 48 GB) for ~0% collective
+    # gain, so the heuristic stays on total params (activation safety).
+    n_params = meta["params"]
+    if n_params > 3e10:
+        num_micro = 8
+    elif n_params > 5e9:
+        num_micro = 4
+    else:
+        num_micro = 1
+    meta["num_microbatches"] = num_micro
+
+    def forward_fn(params, batch, ctx):
+        import dataclasses as _dc
+
+        from repro.core.gaussian import is_gaussian
+
+        # Mixed precision: bf16 activations/weight-casts, fp32 master
+        # weights + loss (logits upcast inside elbo_loss).
+        ctx = _dc.replace(ctx, compute_dtype=jnp.bfloat16)
+        logits, aux, _ = lm.forward(params, cfg, batch, ctx, remat=True)
+        if is_gaussian(logits):
+            logits = logits.mean
+        return logits.astype(jnp.float32), aux
+
+    num_data = shape.global_batch * shape.seq_len * 1000  # nominal corpus
+    step_fn = make_svi_train_step(
+        forward_fn, optimizer, num_data=num_data,
+        kl_schedule=KLSchedule(alpha_max=0.25, anneal_steps=1000),
+        num_microbatches=num_micro)
+
+    if mode != Mode.SVI:
+        def forward_det(params, batch, ctx):
+            return forward_fn(params, batch,
+                              Context(mode=mode, key=ctx.key))
+        step_fn = make_svi_train_step(
+            forward_det, optimizer, num_data=num_data,
+            num_microbatches=num_micro)
+
+    param_specs = variational_param_specs(cfg)
+    opt_specs = jax.eval_shape(optimizer.init, param_specs)
+    state_specs = TrainState(
+        params=param_specs, opt_state=opt_specs,
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+    batch_specs = input_specs(cfg, shape, compute_dtype=jnp.float32)
+    key_spec = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+    p_sh = shlib.params_shardings(param_specs, mesh)
+    opt_sh = type(opt_specs)(
+        step=shlib.replicated(mesh),
+        m=shlib.params_shardings(param_specs, mesh),
+        v=shlib.params_shardings(param_specs, mesh))
+    state_sh = TrainState(params=p_sh, opt_state=opt_sh,
+                          step=shlib.replicated(mesh))
+    in_sh = (state_sh, shlib.batch_shardings(batch_specs, mesh),
+             shlib.replicated(mesh))
+
+    return Program(
+        name=f"{cfg.name}:{meta['shape']}:train[{mode.value}]",
+        fn=step_fn,
+        arg_specs=(state_specs, batch_specs, key_spec),
+        in_shardings=in_sh,
+        donate_argnums=(0,),
+        meta=meta,
+    )
+
+
+def _prefill_program(cfg, shape, mesh, meta, mode_override,
+                     formulation="srm", serve_tp=True) -> Program:
+    mode = Mode.parse(mode_override) if mode_override else Mode.PFP
+    fn = make_prefill_step(cfg, max_len=shape.seq_len, mode=mode,
+                           formulation=formulation)
+    param_specs = (pfp_param_specs(cfg) if mode == Mode.PFP
+                   else _sds(variational_param_specs(cfg), jnp.bfloat16))
+    batch_specs = input_specs(cfg, shape)
+    in_sh = (shlib.params_shardings(param_specs, mesh, serve=serve_tp),
+             shlib.batch_shardings(batch_specs, mesh))
+    return Program(
+        name=f"{cfg.name}:{meta['shape']}:prefill[{mode.value}]",
+        fn=fn,
+        arg_specs=(param_specs, batch_specs),
+        in_shardings=in_sh,
+        donate_argnums=(),
+        meta=meta,
+    )
+
+
+def _decode_program(cfg, shape, mesh, meta, mode_override,
+                    formulation="srm", serve_tp=True) -> Program:
+    mode = Mode.parse(mode_override) if mode_override else Mode.PFP
+    fn = make_serve_step(cfg, mode=mode, formulation=formulation)
+    param_specs = (pfp_param_specs(cfg) if mode == Mode.PFP
+                   else _sds(variational_param_specs(cfg), jnp.bfloat16))
+    batch_specs = input_specs(cfg, shape)
+    state_specs = decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+    in_sh = (shlib.params_shardings(param_specs, mesh, serve=serve_tp),
+             shlib.batch_shardings(batch_specs, mesh),
+             shlib.state_shardings(state_specs, mesh))
+    return Program(
+        name=f"{cfg.name}:{meta['shape']}:decode[{mode.value}]",
+        fn=fn,
+        arg_specs=(param_specs, batch_specs, state_specs),
+        in_shardings=in_sh,
+        donate_argnums=(2,),
+        meta=meta,
+    )
+
+
+def cell_is_applicable(arch: str, shape_name: str) -> tuple[bool, str]:
+    """long_500k only runs on sub-quadratic archs (DESIGN.md §6)."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 524k-token decode requires "
+                       "sub-quadratic attention (skip noted in DESIGN.md)")
+    return True, ""

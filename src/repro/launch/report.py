@@ -1,0 +1,98 @@
+"""Aggregate dry-run JSONs into the §Dry-run and §Roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "results", "dryrun")
+
+
+def load(mesh: str = "pod", tag: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") != mesh or (r.get("tag") or "") != tag:
+            continue
+        if r.get("mode_override"):
+            continue
+        rows.append(r)
+    return rows
+
+
+def roofline_table(mesh: str = "pod", tag: str = "") -> str:
+    rows = load(mesh, tag)
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO flops | HBM/dev (TPU est) | fits |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                f"(full attention) | — | — | — |")
+            continue
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['bottleneck']} | "
+            f"{ratio:.2f} | "
+            f"{r.get('tpu_hbm_estimate', 0) / 1e9:.1f} GB | "
+            f"{'yes' if r.get('fits_16gb_hbm') else 'NO'} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh: str = "pod") -> str:
+    rows = load(mesh)
+    hdr = ("| arch | shape | program | lower s | compile s | flops/dev | "
+           "bytes/dev | coll link B/dev | AG/AR/RS/A2A/CP (operand B) |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | skipped | — | — |"
+                         f" — | — | — | — |")
+            continue
+        cb = r.get("collective_bytes", {})
+
+        def op(kind):
+            v = cb.get(kind, {})
+            return f"{v.get('operand', 0):.2g}" if isinstance(v, dict) else "0"
+
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['program'].split(':')[-1]} | "
+            f"{r['lower_s']} | {r['compile_s']} | "
+            f"{r['flops_per_device']:.3g} | {r['bytes_per_device']:.3g} | "
+            f"{r['collective_bytes_link']:.3g} | "
+            f"{op('all-gather')}/{op('all-reduce')}/{op('reduce-scatter')}/"
+            f"{op('all-to-all')}/{op('collective-permute')} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(mesh: str = "pod"):
+    """Worst roofline fraction, most collective-bound, most PFP-central."""
+    rows = [r for r in load(mesh) if r["status"] == "ok"]
+    worst = min(rows, key=lambda r: r.get("roofline_fraction", 1.0))
+    coll = max(rows, key=lambda r: (r["collective_s"] /
+                                    max(r["step_time_lower_bound_s"], 1e-12)))
+    return worst, coll
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "pod"
+    if which == "roofline":
+        print(roofline_table(mesh))
+    elif which == "dryrun":
+        print(dryrun_table(mesh))
+    else:
+        w, c = pick_hillclimb_cells(mesh)
+        print("worst roofline fraction:", w["arch"], w["shape"],
+              f"{w.get('roofline_fraction'):.3f}")
+        print("most collective-bound:", c["arch"], c["shape"],
+              f"coll={c['collective_s']:.3g}s vs compute={c['compute_s']:.3g}s")

@@ -1,0 +1,109 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+    compute    = HLO_FLOPs / (chips * 197e12)         [bf16 MXU peak, v5e]
+    memory     = HLO_bytes / (chips * 819e9)          [HBM bandwidth]
+    collective = collective_bytes / (chips * links * 50e9)   [ICI]
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(). Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text and sum operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction. Cost/collective numbers from the CPU-lowered
+SPMD module are per-device programs — the parser reports per-device bytes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (we count 1 effective link —
+                             # conservative; axis-specific links noted in
+                             # EXPERIMENTS.md)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = (f32[16,128]{1,0}, f32[8]{0}) all-gather(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind (per-device program).
+
+    '-done' ops are skipped so async start/done pairs count once.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        for kind in _COLLECTIVES:
+            idx = rhs.find(kind + "(")
+            if idx < 0:
+                idx2 = rhs.find(kind + "-start(")
+                if idx2 < 0:
+                    continue
+                idx = idx2
+            # shape expression sits between '=' and the op name
+            out[kind] += _shape_bytes(rhs[:idx])
+            break
+    return out
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float, *, links: int = 1) -> dict:
+    compute = flops_per_device / PEAK_FLOPS
+    memory = bytes_per_device / HBM_BW
+    collective = coll_bytes_per_device / (ICI_BW * links)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(compute, memory, collective)
+    terms["step_time_lower_bound_s"] = total
+    terms["roofline_fraction"] = compute / total if total > 0 else 0.0
+    return terms
+
+
+def model_flops(meta: dict, shape_kind: str, seq_len: int, global_batch: int,
+                new_tokens: int = 1) -> float:
+    """MODEL_FLOPS = 6 N D (train) or 2 N D (inference), N = active params."""
+    n = meta["active_params"]
+    if shape_kind == "train":
+        d = seq_len * global_batch
+        return 6.0 * n * d
+    if shape_kind == "prefill":
+        d = seq_len * global_batch
+        return 2.0 * n * d
+    d = new_tokens * global_batch
+    return 2.0 * n * d

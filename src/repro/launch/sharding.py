@@ -1,0 +1,187 @@
+"""Sharding rules: FSDP x TP x EP x SP PartitionSpecs for every program.
+
+Rules are role-based (matched on parameter-tree paths) with divisibility
+guards: an axis is only sharded when its size divides the mesh-axis size —
+otherwise that dimension stays replicated and GSPMD inserts the collectives
+it needs. This keeps every (arch x shape x mesh) cell *lowerable*; the perf
+pass then tightens the interesting cells.
+
+Parameters are sharded over ('data' [FSDP], 'model' [TP/EP]) but never over
+'pod' (cross-pod links are slow DCN; parameters are replicated across pods
+and gradients reduced hierarchically). Batch dims shard over pod+data.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes, fsdp_axis
+
+
+def _shard_if(dim: int, mesh, axis: Optional[str]):
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        total = 1
+        for a in axis:
+            total *= axis_size(mesh, a)
+        return axis if dim % total == 0 else None
+    return axis if dim % axis_size(mesh, axis) == 0 else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# (regex on path, spec-builder(shape, mesh) -> PartitionSpec (without any
+# leading scan axis)). First match wins. `d`=fsdp axis, `m`='model'.
+def _param_rules():
+    return [
+        # embedding: vocab dim only — GSPMD's masked-gather + all-reduce is
+        # the one well-supported partitioned-gather pattern; feature-sharded
+        # tables trip an hlo-verifier bug inside grad-accum scans.
+        (r"embed/table", lambda s, M, d, m: P(_shard_if(s[0], M, m), None)),
+        (r"lm_head/w", lambda s, M, d, m: P(_shard_if(s[0], M, d),
+                                            _shard_if(s[1], M, m))),
+        # attention projections: TP on the head axis side
+        (r"attn/w[qkv]/w", lambda s, M, d, m: P(_shard_if(s[0], M, d),
+                                                _shard_if(s[1], M, m))),
+        (r"attn/wo/w", lambda s, M, d, m: P(_shard_if(s[0], M, m),
+                                            _shard_if(s[1], M, d))),
+        # dense MLP: TP on d_ff
+        (r"(mlp|shared)/w_(up|gate)/w", lambda s, M, d, m: P(
+            _shard_if(s[0], M, d), _shard_if(s[1], M, m))),
+        (r"(mlp|shared)/w_down/w", lambda s, M, d, m: P(
+            _shard_if(s[0], M, m), _shard_if(s[1], M, d))),
+        # MoE experts: EP on the expert axis, FSDP inside
+        (r"experts/w_(up|gate)", lambda s, M, d, m: P(
+            _shard_if(s[0], M, m), _shard_if(s[1], M, d), None)),
+        (r"experts/w_down", lambda s, M, d, m: P(
+            _shard_if(s[0], M, m), None, _shard_if(s[2], M, d))),
+        (r"moe/router/w", lambda s, M, d, m: P(None, None)),
+        # RG-LRU block
+        (r"rec/w_[xy]/w", lambda s, M, d, m: P(_shard_if(s[0], M, d),
+                                               _shard_if(s[1], M, m))),
+        (r"rec/w_out/w", lambda s, M, d, m: P(_shard_if(s[0], M, m),
+                                              _shard_if(s[1], M, d))),
+        (r"rec/w_[ri]/w", lambda s, M, d, m: P(None, _shard_if(s[1], M, m))),
+        (r"rec/conv_w", lambda s, M, d, m: P(None, _shard_if(s[1], M, m))),
+        (r"rec/lam", lambda s, M, d, m: P(_shard_if(s[0], M, m))),
+        # Mamba2
+        (r"ssm/in_proj/w", lambda s, M, d, m: P(_shard_if(s[0], M, d), None)),
+        (r"ssm/out_proj/w", lambda s, M, d, m: P(None, _shard_if(s[1], M, d))),
+        (r"ssm/conv_w", lambda s, M, d, m: P(None, None)),
+    ]
+
+
+def param_pspec(path_str: str, shape, mesh, *, serve: bool = False) -> P:
+    """serve=True drops the FSDP ('data') factor: inference weights are
+    small (bf16, no optimizer state) and in-dim sharding would turn every
+    matmul into a partial-sum all-reduce of pod-scale activations. TP-only
+    weights keep collectives to the TP boundary."""
+    d, m = (None if serve else fsdp_axis(mesh)), "model"
+    # Strip the Bayesian leaf suffix (mu/rho/srm/var share the weight spec)
+    # and bias leaves are small -> replicated.
+    core = re.sub(r"/(mu|rho|srm|var)$", "", path_str)
+    if core.endswith("/b"):
+        return P()
+    scanned = core.startswith("stack/")
+    rank_offset = 1 if scanned else 0
+    eff_shape = shape[rank_offset:]
+    for pat, rule in _param_rules():
+        if re.search(pat, core):
+            spec = rule(eff_shape, mesh, d, m)
+            if scanned:
+                spec = P(None, *spec)
+            return spec
+    return P()  # norms, scalars, biases -> replicated
+
+
+def params_shardings(param_shapes, mesh, *, serve: bool = False):
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStructs."""
+
+    def mk(path, leaf):
+        spec = param_pspec(_path_str(path), leaf.shape, mesh, serve=serve)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(mk, param_shapes)
+
+
+# -- batch / state shardings --------------------------------------------------
+def batch_pspec(name: str, shape, mesh) -> P:
+    dp = dp_axes(mesh)
+    b = shape[0] if shape else 1
+    bspec = _shard_if(b, mesh, dp)
+    if bspec is None and len(dp) > 1:
+        bspec = _shard_if(b, mesh, (dp[-1],))
+    rest = [None] * (len(shape) - 1)
+    if name in ("frame_embeddings", "image_embeddings") and len(shape) == 3:
+        rest[-1] = _shard_if(shape[-1], mesh, "model")
+    return P(bspec, *rest)
+
+
+def batch_shardings(batch_shapes, mesh):
+    def mk(path, leaf):
+        name = _path_str(path)
+        return NamedSharding(mesh, batch_pspec(name.split("/")[-1],
+                                               leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(mk, batch_shapes)
+
+
+def state_pspec(path_str: str, shape, mesh) -> P:
+    """Decode-state shardings (KV caches, recurrent/SSM states).
+
+    KVCache leaves: (B, Hkv, S, D) [+ leading group axis when scanned].
+    Sequence dim shards over 'model' (SP — flash-decoding style) whenever
+    the head dim can't fill the TP axis; batch over pod+data.
+    """
+    dp = dp_axes(mesh)
+    scanned = path_str.startswith("stack/")
+    off = 1 if scanned else 0
+    eff = shape[off:]
+    spec: list = [None] * len(eff)
+    if len(eff) == 4 and ("k_mu" in path_str or "v_mu" in path_str
+                          or "v_var" in path_str):
+        b, h, s, d = eff
+        spec[0] = _shard_if(b, mesh, dp) or _shard_if(b, mesh, (dp[-1],))
+        if _shard_if(h, mesh, "model"):
+            spec[1] = "model"
+        else:
+            spec[2] = _shard_if(s, mesh, "model")
+    elif len(eff) == 4:  # SSM state (B, H, P, N)
+        b, h, p_, n = eff
+        spec[0] = _shard_if(b, mesh, dp) or _shard_if(b, mesh, (dp[-1],))
+        spec[1] = _shard_if(h, mesh, "model")
+    elif len(eff) >= 1:
+        spec[0] = _shard_if(eff[0], mesh, dp) or _shard_if(eff[0], mesh,
+                                                           (dp[-1],))
+    if scanned:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def state_shardings(state_shapes, mesh):
+    def mk(path, leaf):
+        return NamedSharding(mesh, state_pspec(_path_str(path), leaf.shape,
+                                               mesh))
+
+    return jax.tree_util.tree_map_with_path(mk, state_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,364 @@
+"""Decoder-LM assembly for every assigned architecture family.
+
+One definition covers: dense transformers (granite/yi/gemma/internlm2),
+MoE (deepseek-moe, llama4-scout), VLM backbones (llama-3.2-vision),
+hybrids (recurrentgemma), audio decoders (musicgen) and SSMs (mamba2).
+
+Layers are stacked into *super-block groups* (cfg.pattern) and scanned with
+``jax.lax.scan`` so a 100-layer model lowers to O(1)-size HLO — the
+multi-pod dry-run depends on this. Layers that do not tile evenly form an
+unscanned tail.
+
+The same definition serves three programs:
+  forward()      train/eval full-sequence pass (optionally remat'd)
+  prefill()      full-sequence pass that also fills decode state
+  decode_step()  single-token step against stacked per-layer state
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gaussian import GaussianTensor, VAR, is_gaussian
+from repro.core.modes import Mode
+from repro.nn.attention import (KVCache, attention_apply, attention_init,
+                                init_kv_cache)
+from repro.nn.layers import (NORMS, dense_apply, dense_init, embedding_apply,
+                             embedding_init, residual_add,
+                             sinusoidal_embedding)
+from repro.nn.mlp import mlp_apply, mlp_init
+from repro.nn.moe import moe_apply, moe_init
+from repro.nn.pjit_hints import constrain
+from repro.nn.module import Context
+from repro.nn.recurrent import (RecurrentState, init_recurrent_state,
+                                rglru_block_apply, rglru_init)
+from repro.nn.ssm import SSMState, init_ssm_state, mamba2_apply, mamba2_init
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply
+# ---------------------------------------------------------------------------
+def _block_init(kind: str, cfg: ModelConfig, key):
+    norm_init_fn = NORMS[cfg.norm][0]
+    ks = jax.random.split(key, 3)
+    si = cfg.sigma_init
+    if kind in ("attn", "cross"):
+        return {
+            "ln1": norm_init_fn(cfg.d_model),
+            "attn": attention_init(ks[0], cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim,
+                                   sigma_init=si),
+            "ln2": norm_init_fn(cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                            gated=cfg.gated_mlp, sigma_init=si),
+        }
+    if kind == "moe":
+        return {
+            "ln1": norm_init_fn(cfg.d_model),
+            "attn": attention_init(ks[0], cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim,
+                                   sigma_init=si),
+            "ln2": norm_init_fn(cfg.d_model),
+            "moe": moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                            num_shared=cfg.num_shared_experts,
+                            gated=cfg.gated_mlp, sigma_init=si),
+        }
+    if kind == "rec":
+        return {
+            "ln1": norm_init_fn(cfg.d_model),
+            "rec": rglru_init(ks[0], cfg.d_model, cfg.d_rnn or cfg.d_model,
+                              sigma_init=si),
+            "ln2": norm_init_fn(cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                            gated=cfg.gated_mlp, sigma_init=si),
+        }
+    if kind == "ssm":
+        return {
+            "ln1": norm_init_fn(cfg.d_model),
+            "ssm": mamba2_init(ks[0], cfg.d_model, d_state=cfg.ssm_state,
+                               expand=cfg.ssm_expand,
+                               head_dim=cfg.ssm_head_dim, sigma_init=si),
+        }
+    raise ValueError(kind)
+
+
+def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
+                 positions, image_emb=None, state=None, cache_len=None):
+    """Returns (x, new_state, aux_loss)."""
+    norm_apply = NORMS[cfg.norm][1]
+    aux = jnp.zeros((), jnp.float32)
+    new_state = None
+
+    if kind in ("attn", "cross", "moe"):
+        h = norm_apply(params["ln1"], x, ctx)
+        attn_out, new_state = attention_apply(
+            params["attn"], h, ctx,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions,
+            causal=(kind != "cross"),
+            window=cfg.window or None if kind == "attn" else None,
+            rope_theta=cfg.rope_theta if (cfg.positional == "rope"
+                                          and kind != "cross") else None,
+            cross_kv=image_emb if kind == "cross" else None,
+            cache=state if kind != "cross" else None,
+            cache_len=cache_len,
+        )
+        x = residual_add(x, attn_out)
+        h = norm_apply(params["ln2"], x, ctx)
+        if kind == "moe":
+            ffn_out, aux = moe_apply(
+                params["moe"], h, ctx, num_experts=cfg.num_experts,
+                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                activation=cfg.activation)
+        else:
+            ffn_out = mlp_apply(params["mlp"], h, ctx, activation=cfg.activation)
+        x = residual_add(x, ffn_out)
+        return x, new_state, aux
+
+    if kind == "rec":
+        h = norm_apply(params["ln1"], x, ctx)
+        rec_out, new_state = rglru_block_apply(params["rec"], h, ctx, state=state)
+        x = residual_add(x, rec_out)
+        h = norm_apply(params["ln2"], x, ctx)
+        ffn_out = mlp_apply(params["mlp"], h, ctx, activation=cfg.activation)
+        x = residual_add(x, ffn_out)
+        return x, new_state, aux
+
+    if kind == "ssm":
+        h = norm_apply(params["ln1"], x, ctx)
+        ssm_out, new_state = mamba2_apply(
+            params["ssm"], h, ctx, d_state=cfg.ssm_state,
+            expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+            chunk=min(cfg.ssm_chunk, x.shape[1]), state=state)
+        x = residual_add(x, ssm_out)
+        return x, new_state, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def _group_counts(cfg: ModelConfig):
+    lpg = len(cfg.pattern)
+    num_scanned = ((cfg.num_layers - cfg.first_dense_layers) // lpg)
+    tail = cfg.num_layers - cfg.first_dense_layers - num_scanned * lpg
+    return lpg, num_scanned, tail
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    if cfg.embed_inputs:
+        params["embed"] = embedding_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                         sigma_init=cfg.sigma_init)
+    # Leading unscanned layers (e.g. DeepSeekMoE's first dense-FFN layer).
+    head_cfg = cfg
+    for i in range(cfg.first_dense_layers):
+        params[f"head{i}"] = _block_init("attn", cfg, jax.random.fold_in(ks[1], i))
+
+    lpg, num_groups, tail = _group_counts(cfg)
+
+    def one_group(k):
+        kk = jax.random.split(k, lpg)
+        return {f"b{i}": _block_init(cfg.pattern[i], cfg, kk[i])
+                for i in range(lpg)}
+
+    if num_groups:
+        params["stack"] = jax.vmap(one_group)(jax.random.split(ks[2], num_groups))
+    for i in range(tail):
+        kind = cfg.pattern[i % lpg]
+        params[f"tail{i}"] = _block_init(kind, cfg, jax.random.fold_in(ks[3], i))
+
+    params["ln_f"] = NORMS[cfg.norm][0](cfg.d_model)
+    params["lm_head"] = dense_init(ks[4], cfg.d_model, cfg.vocab_size,
+                                   sigma_init=cfg.sigma_init)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / eval / prefill)
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ModelConfig, inputs, ctx: Context):
+    """Token embedding or stub-frontend embeddings (audio/vlm)."""
+    if cfg.embed_inputs:
+        x = embedding_apply(params["embed"], inputs["tokens"], ctx)
+        t = inputs["tokens"].shape[1]
+        b = inputs["tokens"].shape[0]
+    else:
+        x = inputs["frame_embeddings"]
+        b, t = x.shape[0], x.shape[1]
+        if ctx.mode == Mode.PFP:
+            x = GaussianTensor.deterministic(x)
+    if ctx.compute_dtype is not None:
+        x = x.astype(ctx.compute_dtype)
+    if cfg.positional == "sinusoidal":
+        pos_emb = sinusoidal_embedding(jnp.arange(t), cfg.d_model).astype(
+            x.dtype)
+        x = residual_add(x, jnp.broadcast_to(pos_emb, (b, t, cfg.d_model))) \
+            if is_gaussian(x) else x + pos_emb
+    positions = inputs.get(
+        "positions", jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t)))
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
+            remat: bool = False, states=None, collect_states: bool = False):
+    """Full-sequence pass.
+
+    states/collect_states support the prefill program: pass initialized
+    per-layer states and get back the filled ones alongside the output.
+    Returns (logits, aux_loss, new_states).
+    """
+    x, positions = _embed_inputs(params, cfg, inputs, ctx)
+    x = constrain(x, "batch", "seq", "embed")
+    image_emb = inputs.get("image_embeddings")
+    if image_emb is not None and ctx.mode == Mode.PFP:
+        image_emb = GaussianTensor.deterministic(image_emb)
+
+    lpg, num_groups, tail = _group_counts(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i in range(cfg.first_dense_layers):
+        st = None if states is None else states.get(f"head{i}")
+        x, new_st, aux = _block_apply("attn", params[f"head{i}"], x,
+                                      ctx.with_layer(1000 + i), cfg,
+                                      positions=positions, state=st)
+        aux_total = aux_total + aux
+        if collect_states and states is not None:
+            states[f"head{i}"] = new_st
+
+    new_stack_states = None
+    if num_groups:
+        def body(carry, xs):
+            x, aux_acc = carry
+            in_dtype = x.dtype
+            x = constrain(x, "batch", "seq", "embed")
+            if states is None:
+                gp, gi = xs
+                gst = {}
+            else:
+                gp, gst, gi = xs
+            lctx = ctx.with_layer(gi)
+            new_sts = {}
+            for i in range(lpg):
+                kind = cfg.pattern[i]
+                st = gst.get(f"b{i}") if states is not None else None
+
+                def run_block(x_, gp_i, st_, _kind=kind):
+                    return _block_apply(
+                        _kind, gp_i, x_, lctx, cfg,
+                        positions=positions, image_emb=image_emb, state=st_)
+
+                # Nested remat: per-layer checkpoints inside the remat'd
+                # group bound the backward live-set to ONE layer.
+                if remat:
+                    run_block = jax.checkpoint(run_block)
+                x, nst, aux = run_block(x, gp[f"b{i}"], st)
+                aux_acc = aux_acc + aux
+                if st is not None:
+                    new_sts[f"b{i}"] = nst
+            x = x.astype(in_dtype)  # carry dtype stability across scan steps
+            return (x, aux_acc), (new_sts if new_sts else None)
+
+        body_fn = jax.checkpoint(body) if remat else body
+        gidx = jnp.arange(num_groups)
+        if states is None:
+            xs = (params["stack"], gidx)
+        else:
+            xs = (params["stack"], states["stack"], gidx)
+        (x, aux_total), scanned_states = jax.lax.scan(
+            body_fn, (x, aux_total), xs)
+        new_stack_states = scanned_states
+
+    for i in range(tail):
+        kind = cfg.pattern[i % lpg]
+        st = None if states is None else states.get(f"tail{i}")
+        x, new_st, aux = _block_apply(kind, params[f"tail{i}"], x,
+                                      ctx.with_layer(2000 + i), cfg,
+                                      positions=positions,
+                                      image_emb=image_emb, state=st)
+        aux_total = aux_total + aux
+        if collect_states and states is not None:
+            states[f"tail{i}"] = new_st
+
+    x = NORMS[cfg.norm][1](params["ln_f"], x, ctx)
+    x = constrain(x, "batch", "seq", "embed")
+    logits = dense_apply(params["lm_head"], x, ctx)
+    logits = constrain(logits, "batch", "seq", "vocab")
+
+    out_states = None
+    if collect_states and states is not None:
+        out_states = dict(states)
+        if new_stack_states is not None:
+            out_states["stack"] = new_stack_states
+    return logits, aux_total, out_states
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+def _state_for_kind(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    if kind in ("attn", "moe"):
+        return init_kv_cache(batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    if kind == "cross":
+        return None  # cross K/V recomputed from image embeddings each step
+    if kind == "rec":
+        return init_recurrent_state(batch, cfg.d_rnn or cfg.d_model)
+    if kind == "ssm":
+        return init_ssm_state(batch, cfg.d_model, d_state=cfg.ssm_state,
+                              expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    lpg, num_groups, tail = _group_counts(cfg)
+    states: dict[str, Any] = {}
+    for i in range(cfg.first_dense_layers):
+        states[f"head{i}"] = _state_for_kind("attn", cfg, batch, max_len)
+
+    if num_groups:
+        def one(_):
+            return {f"b{i}": _state_for_kind(cfg.pattern[i], cfg, batch, max_len)
+                    for i in range(lpg)
+                    if _state_for_kind(cfg.pattern[i], cfg, batch, max_len)
+                    is not None}
+        # Stack by broadcasting (all groups identical zero states).
+        proto = one(None)
+        states["stack"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (num_groups,) + a.shape), proto)
+    for i in range(tail):
+        st = _state_for_kind(cfg.pattern[i % lpg], cfg, batch, max_len)
+        if st is not None:
+            states[f"tail{i}"] = st
+    return states
+
+
+def decode_step(params, cfg: ModelConfig, inputs, states, ctx: Context):
+    """One-token decode. inputs: {'tokens': (B,1)} or {'frame_embeddings':
+    (B,1,D)}, plus 'positions': (B,1) absolute position, optional
+    'cache_len': (B,) valid cache entries, optional 'image_embeddings'.
+    Returns (logits, new_states).
+    """
+    logits, _, new_states = forward(
+        params, cfg, inputs, ctx, states=dict(states), collect_states=True)
+    return logits, new_states
+
+
+def prefill(params, cfg: ModelConfig, inputs, ctx: Context, max_len: int):
+    """Full-sequence pass that fills decode state (returns last logits)."""
+    batch = (inputs["tokens"].shape[0] if cfg.embed_inputs
+             else inputs["frame_embeddings"].shape[0])
+    states = init_decode_state(cfg, batch, max_len)
+    logits, _, new_states = forward(params, cfg, inputs, ctx,
+                                    states=states, collect_states=True)
+    if is_gaussian(logits):
+        last = GaussianTensor(logits.mean[:, -1:], logits.second[:, -1:],
+                              logits.rep)
+    else:
+        last = logits[:, -1:]
+    return last, new_states

@@ -1,0 +1,106 @@
+"""The paper's evaluation architectures: MLP (784-100-100-10) and LeNet-5.
+
+These are the models behind every paper table/figure (Tables 1-5, Figs 5-7)
+and the CPU wall-clock benchmark targets. They run in all three execution
+modes over one Bayesian parameter pytree, exactly like the LM zoo.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussian import GaussianTensor, VAR, is_gaussian
+from repro.core.pfp_layers import (pfp_activation, pfp_conv2d_im2col,
+                                   pfp_maxpool2d)
+from repro.nn.layers import activation_apply, dense_apply, dense_init
+from repro.nn.module import Context, init_bayes, resolve_weight
+
+
+def mlp_init(key, *, d_in: int = 784, d_hidden: int = 100, d_out: int = 10,
+             num_hidden: int = 2, sigma_init: float = 1e-4):
+    ks = jax.random.split(key, num_hidden + 1)
+    params = {}
+    dims = [d_in] + [d_hidden] * num_hidden + [d_out]
+    for i in range(num_hidden + 1):
+        params[f"dense{i}"] = dense_init(ks[i], dims[i], dims[i + 1],
+                                         sigma_init=sigma_init, bias=True)
+    return params
+
+
+def mlp_forward(params, x, ctx: Context):
+    """x: (B, d_in) deterministic input. Returns logits (array or Gaussian)."""
+    n = sum(1 for k in params if k.startswith("dense")) - 1
+    h = x  # deterministic input -> first PFP layer uses Eq. 13
+    for i in range(n):
+        h = dense_apply(params[f"dense{i}"], h, ctx)
+        h = (pfp_activation(h, "relu") if is_gaussian(h)
+             else activation_apply(h, "relu", ctx))
+    return dense_apply(params[f"dense{n}"], h, ctx)
+
+
+def conv_init(key, kh, kw, cin, cout, *, sigma_init=1e-4):
+    return {
+        "w": init_bayes(key, (kh, kw, cin, cout), fan_in=kh * kw * cin,
+                        sigma_init=sigma_init),
+        "b": {"mu": jnp.zeros((cout,)),
+              "rho": jnp.full((cout,), jnp.log(sigma_init))},
+    }
+
+
+def conv_apply(params, x, ctx: Context, *, padding: str = "SAME"):
+    w = resolve_weight(params["w"], ctx)
+    b = resolve_weight(params["b"], ctx)
+    if isinstance(w, GaussianTensor):
+        out = pfp_conv2d_im2col(x, w, padding=padding,
+                                formulation=ctx.formulation)
+        return GaussianTensor(out.mean + b.mean, out.var + b.var, VAR)
+    xm = x.mean if is_gaussian(x) else x
+    y = jax.lax.conv_general_dilated(
+        xm, w, (1, 1), padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def lenet5_init(key, *, num_classes: int = 10, in_channels: int = 1,
+                sigma_init: float = 1e-4):
+    ks = jax.random.split(key, 5)
+    return {
+        "conv0": conv_init(ks[0], 5, 5, in_channels, 6, sigma_init=sigma_init),
+        "conv1": conv_init(ks[1], 5, 5, 6, 16, sigma_init=sigma_init),
+        "dense0": dense_init(ks[2], 16 * 7 * 7, 120, sigma_init=sigma_init,
+                             bias=True),
+        "dense1": dense_init(ks[3], 120, 84, sigma_init=sigma_init, bias=True),
+        "dense2": dense_init(ks[4], 84, num_classes, sigma_init=sigma_init,
+                             bias=True),
+    }
+
+
+def _maxpool(x, ctx: Context):
+    if is_gaussian(x):
+        return pfp_maxpool2d(x.to_var())
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _act(x, ctx: Context, kind="relu"):
+    if is_gaussian(x):
+        return pfp_activation(x, kind)
+    return activation_apply(x, kind, ctx)
+
+
+def lenet5_forward(params, x, ctx: Context):
+    """x: (B, 28, 28, 1) deterministic images."""
+    h = conv_apply(params["conv0"], x, ctx)            # (B, 28, 28, 6)
+    h = _act(h, ctx)
+    h = _maxpool(h.to_var() if is_gaussian(h) else h, ctx)   # (B, 14, 14, 6)
+    h = conv_apply(params["conv1"], h, ctx)            # (B, 14, 14, 16)
+    h = _act(h, ctx)
+    h = _maxpool(h.to_var() if is_gaussian(h) else h, ctx)   # (B, 7, 7, 16)
+    if is_gaussian(h):
+        h = h.reshape(h.shape[0], -1)
+    else:
+        h = h.reshape(h.shape[0], -1)
+    h = dense_apply(params["dense0"], h.to_srm() if is_gaussian(h) else h, ctx)
+    h = _act(h, ctx)
+    h = dense_apply(params["dense1"], h, ctx)
+    h = _act(h, ctx)
+    return dense_apply(params["dense2"], h, ctx)

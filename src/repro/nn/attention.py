@@ -1,0 +1,267 @@
+"""Multi-head attention: GQA/MQA, local windows, cross-attention, KV cache.
+
+Execution modes:
+  DETERMINISTIC / SVI : standard softmax attention on (sampled) weights.
+  PFP                 : mean-field attention (DESIGN.md §4) — probabilities
+      from score means (optionally probit-corrected), mean out = A @ mu_v,
+      var out = A^2 @ var_v. The KV cache stores (mu_k, mu_v, var_v) so
+      value uncertainty survives across decode steps.
+
+Grouped-query attention keeps K/V at ``num_kv_heads`` and groups queries;
+all einsums are grouped (no materialized KV repetition).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pfp_math
+from repro.core.gaussian import GaussianTensor, VAR, is_gaussian
+from repro.nn.layers import dense_apply, dense_init, rope_angles, rope_apply
+from repro.nn.module import Context
+
+_NEG = -1e30
+
+
+class KVCache(NamedTuple):
+    k_mu: jax.Array   # (B, Hkv, S, Dh)
+    v_mu: jax.Array   # (B, Hkv, S, Dh)
+    v_var: jax.Array  # (B, Hkv, S, Dh) — zeros outside PFP mode
+
+
+def attention_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, *, sigma_init=1e-4, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, num_heads * head_dim,
+                         sigma_init=sigma_init, dtype=dtype),
+        "wk": dense_init(ks[1], d_model, num_kv_heads * head_dim,
+                         sigma_init=sigma_init, dtype=dtype),
+        "wv": dense_init(ks[2], d_model, num_kv_heads * head_dim,
+                         sigma_init=sigma_init, dtype=dtype),
+        "wo": dense_init(ks[3], num_heads * head_dim, d_model,
+                         sigma_init=sigma_init, dtype=dtype),
+    }
+
+
+def _split_heads(x, num_heads: int, head_dim: int):
+    if is_gaussian(x):
+        return GaussianTensor(
+            _split_heads(x.mean, num_heads, head_dim),
+            _split_heads(x.second, num_heads, head_dim),
+            x.rep,
+        )
+    b, t, _ = x.shape
+    return x.reshape(b, t, num_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    if is_gaussian(x):
+        return GaussianTensor(_merge_heads(x.mean), _merge_heads(x.second), x.rep)
+    b, h, t, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
+
+
+def _build_mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
+                k_valid: Optional[jax.Array] = None):
+    """(..., Tq, Tk) boolean mask from absolute positions."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    if causal:
+        m = jnp.logical_and(m, q >= k)
+    if window is not None:
+        m = jnp.logical_and(m, k > q - window)
+    if k_valid is not None:
+        m = jnp.logical_and(m, k_valid[..., None, :])
+    return m
+
+
+def attention_apply(
+    params,
+    x,
+    ctx: Context,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    positions: jax.Array,              # (B, Tq) absolute positions
+    causal: bool = True,
+    window: Optional[int] = None,
+    rope_theta: Optional[float] = 1e4, # None = no rotary (e.g. cross attn)
+    cross_kv=None,                     # (B, S, d_model) overrides self K/V
+    cache: Optional[KVCache] = None,   # decode: append at `positions`
+    cache_len: Optional[jax.Array] = None,  # valid entries in cache
+):
+    """Returns (output, new_cache|None). x: (B, Tq, d_model) or Gaussian."""
+    scale = head_dim ** -0.5
+    group = num_heads // num_kv_heads
+
+    q = _split_heads(dense_apply(params["wq"], x, ctx), num_heads, head_dim)
+    kv_src = cross_kv if cross_kv is not None else x
+    k = _split_heads(dense_apply(params["wk"], kv_src, ctx), num_kv_heads, head_dim)
+    v = _split_heads(dense_apply(params["wv"], kv_src, ctx), num_kv_heads, head_dim)
+
+    if rope_theta is not None:
+        cos, sin = rope_angles(positions, head_dim, rope_theta)  # (B, T, Dh/2)
+        cos, sin = cos[:, None], sin[:, None]                    # (B, 1, T, ...)
+        q = rope_apply(q, cos, sin)
+        if cross_kv is None:
+            k = rope_apply(k, cos, sin)
+
+    pfp = is_gaussian(q)
+    k_mu = k.mean if pfp else k
+    v_mu = v.mean if pfp else v
+    v_var = v.var if pfp else jnp.zeros_like(v_mu)
+
+    new_cache = None
+    if cache is not None:
+        # Insert the new K/V at `positions` (same offset per batch).
+        # Decode (Tq=1): pin the updated cache to the input-cache sharding —
+        # a single-token dynamic-update-slice otherwise makes GSPMD
+        # replicate the whole cache inside the layer scan. Prefill (full
+        # Tq): keep the natural (heads x dim)-sharded layout; forcing
+        # seq-sharding there costs a full reshard copy per layer.
+        from repro.nn.pjit_hints import constrain_kv
+
+        pin = (lambda a: constrain_kv(a)) if positions.shape[1] == 1 \
+            else (lambda a: a)
+        start = positions[0, 0]
+        idx = (0, 0, start, 0)
+        cache = KVCache(
+            pin(jax.lax.dynamic_update_slice(
+                cache.k_mu, k_mu.astype(cache.k_mu.dtype), idx)),
+            pin(jax.lax.dynamic_update_slice(
+                cache.v_mu, v_mu.astype(cache.v_mu.dtype), idx)),
+            pin(jax.lax.dynamic_update_slice(
+                cache.v_var, v_var.astype(cache.v_var.dtype), idx)),
+        )
+        new_cache = cache
+        k_mu, v_mu, v_var = cache.k_mu, cache.v_mu, cache.v_var
+        s = k_mu.shape[2]
+        k_pos = jnp.broadcast_to(jnp.arange(s), (x.shape[0] if not pfp else q.shape[0], s))
+        k_valid = k_pos < (
+            cache_len[:, None] if cache_len is not None
+            else (positions[:, -1:] + 1)
+        )
+    else:
+        s = k_mu.shape[2]
+        if cross_kv is not None:
+            k_pos = jnp.broadcast_to(jnp.arange(s), (positions.shape[0], s))
+            k_valid = None
+            causal = False
+        else:
+            k_pos = positions
+            k_valid = None
+
+    # Grouped-query core: q (B, Hkv, G, Tq, Dh) x k/v (B, Hkv, Tk, Dh).
+    def _group(arr):
+        b, h, t, d = arr.shape
+        return arr.reshape(b, num_kv_heads, group, t, d)
+
+    q_mu = _group(q.mean if pfp else q)
+    q_var = _group(q.var) if (pfp and ctx.attention_mode ==
+                              "variance_corrected") else None
+
+    out_mu, out_var = _attention_core(
+        q_mu, q_var, k_mu, v_mu, v_var if pfp else None,
+        q_pos=positions, k_pos=k_pos, k_valid=k_valid,
+        causal=causal, window=window, scale=scale,
+        chunk_size=_QUERY_CHUNK,
+    )
+    b = out_mu.shape[0]
+    out_mu = out_mu.reshape(b, num_heads, -1, head_dim)
+    if pfp:
+        out_var = out_var.reshape(b, num_heads, -1, head_dim)
+        out = GaussianTensor(out_mu, out_var, VAR)
+    else:
+        out = out_mu
+
+    out = _merge_heads(out)
+    out = dense_apply(params["wo"], out, ctx)
+    return out, new_cache
+
+
+# Query-block size for the chunked (flash-style at XLA level) path: the
+# (bq, Tk) score tile is the peak attention memory, never (Tq, Tk).
+_QUERY_CHUNK = 1024
+
+
+def _attention_core(q_mu, q_var, k_mu, v_mu, v_var, *, q_pos, k_pos,
+                    k_valid, causal, window, scale, chunk_size):
+    """Grouped masked softmax attention with joint mean/var outputs.
+
+    q_mu: (B, Hkv, G, Tq, D); k/v: (B, Hkv, Tk, D); q_pos: (B, Tq);
+    k_pos: (B, Tk); k_valid: (B, Tk) bool or None. Long queries are
+    processed in blocks of `chunk_size` via lax.scan so the materialized
+    score tile is (bq, Tk) — the XLA-graph analogue of the Pallas flash
+    kernel (kernels/pfp_attention.py), used by the pjit'd programs.
+    Returns (out_mu, out_var[PFP] | None).
+    """
+    tq = q_mu.shape[3]
+
+    def block(args):
+        qb_mu, qb_var, qb_pos = args  # (B,Hkv,G,bq,D), (B,bq)
+        scores = jnp.einsum("bhgqd,bhkd->bhgqk", qb_mu, k_mu) * scale
+        if qb_var is not None:
+            score_var = (
+                jnp.einsum("bhgqd,bhkd->bhgqk", qb_var, jnp.square(k_mu))
+            ) * (scale * scale)
+            scores = pfp_math.probit_corrected_logits(scores, score_var)
+        mask = jnp.ones(qb_pos.shape + (k_pos.shape[-1],), bool)
+        qp = qb_pos[..., :, None]
+        kp = k_pos[..., None, :]
+        if causal:
+            mask = jnp.logical_and(mask, qp >= kp)
+        if window:
+            mask = jnp.logical_and(mask, kp > qp - window)
+        if k_valid is not None:
+            mask = jnp.logical_and(mask, k_valid[..., None, :])
+        scores = jnp.where(mask[:, None, None], scores, _NEG)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_mu = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v_mu)
+        o_var = (jnp.einsum("bhgqk,bhkd->bhgqd", jnp.square(probs), v_var)
+                 if v_var is not None else None)
+        return o_mu, o_var
+
+    if tq <= chunk_size or tq % chunk_size != 0:
+        return block((q_mu, q_var, q_pos))
+
+    nb = tq // chunk_size
+
+    def to_blocks(a, axis):
+        a = a.reshape(a.shape[:axis] + (nb, chunk_size) + a.shape[axis + 1:])
+        return jnp.moveaxis(a, axis, 0)
+
+    xs = (
+        to_blocks(q_mu, 3),
+        to_blocks(q_var, 3) if q_var is not None else jnp.zeros((nb,)),
+        to_blocks(q_pos, 1),
+    )
+
+    # Remat the per-block attention: backward recomputes the (bq, Tk) score
+    # tile instead of saving probs for every block (O(Tq*Tk) -> O(bq*Tk)).
+    block_ckpt = jax.checkpoint(block)
+
+    def body(_, x):
+        qb_mu, qb_var, qb_pos = x
+        if q_var is None:
+            qb_var = None
+        return None, block_ckpt((qb_mu, qb_var, qb_pos))
+
+    _, (o_mu, o_var) = jax.lax.scan(body, None, xs)
+    # (nb, B, Hkv, G, bq, D) -> (B, Hkv, G, Tq, D)
+    o_mu = jnp.moveaxis(o_mu, 0, 3).reshape(q_mu.shape)
+    if o_var is not None:
+        o_var = jnp.moveaxis(o_var, 0, 3).reshape(q_mu.shape)
+    return o_mu, o_var
+
+
+def init_kv_cache(batch: int, num_kv_heads: int, max_len: int, head_dim: int,
+                  dtype=jnp.float32) -> KVCache:
+    shape = (batch, num_kv_heads, max_len, head_dim)
+    return KVCache(
+        jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+    )

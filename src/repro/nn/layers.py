@@ -1,0 +1,151 @@
+"""Mode-polymorphic neural layers.
+
+Each layer resolves its Bayesian parameters through the execution context:
+DETERMINISTIC/SVI paths run plain jnp ops on sampled/mean weights; the PFP
+path runs the moment-propagating primitives from `repro.core.pfp_layers`.
+A layer therefore *is* the paper's "custom operator", selected at trace
+time — one model definition, three lowered programs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussian import GaussianTensor, SRM, VAR, is_gaussian
+from repro.core import pfp_layers
+from repro.core.modes import Mode
+from repro.nn.module import Context, init_bayes, init_deterministic, resolve_weight
+
+
+# -- dense --------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, *, sigma_init=1e-4, bias=False,
+               dtype=jnp.float32):
+    keys = jax.random.split(key, 2)
+    p = {"w": init_bayes(keys[0], (d_in, d_out), fan_in=d_in,
+                         sigma_init=sigma_init, dtype=dtype)}
+    if bias:
+        p["b"] = {"mu": jnp.zeros((d_out,), dtype),
+                  "rho": jnp.full((d_out,), jnp.log(sigma_init), dtype)}
+    return p
+
+
+def dense_apply(params, x, ctx: Context):
+    w = resolve_weight(params["w"], ctx)
+    b = resolve_weight(params.get("b"), ctx) if "b" in params else None
+    if isinstance(w, GaussianTensor):  # PFP path
+        out = pfp_layers.pfp_dense(x, w.to_srm(), formulation=ctx.formulation)
+        if b is not None:
+            if isinstance(b, GaussianTensor):  # probabilistic bias (paper §5)
+                out = GaussianTensor(out.mean + b.mean, out.var + b.var, VAR)
+            else:  # deterministic bias
+                out = GaussianTensor(out.mean + b, out.var, VAR)
+        return out
+    y = (x.mean if is_gaussian(x) else x) @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+# -- embedding ------------------------------------------------------------------
+def embedding_init(key, vocab: int, d_model: int, *, sigma_init=1e-4,
+                   dtype=jnp.float32):
+    return {"table": init_bayes(key, (vocab, d_model), scale=1.0,
+                                sigma_init=sigma_init, dtype=dtype)}
+
+
+def embedding_apply(params, ids, ctx: Context):
+    t = resolve_weight(params["table"], ctx)
+    if isinstance(t, GaussianTensor):
+        return pfp_layers.pfp_embedding(t.to_var(), ids)
+    return t[ids]
+
+
+# -- norms ----------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(params, x, ctx: Context, eps: float = 1e-6):
+    g = params["g"].astype(x.dtype)  # keep bf16 activations bf16
+    if is_gaussian(x):
+        return pfp_layers.pfp_rmsnorm(x, g, eps=eps)
+    norm = jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return x * norm * g
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(params, x, ctx: Context, eps: float = 1e-6):
+    g = params["g"].astype(x.dtype)
+    b = params["b"].astype(x.dtype)
+    if is_gaussian(x):
+        return pfp_layers.pfp_layernorm(x, g, bias=b, eps=eps)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+NORMS = {
+    "rmsnorm": (rmsnorm_init, rmsnorm_apply),
+    "layernorm": (layernorm_init, layernorm_apply),
+}
+
+
+# -- activations -----------------------------------------------------------------
+def activation_apply(x, kind: str, ctx: Context):
+    if is_gaussian(x):
+        return pfp_layers.pfp_activation(x, kind)
+    return pfp_layers.DETERMINISTIC_ACTIVATIONS[kind](x)
+
+
+def glu_apply(gate, up, act_kind: str, ctx: Context):
+    """Gated linear unit: act(gate) * up — SwiGLU/GeGLU."""
+    if is_gaussian(gate):
+        g = pfp_layers.pfp_activation(gate, act_kind)       # VAR -> SRM
+        return pfp_layers.pfp_glu_product(g, up.to_srm())   # exact product
+    return pfp_layers.DETERMINISTIC_ACTIVATIONS[act_kind](gate) * up
+
+
+# -- rotary position embeddings ----------------------------------------------------
+def rope_angles(positions, head_dim: int, theta: float = 1e4):
+    """positions: (..., T) int32 -> cos/sin (..., T, head_dim/2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x, cos, sin):
+    """Rotate pairs (x1, x2). Exact for GaussianTensors: the rotation is a
+    fixed linear map, so var' = var1 cos^2 + var2 sin^2 per pair."""
+    cos = cos.astype(x.dtype)  # keep bf16 activations bf16 (angles are f32)
+    sin = sin.astype(x.dtype)
+    if is_gaussian(x):
+        m1, m2 = jnp.split(x.mean, 2, axis=-1)
+        v1, v2 = jnp.split(x.var, 2, axis=-1)
+        mean = jnp.concatenate([m1 * cos - m2 * sin, m2 * cos + m1 * sin], -1)
+        c2, s2 = jnp.square(cos), jnp.square(sin)
+        var = jnp.concatenate([v1 * c2 + v2 * s2, v2 * c2 + v1 * s2], -1)
+        return GaussianTensor(mean, var, VAR)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    half = d_model // 2
+    freq = 1e4 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- residual ---------------------------------------------------------------------
+def residual_add(x, y):
+    if is_gaussian(x) or is_gaussian(y):
+        from repro.core.gaussian import as_gaussian
+
+        return pfp_layers.pfp_residual(as_gaussian(x), as_gaussian(y))
+    return x + y

@@ -1,0 +1,32 @@
+"""Feed-forward blocks: plain MLP and gated (SwiGLU / GeGLU) variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussian import is_gaussian
+from repro.nn.layers import activation_apply, dense_apply, dense_init, glu_apply
+from repro.nn.module import Context
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool = True,
+             sigma_init=1e-4, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, d_ff, sigma_init=sigma_init, dtype=dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, sigma_init=sigma_init, dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, sigma_init=sigma_init,
+                                 dtype=dtype)
+    return p
+
+
+def mlp_apply(params, x, ctx: Context, *, activation: str = "silu"):
+    up = dense_apply(params["w_up"], x, ctx)
+    if "w_gate" in params:
+        gate = dense_apply(params["w_gate"], x, ctx)
+        h = glu_apply(gate, up, activation, ctx)
+    else:
+        h = activation_apply(up, activation, ctx)
+    return dense_apply(params["w_down"], h, ctx)

@@ -1,0 +1,140 @@
+"""Minimal functional module system (no flax dependency).
+
+Parameters are nested dicts. Leaves come in three flavors:
+
+  variational Bayesian weight : {'mu': Array, 'rho': Array}
+      sigma = exp(rho) (paper: "conversion from logarithmic to normal
+      representation"). One pytree serves all three execution modes.
+  converted PFP weight        : {'mu': Array, 'srm': Array} or
+      {'mu': Array, 'var': Array} — the deployment artifact produced by
+      bayes/convert.py with precomputed second raw moments (paper §5).
+  deterministic weight        : plain Array (norm gains, rotary tables, ...).
+
+`resolve_weight(param, ctx)` turns a leaf into what the active execution
+mode needs: an Array (DETERMINISTIC / SVI-sample) or a GaussianTensor (PFP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussian import SRM, VAR, GaussianTensor
+from repro.core.modes import Mode
+
+BAYES_KEYS_VARIATIONAL = frozenset({"mu", "rho"})
+BAYES_KEYS_SRM = frozenset({"mu", "srm"})
+BAYES_KEYS_VAR = frozenset({"mu", "var"})
+
+
+def is_bayes_param(leaf: Any) -> bool:
+    return isinstance(leaf, dict) and frozenset(leaf.keys()) in (
+        BAYES_KEYS_VARIATIONAL,
+        BAYES_KEYS_SRM,
+        BAYES_KEYS_VAR,
+    )
+
+
+@dataclasses.dataclass
+class Context:
+    """Per-forward execution context (trace-time mutable key counter)."""
+
+    mode: Mode
+    key: Optional[jax.Array] = None
+    formulation: str = "srm"          # 'srm' (Eq. 12) | 'var' (Eq. 7)
+    attention_mode: str = "mean_field"
+    impl: str = "xla"                 # 'xla' | 'kernel' — kernels/ops dispatch
+    layer_tag: Any = 0                # folded into SVI sample keys (scan idx)
+    compute_dtype: Any = None         # cast weights at use (bf16 training)
+    _counter: int = dataclasses.field(default=0, repr=False)
+
+    def next_key(self) -> jax.Array:
+        assert self.key is not None, "SVI mode needs ctx.key"
+        self._counter += 1
+        k = jax.random.fold_in(self.key, self._counter)
+        return jax.random.fold_in(k, self.layer_tag)
+
+    def with_layer(self, tag) -> "Context":
+        return dataclasses.replace(self, layer_tag=tag, _counter=0)
+
+
+def bayes_variance(param: dict) -> jax.Array:
+    if "rho" in param:
+        return jnp.exp(2.0 * param["rho"])
+    if "var" in param:
+        return param["var"]
+    return param["srm"] - jnp.square(param["mu"])
+
+
+def bayes_srm(param: dict) -> jax.Array:
+    if "srm" in param:
+        return param["srm"]
+    return bayes_variance(param) + jnp.square(param["mu"])
+
+
+def resolve_weight(param: Any, ctx: Context):
+    """Array for DET/SVI, GaussianTensor (VAR rep) for PFP."""
+    cast = (lambda a: a.astype(ctx.compute_dtype)) if ctx.compute_dtype \
+        else (lambda a: a)
+    if not is_bayes_param(param):
+        return cast(param) if hasattr(param, "astype") else param
+    mu = param["mu"]
+    if ctx.mode == Mode.DETERMINISTIC:
+        return cast(mu)
+    if ctx.mode == Mode.SVI:
+        sigma = jnp.exp(param["rho"]) if "rho" in param else jnp.sqrt(
+            jnp.maximum(bayes_variance(param), 0.0)
+        )
+        eps = jax.random.normal(ctx.next_key(), mu.shape, dtype=mu.dtype)
+        return cast(mu + sigma * eps)
+    # PFP: hand the layer a GaussianTensor; SRM conversion (if the leaf is
+    # variational) is one fused elementwise op — converted deployment
+    # pytrees carry 'srm' precomputed (paper §5).
+    if "srm" in param:
+        return GaussianTensor(cast(mu), cast(param["srm"]), SRM)
+    return GaussianTensor(cast(mu), cast(bayes_variance(param)), VAR)
+
+
+# -- initializers -------------------------------------------------------------
+def init_bayes(
+    key: jax.Array,
+    shape: tuple[int, ...],
+    *,
+    scale: Optional[float] = None,
+    fan_in: Optional[int] = None,
+    sigma_init: float = 1e-4,
+    mu_init: Optional[float] = None,
+    dtype=jnp.float32,
+) -> dict:
+    """Variational Gaussian weight. Default: truncated-normal fan-in mu,
+    sigma = sigma_init (the paper initializes sigma tiny: 1e-4)."""
+    if mu_init is not None:
+        mu = jnp.full(shape, mu_init, dtype=dtype)
+    else:
+        if scale is None:
+            f = fan_in if fan_in is not None else shape[0]
+            scale = f ** -0.5
+        mu = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+    rho = jnp.full(shape, jnp.log(sigma_init), dtype=dtype)
+    return {"mu": mu, "rho": rho}
+
+
+def init_deterministic(key, shape, *, scale=None, fan_in=None, dtype=jnp.float32):
+    if scale is None:
+        f = fan_in if fan_in is not None else shape[0]
+        scale = f ** -0.5
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def param_count(params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(x.size for x in leaves))
+
+
+def bayes_param_map(fn, params):
+    """Map `fn` over Bayesian leaves only (dicts {'mu','rho'/...})."""
+    return jax.tree_util.tree_map(
+        fn, params, is_leaf=is_bayes_param,
+    )

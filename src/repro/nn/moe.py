@@ -1,0 +1,217 @@
+"""Mixture-of-Experts with capacity-based scatter dispatch (EP-shardable).
+
+Design (DeepSeekMoE / Llama-4 style): optional shared experts always run;
+routed experts receive tokens via top-k routing with a capacity limit.
+
+Dispatch is scatter/gather based — no (tokens, experts, capacity) one-hot
+tensor is ever materialized, so the layer scales to pod-size token counts:
+
+    buf  = zeros(E, C, d).at[expert_id, slot].add(x)      # scatter
+    out  = expert_mlp(buf)                                # batched (E,C,d)
+    y    = out[expert_id, slot] * gate                    # gather + combine
+
+Under PFP the router works on *mean* logits (deterministic routing — the
+moment-propagation analogue of the paper's "first-layer simplification":
+control flow never sees distributions), so the scatter/gather indices are
+shared by the mean and variance paths, and the gate combine is affine:
+mean * g, var * g^2. Expert MLPs are batched PFP dense layers (Eq. 12 with
+an E-leading einsum).
+
+Sharding: experts -> 'model' (EP), capacity/tokens -> 'data'. GSPMD turns
+the cross-shard scatter/gather into the MoE all-to-all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussian import GaussianTensor, SRM, VAR, is_gaussian
+from repro.core.pfp_layers import pfp_einsum, pfp_activation, pfp_glu_product
+from repro.nn.layers import activation_apply, dense_apply, dense_init
+from repro.nn.mlp import mlp_apply, mlp_init
+from repro.nn.module import Context, init_bayes, resolve_weight
+from repro.nn.pjit_hints import constrain
+
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int, *,
+             num_shared: int = 0, shared_d_ff: Optional[int] = None,
+             gated: bool = True, sigma_init=1e-4, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d_model, num_experts,
+                             sigma_init=sigma_init, dtype=dtype),
+        "experts": {
+            "w_up": init_bayes(ks[1], (num_experts, d_model, d_ff),
+                               fan_in=d_model, sigma_init=sigma_init, dtype=dtype),
+            "w_down": init_bayes(ks[2], (num_experts, d_ff, d_model),
+                                 fan_in=d_ff, sigma_init=sigma_init, dtype=dtype),
+        },
+    }
+    if gated:
+        p["experts"]["w_gate"] = init_bayes(
+            ks[3], (num_experts, d_model, d_ff), fan_in=d_model,
+            sigma_init=sigma_init, dtype=dtype)
+    if num_shared:
+        p["shared"] = mlp_init(ks[4], d_model,
+                               (shared_d_ff or d_ff) * num_shared,
+                               gated=gated, sigma_init=sigma_init, dtype=dtype)
+    return p
+
+
+def _expert_dense(param, x, ctx: Context):
+    """Batched per-expert contraction: (E,C,din) x (E,din,dout)."""
+    w = resolve_weight(param, ctx)
+    if isinstance(w, GaussianTensor):
+        return pfp_einsum("ecd,edf->ecf", x, w.to_srm(),
+                          formulation=ctx.formulation)
+    xv = x.mean if is_gaussian(x) else x
+    return jnp.einsum("ecd,edf->ecf", xv, w)
+
+
+def _expert_mlp(params, x, ctx: Context, activation: str):
+    up = _expert_dense(params["w_up"], x, ctx)
+    if "w_gate" in params:
+        gate = _expert_dense(params["w_gate"], x, ctx)
+        if is_gaussian(gate):
+            g = pfp_activation(gate, activation)
+            h = pfp_glu_product(g, up.to_srm())
+        else:
+            h = activation_apply(gate, activation, ctx) * up
+    else:
+        h = activation_apply(up, activation, ctx)
+    return _expert_dense(params["w_down"], h, ctx)
+
+
+_TOKEN_CHUNK = 32768  # dispatch working-set bound for pod-scale prefill
+
+
+def moe_apply(params, x, ctx: Context, *, num_experts: int, top_k: int,
+              capacity_factor: float = 1.25, activation: str = "silu"):
+    """x: (B, T, d) array or GaussianTensor. Returns (same type, aux).
+
+    Token counts beyond _TOKEN_CHUNK are processed in chunks via lax.scan
+    (capacity is then per-chunk): the dispatch one-hot/cumsum and the
+    (E, C, d) expert buffers stay bounded at pod-scale prefill (1M tokens),
+    at the cost of a sequential chunk loop that XLA pipelines.
+    """
+    pfp = is_gaussian(x)
+    mean_all = x.mean if pfp else x
+    b, t, d = mean_all.shape
+    s_total = b * t
+    if s_total > _TOKEN_CHUNK and s_total % _TOKEN_CHUNK == 0:
+        nc = s_total // _TOKEN_CHUNK
+
+        def flat(a):
+            return a.reshape(nc, 1, _TOKEN_CHUNK, a.shape[-1])
+
+        if pfp:
+            xs = (flat(x.mean), flat(x.srm))
+        else:
+            xs = (flat(mean_all),)
+
+        def body(carry, chunk):
+            if pfp:
+                cx = GaussianTensor(chunk[0], chunk[1], SRM)
+            else:
+                cx = chunk[0]
+            out, aux = _moe_tokens(params, cx, ctx,
+                                   num_experts=num_experts, top_k=top_k,
+                                   capacity_factor=capacity_factor,
+                                   activation=activation)
+            if pfp:
+                return carry + aux, (out.mean, out.var)
+            return carry + aux, (out,)
+
+        aux_total, outs = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+        if pfp:
+            routed = GaussianTensor(outs[0].reshape(b, t, d),
+                                    outs[1].reshape(b, t, d), VAR)
+        else:
+            routed = outs[0].reshape(b, t, d)
+        return routed, aux_total / nc
+
+    return _moe_tokens(params, x, ctx, num_experts=num_experts, top_k=top_k,
+                       capacity_factor=capacity_factor, activation=activation)
+
+
+def _moe_tokens(params, x, ctx: Context, *, num_experts: int, top_k: int,
+                capacity_factor: float, activation: str):
+    pfp = is_gaussian(x)
+    mean_in = x.mean if pfp else x
+    b, t, d = mean_in.shape
+    s = b * t
+
+    # --- routing on the mean path (deterministic control flow) -------------
+    router_w = resolve_weight(params["router"]["w"], ctx)
+    router_mu = router_w.mean if isinstance(router_w, GaussianTensor) else router_w
+    logits = mean_in.reshape(s, d) @ router_mu                    # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)           # (S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    capacity = int(max(top_k, round(s * top_k * capacity_factor / num_experts)))
+
+    flat_e = expert_idx.reshape(-1)                               # (S*K,)
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32) # (S*K, E)
+    pos_in_e = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=-1)
+    keep = (pos_in_e < capacity) & (pos_in_e >= 0)
+    slot = jnp.where(keep, pos_in_e, capacity - 1)
+    token_of = jnp.repeat(jnp.arange(s), top_k)                   # (S*K,)
+    keep_f = keep.astype(mean_in.dtype)
+
+    def dispatch(arr_flat):                                       # (S, d) -> (E, C, d)
+        vals = arr_flat[token_of] * keep_f[:, None]
+        buf = jnp.zeros((num_experts, capacity, d), arr_flat.dtype)
+        return buf.at[flat_e, slot].add(vals, mode="drop")
+
+    if pfp:
+        x_srm = x.srm.reshape(s, d)
+        expert_in = GaussianTensor(
+            dispatch(mean_in.reshape(s, d)), dispatch(x_srm), SRM
+        )
+    else:
+        expert_in = dispatch(mean_in.reshape(s, d))
+
+    # NOTE (§Perf cell B, iteration 2 — tried and REVERTED): anchoring the
+    # (E, C, d) buffers to EP x DP via constrain(expert, capacity) fixed a
+    # 45 GB replication in one configuration but turned GSPMD's dispatch
+    # into full-buffer all-reduces elsewhere (deepseek train collective
+    # 152 s -> 429 s; prefill 66 s -> 245 s). The correct construct is an
+    # explicit shard_map all-to-all dispatch (documented future work) —
+    # GSPMD cannot derive a2a semantics from scatter-adds either way.
+    expert_out = _expert_mlp(params["experts"], expert_in, ctx, activation)
+
+    # --- combine ------------------------------------------------------------
+    gate_flat = (gate_vals.reshape(-1) * keep_f)                  # (S*K,)
+
+    def combine(buf, weight_pow):                                  # (E,C,d) -> (S,d)
+        gathered = buf[flat_e, slot]                               # (S*K, d)
+        w = gate_flat[:, None] ** weight_pow
+        y = jnp.zeros((s, d), buf.dtype).at[token_of].add(gathered * w)
+        return y
+
+    if pfp:
+        out_mu = combine(expert_out.mean, 1)
+        out_var = combine(expert_out.var, 2)
+        routed = GaussianTensor(out_mu.reshape(b, t, d),
+                                out_var.reshape(b, t, d), VAR)
+    else:
+        routed = combine(expert_out, 1).reshape(b, t, d)
+
+    if "shared" in params:
+        shared = mlp_apply(params["shared"], x, ctx, activation=activation)
+        if pfp:
+            routed = GaussianTensor(routed.mean + shared.mean,
+                                    routed.var + shared.var, VAR)
+        else:
+            routed = routed + shared
+
+    # Load-balance auxiliary loss (Switch-style), returned for training.
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], num_experts), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux_loss = num_experts * jnp.sum(density * router_prob)
+    return routed, aux_loss

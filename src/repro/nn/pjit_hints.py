@@ -1,0 +1,110 @@
+"""Logical activation-sharding hints (with_sharding_constraint anchors).
+
+GSPMD's sharding propagation is a fixed-point solve; through deep
+scan-over-layers graphs it can settle on replicated activations (observed:
+the 211 GB unsharded logits in the mamba2 train cell). Production JAX
+frameworks anchor activations with explicit constraints — this module is
+that mechanism, kept decoupled from model code via *logical* axis names:
+
+    x = constrain(x, "batch", "seq", "embed")
+
+The launcher binds logical names to mesh axes per (program x mesh) via
+set_rules(); with no rules bound (unit tests, CPU runs) constrain() is a
+no-op. Constraints use explicit NamedSharding so no ambient mesh context
+is required, and dims whose size doesn't divide the axis are left
+unconstrained automatically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.gaussian import GaussianTensor, is_gaussian
+
+_RULES: Optional[dict] = None
+
+
+def set_rules(rules: Optional[dict]) -> None:
+    """rules: {'mesh': Mesh, '<logical>': mesh-axis | tuple | None, ...}"""
+    global _RULES
+    _RULES = rules
+
+
+def get_rules() -> Optional[dict]:
+    return _RULES
+
+
+def _axis_total(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def constrain(x, *logical_axes):
+    if _RULES is None:
+        return x
+    mesh = _RULES["mesh"]
+
+    def one(a):
+        if a.ndim != len(logical_axes):
+            return a
+        spec = []
+        used: set = set()
+        for dim, name in zip(a.shape, logical_axes):
+            ax = _RULES.get(name)
+            # Fall back to prefixes of a multi-axis rule when the dim does
+            # not divide the full product (e.g. batch 32 on a 2x16x16 mesh
+            # shards over ('pod','data') but not ('pod','data','model')),
+            # and never reuse a mesh axis already consumed by another dim.
+            while ax is not None:
+                members = ax if isinstance(ax, tuple) else (ax,)
+                if used.intersection(members):
+                    ax = ax[:-1] if isinstance(ax, tuple) and len(ax) > 1 \
+                        else None
+                    continue
+                if dim % _axis_total(mesh, ax) == 0:
+                    used.update(members)
+                    break
+                ax = ax[:-1] if isinstance(ax, tuple) and len(ax) > 1 else None
+            spec.append(ax)
+        return jax.lax.with_sharding_constraint(
+            a, NamedSharding(mesh, P(*spec)))
+
+    if is_gaussian(x):
+        return GaussianTensor(one(x.mean), one(x.second), x.rep)
+    return one(x)
+
+
+def constrain_kv(arr):
+    """Anchor a (B, Hkv, S, D) KV-cache tensor after in-place update.
+
+    dynamic-update-slice into a sequence-sharded cache can make GSPMD
+    replicate the whole cache inside the layer scan; this pins the update
+    result back to the input-cache sharding (mirrors
+    launch.sharding.state_pspec: batch over DP, heads over 'model' when
+    divisible, else sequence over 'model').
+    """
+    if _RULES is None or arr.ndim != 4:
+        return arr
+    mesh = _RULES["mesh"]
+    dp = _RULES.get("state_batch") or _RULES.get("batch")
+    b, h, s, d = arr.shape
+    spec = [None, None, None, None]
+    if dp is not None:
+        if b % _axis_total(mesh, dp) == 0:
+            spec[0] = dp
+        elif isinstance(dp, tuple) and b % _axis_total(mesh, (dp[-1],)) == 0:
+            spec[0] = dp[-1]
+    if h % mesh.shape["model"] == 0:
+        spec[1] = "model"
+    elif s % mesh.shape["model"] == 0:
+        spec[2] = "model"
+    return jax.lax.with_sharding_constraint(
+        arr, NamedSharding(mesh, P(*spec)))

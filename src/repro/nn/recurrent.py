@@ -1,0 +1,184 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) with PFP moments.
+
+Block layout (De et al., 2024):
+    x-branch: Dense(D -> R) -> causal depthwise Conv1d(4) -> RG-LRU
+    y-branch: Dense(D -> R) -> GeLU
+    out     : Dense(R -> D) applied to (x-branch * y-branch)
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_r u_t);  i_t = sigmoid(W_i u_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+PFP treatment (DESIGN.md §4): gates (r, i) are computed from the *mean*
+path (delta method), making the recurrence affine in u. Moments then
+propagate exactly through the linear scan:
+
+    mean: h_t = a_t h_{t-1} + b_t mu_u       (b = sqrt(1-a^2) * i)
+    var : v_t = a_t^2 v_{t-1} + b_t^2 var_u
+
+Both run as `jax.lax.associative_scan` (log-depth — the long_500k shape
+relies on this). The depthwise conv is a Bayesian compute layer and uses
+the SRM formulation like every PFP dense op.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussian import GaussianTensor, SRM, VAR, is_gaussian
+from repro.core.pfp_layers import pfp_activation, pfp_glu_product
+from repro.nn.layers import activation_apply, dense_apply, dense_init
+from repro.nn.module import Context, init_bayes, resolve_weight
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+class RecurrentState(NamedTuple):
+    h_mean: jax.Array      # (B, R)
+    h_var: jax.Array       # (B, R)
+    conv_mean: jax.Array   # (B, W-1, R) rolling conv window
+    conv_srm: jax.Array    # (B, W-1, R)
+
+
+def rglru_init(key, d_model: int, d_rnn: int, *, conv_width: int = 4,
+               sigma_init=1e-4, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    # Lambda init so a in [0.9, 0.999] at r=1 (Griffin appendix).
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, d_rnn, dtype=dtype)) / _C))
+    return {
+        "w_x": dense_init(ks[0], d_model, d_rnn, sigma_init=sigma_init, dtype=dtype),
+        "w_y": dense_init(ks[1], d_model, d_rnn, sigma_init=sigma_init, dtype=dtype),
+        "w_out": dense_init(ks[2], d_rnn, d_model, sigma_init=sigma_init, dtype=dtype),
+        "conv_w": init_bayes(ks[3], (conv_width, d_rnn), fan_in=conv_width,
+                             sigma_init=sigma_init, dtype=dtype),
+        "w_r": dense_init(ks[4], d_rnn, d_rnn, sigma_init=sigma_init, dtype=dtype),
+        "w_i": dense_init(ks[5], d_rnn, d_rnn, sigma_init=sigma_init, dtype=dtype),
+        "lam": lam,
+    }
+
+
+def _causal_depthwise_conv(u, conv_param, ctx: Context,
+                           state_mean=None, state_srm=None):
+    """Bayesian causal depthwise conv over time. u: (B, T, R) or Gaussian.
+
+    Returns output of same type. If state (previous W-1 inputs) is given,
+    it is prepended (decode path); else zero-padding (prefill path).
+    """
+    w = resolve_weight(conv_param, ctx)
+    width = (w.mean if isinstance(w, GaussianTensor) else w).shape[0]
+
+    def _shift_stack(arr, prev):
+        if prev is None:
+            prev = jnp.zeros(arr.shape[:1] + (width - 1,) + arr.shape[2:], arr.dtype)
+        full = jnp.concatenate([prev, arr], axis=1)       # (B, T+W-1, R)
+        return jnp.stack(
+            [full[:, i : i + arr.shape[1]] for i in range(width)], axis=0
+        )                                                  # (W, B, T, R)
+
+    if isinstance(w, GaussianTensor):  # PFP: SRM-formulation conv (Eq. 12 analogue)
+        mu_taps = _shift_stack(u.mean, state_mean)
+        srm_taps = _shift_stack(u.srm, state_srm)
+        w_srm = w.srm
+        mu = jnp.einsum("wbtr,wr->btr", mu_taps, w.mean)
+        var = jnp.einsum("wbtr,wr->btr", srm_taps, w_srm) - jnp.einsum(
+            "wbtr,wr->btr", jnp.square(mu_taps), jnp.square(w.mean))
+        return GaussianTensor(mu, var, VAR)
+    taps = _shift_stack(u, state_mean)
+    return jnp.einsum("wbtr,wr->btr", taps, w)
+
+
+def _linear_scan(a, u, h0=None):
+    """h_t = a_t h_{t-1} + u_t over axis 1, log-depth associative scan."""
+    if h0 is not None:
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a_l, u_l = lhs
+        a_r, u_r = rhs
+        return a_l * a_r, u_l * a_r + u_r
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h
+
+
+def rglru_block_apply(params, x, ctx: Context, *,
+                      state: Optional[RecurrentState] = None):
+    """Full recurrent block. x: (B, T, D). Returns (out, new_state|None)."""
+    pfp = is_gaussian(x)
+    u = dense_apply(params["w_x"], x, ctx)                 # (B, T, R)
+    y = dense_apply(params["w_y"], x, ctx)
+
+    if pfp:
+        u = u.to_srm()
+        conv_out = _causal_depthwise_conv(
+            u, params["conv_w"], ctx,
+            state_mean=None if state is None else state.conv_mean,
+            state_srm=None if state is None else state.conv_srm,
+        )
+    else:
+        conv_out = _causal_depthwise_conv(
+            u, params["conv_w"], ctx,
+            state_mean=None if state is None else state.conv_mean,
+        )
+
+    # Gates from the mean path (delta method under PFP).
+    gate_in = conv_out.mean if pfp else conv_out
+    w_r = resolve_weight(params["w_r"]["w"], ctx)
+    w_i = resolve_weight(params["w_i"]["w"], ctx)
+    w_r_mu = w_r.mean if isinstance(w_r, GaussianTensor) else w_r
+    w_i_mu = w_i.mean if isinstance(w_i, GaussianTensor) else w_i
+    r = jax.nn.sigmoid(gate_in @ w_r_mu)
+    i = jax.nn.sigmoid(gate_in @ w_i_mu)
+    log_a = -_C * jax.nn.softplus(params["lam"]).astype(r.dtype) * r  # (B,T,R)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * i
+
+    if pfp:
+        h_mean = _linear_scan(a, b * conv_out.mean,
+                              None if state is None else state.h_mean)
+        h_var = _linear_scan(jnp.square(a), jnp.square(b) * conv_out.var,
+                             None if state is None else state.h_var)
+        h = GaussianTensor(h_mean, h_var, VAR)
+    else:
+        h = _linear_scan(a, b * conv_out,
+                         None if state is None else state.h_mean)
+
+    # Merge with GeLU branch and project out.
+    if pfp:
+        y_act = pfp_activation(y, "gelu")                  # VAR -> SRM
+        merged = pfp_glu_product(y_act, h.to_srm())
+    else:
+        merged = activation_apply(y, "gelu", ctx) * h
+    out = dense_apply(params["w_out"], merged, ctx)
+
+    new_state = None
+    if state is not None:
+        width = params["conv_w"]["mu"].shape[0]
+        u_mean = u.mean if pfp else u
+        u_srm = u.srm if pfp else jnp.square(u)
+        keep = width - 1
+        conv_mean = jnp.concatenate([state.conv_mean, u_mean], axis=1)[:, -keep:]
+        conv_srm = jnp.concatenate([state.conv_srm, u_srm], axis=1)[:, -keep:]
+        h_last_mean = (h.mean if pfp else h)[:, -1]
+        h_last_var = h.var[:, -1] if pfp else jnp.zeros_like(h_last_mean)
+        new_state = RecurrentState(
+            h_mean=h_last_mean,
+            h_var=h_last_var,
+            conv_mean=conv_mean,
+            conv_srm=conv_srm,
+        )
+    return out, new_state
+
+
+def init_recurrent_state(batch: int, d_rnn: int, conv_width: int = 4,
+                         dtype=jnp.float32) -> RecurrentState:
+    return RecurrentState(
+        h_mean=jnp.zeros((batch, d_rnn), dtype),
+        h_var=jnp.zeros((batch, d_rnn), dtype),
+        conv_mean=jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+        conv_srm=jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+    )

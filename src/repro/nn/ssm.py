@@ -1,0 +1,277 @@
+"""Mamba2 / SSD (state-space duality) block with PFP moment propagation.
+
+The SSD algorithm (Dao & Gu, 2024) computes the selective-SSM recurrence
+
+    S_t = a_t S_{t-1} + dt_t (B_t  ⊗ x_t)        a_t = exp(dt_t * A)  (A<0)
+    y_t = C_t · S_t + D ⊙ x_t
+
+with a *chunked* matmul-rich schedule (intra-chunk quadratic attention-like
+matmuls + inter-chunk linear state scan) — exactly the structure the TPU
+MXU wants, so we implement the chunked form rather than a per-step scan.
+
+PFP treatment (DESIGN.md §4): the selection coefficients (dt, A, B, C) and
+the gate z come from Bayesian projections but enter the recurrence through
+the *mean* path (delta method); x carries (mu, var). Given the
+coefficients, y is linear in x:
+
+    y = G x_chunk + (inter-chunk coefficient) S_prev
+
+so means propagate with the coefficient tensors and variances with their
+elementwise squares — the chunked machinery is parameterized by
+(coeffs, values) and simply invoked twice. The z-gate and out-projection
+use the standard PFP product / dense rules.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussian import GaussianTensor, SRM, VAR, is_gaussian
+from repro.core.pfp_layers import pfp_activation, pfp_glu_product
+from repro.nn.layers import activation_apply, dense_apply, dense_init, rmsnorm_apply
+from repro.nn.module import Context, resolve_weight
+
+
+class SSMState(NamedTuple):
+    s_mean: jax.Array     # (B, H, P, N)
+    s_var: jax.Array      # (B, H, P, N)
+    conv_mean: jax.Array  # (B, W-1, conv_dim)
+    conv_srm: jax.Array   # (B, W-1, conv_dim)
+
+
+def mamba2_init(key, d_model: int, *, d_state: int = 128, expand: int = 2,
+                head_dim: int = 64, conv_width: int = 4, n_groups: int = 1,
+                sigma_init=1e-4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads  # z, x, B, C, dt
+    conv_dim = d_inner + 2 * n_groups * d_state
+    from repro.nn.module import init_bayes
+
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_proj, sigma_init=sigma_init,
+                              dtype=dtype),
+        "out_proj": dense_init(ks[1], d_inner, d_model, sigma_init=sigma_init,
+                               dtype=dtype),
+        "conv_w": init_bayes(ks[2], (conv_width, conv_dim), fan_in=conv_width,
+                             sigma_init=sigma_init, dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=dtype)),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "norm_g": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _chunk(a, length):
+    b, t = a.shape[:2]
+    return a.reshape(b, t // length, length, *a.shape[2:])
+
+
+def _ssd_scan(coeff_pack, x, s0):
+    """Chunked SSD linear map. All coefficients deterministic.
+
+    coeff_pack: (G, decay_out, decay_state, chunk_decay, Bdt, C) with
+      G:           (B, nc, H, L, L)  intra-chunk score matrix (masked)
+      decay_out:   (B, nc, H, L)     exp(l_t) — inter-chunk output decay
+      decay_state: (B, nc, H, L)     exp(l_L - l_s) dt_s — state accumulation
+      chunk_decay: (B, nc, H)        exp(l_L) — carry decay per chunk
+      Bc:          (B, nc, H, L, N)  B_t  (grouped->heads)
+      Cc:          (B, nc, H, L, N)  C_t
+    x: (B, nc, H, L, P) values. s0: (B, H, P, N) initial state.
+    Returns y: (B, nc, H, L, P), s_final.
+    """
+    G, decay_out, decay_state, chunk_decay, Bc, Cc = coeff_pack
+
+    y_intra = jnp.einsum("bchts,bchsp->bchtp", G, x)
+
+    # Per-chunk candidate states: sum_s decay_state[s] * (B_s ⊗ x_s).
+    chunk_states = jnp.einsum("bchs,bchsn,bchsp->bchpn", decay_state, Bc, x)
+
+    def step(s, inp):
+        cd, cs = inp  # (B, H), (B, H, P, N)
+        s_next = s * cd[..., None, None] + cs
+        return s_next, s
+
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)     # (nc, B, H)
+    cs_t = jnp.moveaxis(chunk_states, 1, 0)    # (nc, B, H, P, N)
+    s_final, s_prevs = jax.lax.scan(step, s0, (cd_t, cs_t))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)      # (B, nc, H, P, N) state BEFORE chunk
+
+    y_inter = jnp.einsum(
+        "bchtn,bchpn,bcht->bchtp", Cc, s_prevs, decay_out
+    )
+    return y_intra + y_inter, s_final
+
+
+def mamba2_apply(params, x, ctx: Context, *, d_state: int = 128,
+                 expand: int = 2, head_dim: int = 64, conv_width: int = 4,
+                 chunk: int = 128, state: Optional[SSMState] = None):
+    """x: (B, T, D) array or GaussianTensor. Returns (out, new_state|None)."""
+    pfp = is_gaussian(x)
+    d_model = x.shape[-1]
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    p_dim = head_dim
+
+    proj = dense_apply(params["in_proj"], x, ctx)
+    mean = proj.mean if pfp else proj
+    splits = [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+              2 * d_inner + 2 * d_state]
+    z_m, xin_m, b_m, c_m, dt_m = (
+        mean[..., : splits[0]],
+        mean[..., splits[0] : splits[1]],
+        mean[..., splits[1] : splits[2]],
+        mean[..., splits[2] : splits[3]],
+        mean[..., splits[3] :],
+    )
+    if pfp:
+        var = proj.var
+        z_v = var[..., : splits[0]]
+        xin_v = var[..., splits[0] : splits[1]]
+
+    # Causal depthwise conv over (x, B, C) — Bayesian weights; PFP variance
+    # tracked for the x slice only (B, C enter through the mean path).
+    conv_in_m = jnp.concatenate([xin_m, b_m, c_m], axis=-1)
+    w = resolve_weight(params["conv_w"], ctx)
+    w_mu = w.mean if isinstance(w, GaussianTensor) else w
+
+    def taps(arr, prev):
+        if prev is None:
+            prev = jnp.zeros(arr.shape[:1] + (conv_width - 1,) + arr.shape[2:],
+                             arr.dtype)
+        full = jnp.concatenate([prev, arr], axis=1)
+        return jnp.stack(
+            [full[:, i: i + arr.shape[1]] for i in range(conv_width)], axis=0)
+
+    prev_m = None if state is None else state.conv_mean
+    conv_m = jnp.einsum("wbtr,wr->btr", taps(conv_in_m, prev_m), w_mu)
+    conv_m = jax.nn.silu(conv_m)
+    xin_m2 = conv_m[..., :d_inner]
+    b_m2 = conv_m[..., d_inner: d_inner + d_state]
+    c_m2 = conv_m[..., d_inner + d_state:]
+    if pfp:
+        # Variance of the x slice through conv (SRM form) + silu moment match.
+        xin_srm = xin_v + jnp.square(xin_m)
+        prev_srm = None if state is None else state.conv_srm[..., :d_inner]
+        prev_mm = None if state is None else state.conv_mean[..., :d_inner]
+        w_x = w_mu[:, :d_inner]
+        if isinstance(w, GaussianTensor):
+            w_x_srm = w.srm[:, :d_inner]
+        else:
+            w_x_srm = jnp.square(w_x)
+        t_m = taps(xin_m, prev_mm)
+        t_s = taps(xin_srm, prev_srm)
+        pre_m = jnp.einsum("wbtr,wr->btr", t_m, w_x)
+        pre_v = jnp.einsum("wbtr,wr->btr", t_s, w_x_srm) - jnp.einsum(
+            "wbtr,wr->btr", jnp.square(t_m), jnp.square(w_x))
+        act = pfp_activation(
+            GaussianTensor(pre_m, jnp.maximum(pre_v, 0.0), VAR), "silu")
+        xin_gauss = act.to_var()
+    # dt, decay coefficients (mean path).
+    dt = jax.nn.softplus(dt_m + params["dt_bias"].astype(dt_m.dtype))  # (B,T,H)
+    a_neg = -jnp.exp(params["a_log"]).astype(dt.dtype)      # (H,)
+    log_a = dt * a_neg                                      # (B, T, H)
+
+    b_batch, t_len = dt.shape[:2]
+    pad = (-t_len) % chunk
+    if pad:
+        raise ValueError(f"seq len {t_len} not divisible by chunk {chunk}")
+    nc = t_len // chunk
+
+    la = _chunk(log_a, chunk)                               # (B, nc, L, H)
+    la = jnp.moveaxis(la, -1, 2)                            # (B, nc, H, L)
+    cum = jnp.cumsum(la, axis=-1)                           # l_t
+    seg = cum[..., :, None] - cum[..., None, :]             # l_t - l_s
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dtc = jnp.moveaxis(_chunk(dt, chunk), -1, 2)            # (B, nc, H, L)
+
+    bb = _chunk(b_m2, chunk)                                # (B, nc, L, N)
+    cc = _chunk(c_m2, chunk)
+    Bc = jnp.broadcast_to(bb[:, :, None], (b_batch, nc, n_heads, chunk, d_state))
+    Cc = jnp.broadcast_to(cc[:, :, None], (b_batch, nc, n_heads, chunk, d_state))
+
+    scores = jnp.einsum("bchtn,bchsn->bchts", Cc, Bc)       # C_t . B_s
+    # Safe-where: exp only on causal entries — masked (t<s) segments have
+    # POSITIVE log-decay sums that overflow exp and NaN the backward.
+    seg_safe = jnp.where(tri, seg, 0.0)
+    G = jnp.where(tri, jnp.exp(seg_safe), 0.0) * scores * dtc[..., None, :]
+    decay_out = jnp.exp(cum)                                # (B, nc, H, L)
+    decay_state = jnp.exp(cum[..., -1:] - cum) * dtc        # (B, nc, H, L)
+    chunk_decay = jnp.exp(cum[..., -1])                     # (B, nc, H)
+    pack = (G, decay_out, decay_state, chunk_decay, Bc, Cc)
+
+    def to_heads(arr):                                      # (B,T,d_inner)->(B,nc,H,L,P)
+        a = _chunk(arr, chunk)                              # (B, nc, L, d_inner)
+        a = a.reshape(b_batch, nc, chunk, n_heads, p_dim)
+        return jnp.moveaxis(a, 3, 2)
+
+    def from_heads(arr):
+        a = jnp.moveaxis(arr, 2, 3)                         # (B, nc, L, H, P)
+        return a.reshape(b_batch, t_len, d_inner)
+
+    s0_shape = (b_batch, n_heads, p_dim, d_state)
+    s0_m = state.s_mean if state is not None else jnp.zeros(s0_shape, dt.dtype)
+
+    if pfp:
+        xm = to_heads(xin_gauss.mean)
+        xv = to_heads(xin_gauss.var)
+        y_m, s_m = _ssd_scan(pack, xm, s0_m)
+        # Variance: the same linear map with elementwise-squared
+        # coefficients (exact given the mean-path coefficients).
+        s0_v = state.s_var if state is not None else jnp.zeros(s0_shape, dt.dtype)
+        pack_sq = tuple(jnp.square(p) for p in pack)
+        y_v, s_v = _ssd_scan(pack_sq, xv, s0_v)
+        d_skip = params["d_skip"].astype(y_m.dtype)[:, None, None]  # (H, 1, 1)
+        y_m = y_m + xm * d_skip
+        y_v = y_v + xv * jnp.square(d_skip)
+        y = GaussianTensor(from_heads(y_m), jnp.maximum(from_heads(y_v), 0.0), VAR)
+        z = GaussianTensor(z_m, z_v, VAR)
+        z_act = pfp_activation(z, "silu")
+        gated = pfp_glu_product(z_act, y.to_srm())
+        normed = rmsnorm_apply({"g": params["norm_g"]}, gated.to_var(), ctx)
+    else:
+        xm = to_heads(xin_m2)
+        y_m, s_m = _ssd_scan(pack, xm, s0_m)
+        y_m = y_m + xm * params["d_skip"].astype(y_m.dtype)[:, None, None]
+        y = from_heads(y_m)
+        gated = jax.nn.silu(z_m) * y
+        normed = rmsnorm_apply({"g": params["norm_g"]}, gated, ctx)
+        s_v = None
+
+    out = dense_apply(params["out_proj"], normed, ctx)
+
+    new_state = None
+    if state is not None:
+        keep = conv_width - 1
+        # Rolling conv window (means always; SRM of the x slice for PFP).
+        cm = jnp.concatenate([state.conv_mean, conv_in_m], axis=1)[:, -keep:]
+        if pfp:
+            srm_in = jnp.concatenate(
+                [xin_srm, jnp.square(b_m), jnp.square(c_m)], axis=-1)
+        else:
+            srm_in = jnp.square(conv_in_m)
+        cs = jnp.concatenate([state.conv_srm, srm_in], axis=1)[:, -keep:]
+        new_state = SSMState(
+            s_mean=s_m,
+            s_var=s_v if s_v is not None else jnp.zeros_like(s_m),
+            conv_mean=cm,
+            conv_srm=cs,
+        )
+    return out, new_state
+
+
+def init_ssm_state(batch: int, d_model: int, *, d_state: int = 128,
+                   expand: int = 2, head_dim: int = 64, conv_width: int = 4,
+                   dtype=jnp.float32) -> SSMState:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return SSMState(
+        s_mean=jnp.zeros((batch, n_heads, head_dim, d_state), dtype),
+        s_var=jnp.zeros((batch, n_heads, head_dim, d_state), dtype),
+        conv_mean=jnp.zeros((batch, conv_width - 1, conv_dim), dtype),
+        conv_srm=jnp.zeros((batch, conv_width - 1, conv_dim), dtype),
+    )

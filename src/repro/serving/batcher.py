@@ -1,0 +1,64 @@
+"""Request batching for the serving example: continuous-batching lite.
+
+Collects requests into fixed-size decode batches (padding with idle slots),
+tracks per-slot positions/lengths, and evicts finished or abstained
+requests. Single-host logic — the batch itself is sharded by pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (T,) int32
+    max_new_tokens: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    mi_trace: list = dataclasses.field(default_factory=list)
+    abstained: bool = False
+    done: bool = False
+
+
+class Batcher:
+    def __init__(self, batch_size: int, max_len: int):
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def fill_slots(self):
+        """Admit queued requests into free slots. Returns new admissions."""
+        admitted = []
+        for i in range(self.batch_size):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+                admitted.append((i, self.slots[i]))
+        return admitted
+
+    def active(self):
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def record(self, slot: int, token: int, mi: float,
+               abstain: bool, eos: Optional[int] = None):
+        req = self.slots[slot]
+        if req is None:
+            return
+        req.generated.append(int(token))
+        req.mi_trace.append(float(mi))
+        if abstain:
+            req.abstained = True
+        if (len(req.generated) >= req.max_new_tokens
+                or (eos is not None and token == eos) or abstain):
+            req.done = True
+            self.slots[slot] = None
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)

@@ -1,0 +1,86 @@
+"""PFP serving: uncertainty-aware decoding on top of models.lm.
+
+The PFP serve step emits per-token logit means AND variances in one pass.
+This enables decode-time behaviors sampling-based BNNs need 30+ passes for:
+  * epistemic abstention — abstain/escalate when mutual information of the
+    next-token distribution exceeds a threshold;
+  * variance-aware sampling — sample logits l ~ N(mu, sigma^2) (paper
+    Eq. 11) then the token, giving calibrated exploration.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.bayes.metrics import predictive_metrics_from_samples
+from repro.configs.base import ModelConfig
+from repro.core.gaussian import is_gaussian
+from repro.core.modes import Mode
+from repro.models import lm
+from repro.nn.module import Context
+
+
+class DecodeOutput(NamedTuple):
+    token: jax.Array        # (B,) sampled/argmax next token
+    mutual_info: jax.Array  # (B,) epistemic uncertainty (MI)
+    total_unc: jax.Array    # (B,) total predictive entropy
+    abstain: jax.Array      # (B,) bool — MI over threshold
+    logit_mean: jax.Array
+    logit_var: jax.Array
+
+
+def uncertainty_decode(logit_mean, logit_var, key, *,
+                       num_uncertainty_samples: int = 32,
+                       mi_threshold: float = 0.5,
+                       greedy: bool = True) -> DecodeOutput:
+    """logit_mean/var: (B, 1, V) PFP outputs for the new token."""
+    mean = logit_mean[:, -1]
+    var = jnp.maximum(logit_var[:, -1], 0.0)
+    k_samp, k_tok = jax.random.split(key)
+    eps = jax.random.normal(
+        k_samp, (num_uncertainty_samples,) + mean.shape, mean.dtype)
+    samples = mean + eps * jnp.sqrt(var)             # paper Eq. 11
+    m = predictive_metrics_from_samples(samples)
+    if greedy:
+        token = jnp.argmax(mean, axis=-1)
+    else:
+        one = mean + jax.random.normal(k_tok, mean.shape) * jnp.sqrt(var)
+        token = jax.random.categorical(k_tok, one)
+    return DecodeOutput(
+        token=token, mutual_info=m["mi"], total_unc=m["total"],
+        abstain=m["mi"] > mi_threshold, logit_mean=mean, logit_var=var)
+
+
+def make_serve_step(cfg: ModelConfig, *, mode: Mode = Mode.PFP,
+                    attention_mode: str = "mean_field",
+                    formulation: str = "srm"):
+    """Returns serve_step(params, inputs, states) -> (logits, new_states).
+
+    This is the function the dry-run lowers for decode_* shapes: one new
+    token against a seq_len-sized state.
+    """
+    def serve_step(params, inputs, states):
+        ctx = Context(mode=mode, attention_mode=attention_mode,
+                      formulation=formulation, compute_dtype=jnp.bfloat16)
+        logits, new_states = lm.decode_step(params, cfg, inputs, states, ctx)
+        if is_gaussian(logits):
+            return (logits.mean, logits.var), new_states
+        return (logits, jnp.zeros_like(logits)), new_states
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, *,
+                      mode: Mode = Mode.PFP, formulation: str = "srm"):
+    def prefill_step(params, inputs):
+        ctx = Context(mode=mode, formulation=formulation,
+                      compute_dtype=jnp.bfloat16)
+        last, states = lm.prefill(params, cfg, inputs, ctx, max_len)
+        if is_gaussian(last):
+            return (last.mean, last.var), states
+        return (last, jnp.zeros_like(last)), states
+
+    return prefill_step

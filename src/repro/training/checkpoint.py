@@ -1,0 +1,160 @@
+"""Mesh-independent sharded checkpointing with async save + elastic restore.
+
+Layout (one directory per step):
+    step_000123/
+      MANIFEST.json   {path -> {shape, dtype}}, step metadata
+      <flat-key>.npy  one file per leaf (full global array)
+      COMMIT          written last — a checkpoint without COMMIT is torn
+                      and ignored by restore (atomicity via rename+marker)
+
+Fault-tolerance properties:
+  * atomic: writes go to step_X.tmp/ then os.replace() to step_X/; the
+    COMMIT marker is written after every array lands.
+  * async: save() can hand off to a writer thread so the train loop keeps
+    stepping (checkpoint/compute overlap); wait() joins before the next save.
+  * elastic: leaves are stored as *global* arrays; restore() places them
+    onto whatever mesh/sharding the new job uses (grow or shrink), so a
+    restart after node failure can rescale.
+  * bounded retention: keep_last prunes old steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}{_SEP}"))
+    else:
+        out[prefix[: -len(_SEP)]] = tree
+    return out
+
+
+def _unflatten_into(proto, flat, prefix=""):
+    """Rebuild a pytree shaped like `proto` from the flat dict."""
+    if isinstance(proto, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}{_SEP}")
+                for k, v in proto.items()}
+    if hasattr(proto, "_fields"):
+        return type(proto)(*[
+            _unflatten_into(getattr(proto, k), flat, f"{prefix}{k}{_SEP}")
+            for k in proto._fields])
+    if isinstance(proto, (list, tuple)):
+        return type(proto)(
+            _unflatten_into(v, flat, f"{prefix}{i}{_SEP}")
+            for i, v in enumerate(proto))
+    return flat[prefix[: -len(_SEP)]]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             metadata: Optional[dict] = None):
+        """Snapshot `tree` at `step`. Non-blocking by default: device->host
+        transfer happens now (consistent snapshot), disk I/O on a thread."""
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        self.wait()
+
+        def _write():
+            final = os.path.join(self.directory, f"step_{step:09d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
+            for k, v in host.items():
+                fname = k.replace(_SEP, "__") + ".npy"
+                np.save(os.path.join(tmp, fname), v)
+                manifest["leaves"][k] = {"file": fname, "shape": list(v.shape),
+                                         "dtype": str(v.dtype)}
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, "COMMIT"), "w") as f:
+                f.write("ok")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._prune()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self):
+        steps = self.list_steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def list_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.directory)):
+            full = os.path.join(self.directory, name)
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and os.path.exists(os.path.join(full, "COMMIT"))):
+                out.append(int(name[5:]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, proto: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of `proto`.
+
+        `shardings`: optional pytree of jax.sharding.Sharding matching
+        `proto` — arrays are placed shard-by-shard onto the current mesh
+        (elastic restore: the saved mesh is irrelevant).
+        Returns (tree, step).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        flat_shardings = _flatten(shardings) if shardings is not None else {}
+
+        flat = {}
+        for k, info in manifest["leaves"].items():
+            arr = np.load(os.path.join(d, info["file"]))
+            sh = flat_shardings.get(k)
+            if sh is not None:
+                flat[k] = jax.device_put(arr, sh)
+            else:
+                flat[k] = jnp.asarray(arr)
+        return _unflatten_into(proto, flat), step

@@ -1,0 +1,68 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+A distributed-optimization trick for the DP gradient reduction at pod
+scale: gradients are quantized to int8 with a per-block fp32 scale before
+crossing the interconnect (4x fewer collective bytes; inter-pod DCN links
+are the slow path this targets), and the quantization error is fed back
+into the next step's gradient (error-feedback / EF-SGD), which keeps SGD
+convergence guarantees.
+
+`compressed_psum` runs inside shard_map: quantize -> all_gather(int8) ->
+dequantize-sum locally. For an N-way axis this moves (N-1)/N * S bytes of
+int8 versus 2 (N-1)/N * S * 4 bytes for a ring all-reduce in fp32 — an 8x
+reduction in collective bytes (at the cost of N-1 local dequant-adds).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape)
+
+
+def compress_with_feedback(grad: jax.Array, error: jax.Array):
+    """Error-feedback compression: returns (q, scale, new_error)."""
+    target = grad + error
+    q, scale = quantize_int8(target)
+    recon = dequantize_int8(q, scale, grad.shape)
+    return q, scale, target - recon
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Bandwidth-reduced psum: int8 all_gather + local dequant-sum.
+
+    Call inside shard_map. Exact up to int8 quantization error (use with
+    error feedback at the caller).
+    """
+    q, scale = quantize_int8(x)
+    q_all = jax.lax.all_gather(q, axis_name)          # (N, blocks, B) int8
+    s_all = jax.lax.all_gather(scale, axis_name)
+    summed = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+    flat = summed.reshape(-1)
+    size = 1
+    for s in x.shape:
+        size *= s
+    return flat[:size].reshape(x.shape)

@@ -1,0 +1,91 @@
+"""Optimizers in pure JAX (no optax dependency).
+
+Adam (paper §4 trains SVI-BNNs with Adam, lr 1e-3) with optional decoupled
+weight decay, global-norm gradient clipping and schedules. State is a plain
+pytree so the sharded checkpointer and the FSDP sharding rules treat it
+like parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return self.learning_rate
+
+    def update(self, grads, state: AdamState, params):
+        """Returns (new_params, new_state, stats)."""
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        else:
+            gnorm = global_norm(grads)
+
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g), state.v, grads)
+        lr = self._lr(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p
+            return p - lr * delta
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, AdamState(step, m, v), {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,124 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+sweeping shapes and dtypes per the kernel contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.pfp_attention import pfp_attention_pallas
+from repro.kernels.pfp_dense import pfp_dense_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _gauss_pair(key, shape, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    mu = scale * jax.random.normal(k1, shape, jnp.float32)
+    var = scale * jax.nn.softplus(jax.random.normal(k2, shape))
+    return mu, var
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 512, 128), (256, 1024, 256), (64, 128, 64),
+    (33, 100, 53),       # unaligned -> padded path
+    (1, 784, 100),       # paper MLP first layer, batch 1
+])
+def test_pfp_dense_kernel_shapes(m, k, n):
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, m * k + n))
+    mu_x, var_x = _gauss_pair(kx, (m, k))
+    srm_x = var_x + jnp.square(mu_x)
+    mu_w, var_w = _gauss_pair(kw, (k, n), 0.1)
+    srm_w = var_w + jnp.square(mu_w)
+    got = ops.pfp_dense(mu_x, srm_x, mu_w, srm_w, impl="kernel")
+    want = ops.pfp_dense(mu_x, srm_x, mu_w, srm_w, impl="xla")
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-4)
+
+
+def test_pfp_dense_kernel_bf16_inputs():
+    kx, kw = jax.random.split(KEY)
+    mu_x, var_x = _gauss_pair(kx, (128, 256))
+    mu_w, var_w = _gauss_pair(kw, (256, 128), 0.1)
+    srm_x = var_x + mu_x ** 2
+    srm_w = var_w + mu_w ** 2
+    args16 = [a.astype(jnp.bfloat16) for a in (mu_x, srm_x, mu_w, srm_w)]
+    mu, var = pfp_dense_pallas(*args16, interpret=True)
+    assert mu.dtype == jnp.float32  # fp32 accumulate
+    rmu, rvar = ref.pfp_dense_ref(*args16)
+    np.testing.assert_allclose(mu, rmu, rtol=1e-5, atol=1e-5)
+    # The kernel squares in bf16 (as the MXU path would); the oracle squares
+    # after upcast — agreement is bounded by bf16 epsilon on the squares.
+    np.testing.assert_allclose(var, rvar, rtol=1e-3, atol=2e-2)
+
+
+def test_pfp_dense_first_layer_kernel():
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (64, 784))
+    mu_w, var_w = _gauss_pair(kw, (784, 100), 0.1)
+    got = ops.pfp_dense(x, x, mu_w, var_w, impl="kernel", first_layer=True)
+    want = ref.pfp_dense_first_layer_ref(x, mu_w, var_w)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["relu", "gelu", "silu"])
+@pytest.mark.parametrize("shape", [(256, 512), (3, 7, 33), (100,)])
+def test_activation_kernels(kind, shape):
+    mu, var = _gauss_pair(jax.random.fold_in(KEY, hash(kind) % 1000 + len(shape)), shape)
+    got = ops.pfp_activation(mu, var, kind=kind, impl="kernel")
+    want = ops.pfp_activation(mu, var, kind=kind, impl="xla")
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 8, 12, 7), (1, 28, 28, 6), (3, 14, 14, 16)])
+def test_maxpool_kernel(shape):
+    mu, var = _gauss_pair(jax.random.fold_in(KEY, shape[1]), shape)
+    got = ops.pfp_maxpool2d(mu, var, impl="kernel")
+    want = ops.pfp_maxpool2d(mu, var, impl="xla")
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tq,tk,causal,bq,bk", [
+    (128, 128, True, 64, 64),
+    (100, 132, True, 32, 32),     # unaligned
+    (64, 256, False, 64, 128),    # cross-attention style
+    (1, 96, True, 1, 32),         # decode-like
+])
+def test_attention_kernel(tq, tk, causal, bq, bk):
+    ks = jax.random.split(jax.random.fold_in(KEY, tq * tk), 4)
+    B, H, D = 2, 3, 64
+    q = jax.random.normal(ks[0], (B, H, tq, D))
+    k = jax.random.normal(ks[1], (B, H, tk, D))
+    vm = jax.random.normal(ks[2], (B, H, tk, D))
+    vv = jax.nn.softplus(jax.random.normal(ks[3], (B, H, tk, D)))
+    scale = D ** -0.5
+    got = pfp_attention_pallas(q, k, vm, vv, scale=scale, causal=causal,
+                               block_q=bq, block_k=bk, interpret=True)
+    want = ref.pfp_attention_ref(q, k, vm, vv, scale, causal=causal)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-5)
+
+
+def test_attention_kernel_matches_model_attention():
+    """Kernel oracle == the mean-field attention used by the LM stack."""
+    from repro.core.gaussian import GaussianTensor
+    from repro.core.pfp_attention import pfp_attention
+
+    ks = jax.random.split(KEY, 4)
+    B, H, T, D = 1, 2, 32, 16
+    q = jax.random.normal(ks[0], (B, H, T, D))
+    k = jax.random.normal(ks[1], (B, H, T, D))
+    vm = jax.random.normal(ks[2], (B, H, T, D))
+    vv = jax.nn.softplus(jax.random.normal(ks[3], (B, H, T, D)))
+    mask = jnp.tril(jnp.ones((T, T), bool))[None, None]
+    out = pfp_attention(
+        GaussianTensor.deterministic(q),
+        GaussianTensor.deterministic(k),
+        GaussianTensor.from_mean_var(vm, vv),
+        scale=D ** -0.5, mask=mask)
+    want = ref.pfp_attention_ref(q, k, vm, vv, D ** -0.5, causal=True)
+    np.testing.assert_allclose(out.mean, want[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(out.var, want[1], rtol=1e-4, atol=1e-5)

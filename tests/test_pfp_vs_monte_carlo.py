@@ -1,0 +1,171 @@
+"""Statistical ground truth: PFP analytic moments vs Monte-Carlo sampling.
+
+The chain of trust is kernel -> ref.py oracle -> pfp_math -> THESE tests:
+every moment formula is checked against brute-force sampling on realistic
+magnitude ranges.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pfp_math
+from repro.core.gaussian import GaussianTensor
+from repro.core.pfp_layers import (pfp_dense, pfp_glu_product, pfp_maxpool2d,
+                                   pfp_rmsnorm)
+
+N_MC = 300_000
+KEY = jax.random.PRNGKey(42)
+
+
+def _mc_tol(scale=1.0):
+    return 5 * scale / np.sqrt(N_MC) * 10  # generous 10x CLT band
+
+
+@pytest.fixture(scope="module")
+def gaussians():
+    k1, k2 = jax.random.split(KEY)
+    mu = jnp.array([-3.0, -1.0, -0.2, 0.0, 0.4, 1.5, 4.0])
+    var = jnp.array([0.1, 0.5, 1.0, 2.0, 0.01, 3.0, 0.25])
+    samples = mu + jnp.sqrt(var) * jax.random.normal(k1, (N_MC, 7))
+    return mu, var, samples
+
+
+@pytest.mark.parametrize("kind,fn", [
+    ("relu", jax.nn.relu), ("gelu", jax.nn.gelu), ("silu", jax.nn.silu),
+    ("tanh", jnp.tanh), ("sigmoid", jax.nn.sigmoid),
+])
+def test_activation_moments_vs_mc(gaussians, kind, fn):
+    mu, var, samples = gaussians
+    if kind == "relu":
+        m, s = pfp_math.relu_moments(mu, var)
+    else:
+        m, s = pfp_math.gauss_hermite_moments(fn, mu, var, num_nodes=16)
+    ref = fn(samples)
+    np.testing.assert_allclose(m, ref.mean(0), atol=0.05)
+    np.testing.assert_allclose(s, (ref ** 2).mean(0), atol=0.12)
+
+
+def test_gelu_closed_form_matches_quadrature(gaussians):
+    mu, var, _ = gaussians
+    # closed form is for exact GELU (x*Phi(x)); quadrature must use the
+    # exact variant too (jax.nn.gelu defaults to the tanh approximation).
+    m_gh, _ = pfp_math.gauss_hermite_moments(
+        lambda x: jax.nn.gelu(x, approximate=False), mu, var, num_nodes=24)
+    m_cf = pfp_math.gelu_mean_closed_form(mu, var)
+    np.testing.assert_allclose(m_cf, m_gh, atol=2e-4)
+
+
+def test_clark_max_vs_mc(gaussians):
+    mu, var, samples = gaussians
+    mu2 = mu[::-1]
+    var2 = var[::-1]
+    s2 = mu2 + jnp.sqrt(var2) * jax.random.normal(
+        jax.random.fold_in(KEY, 1), (N_MC, 7))
+    m, srm = pfp_math.clark_max_moments(mu, var, mu2, var2)
+    mx = jnp.maximum(samples, s2)
+    np.testing.assert_allclose(m, mx.mean(0), atol=0.05)
+    np.testing.assert_allclose(srm, (mx ** 2).mean(0), rtol=0.05, atol=0.1)
+
+
+def test_product_moments_vs_mc(gaussians):
+    mu, var, samples = gaussians
+    mu2, var2 = mu[::-1], var[::-1]
+    s2 = mu2 + jnp.sqrt(var2) * jax.random.normal(
+        jax.random.fold_in(KEY, 2), (N_MC, 7))
+    m, v = pfp_math.product_moments(mu, var, mu2, var2)
+    prod = samples * s2
+    np.testing.assert_allclose(m, prod.mean(0), atol=0.08)
+    np.testing.assert_allclose(v, prod.var(0), rtol=0.08, atol=0.15)
+
+
+def test_pfp_dense_vs_mc():
+    kx, kw, ks, kw2 = jax.random.split(KEY, 4)
+    n_mc = 200_000
+    mx = jax.random.normal(kx, (4, 24))
+    vx = jax.nn.softplus(jax.random.normal(ks, (4, 24)))
+    mw = 0.3 * jax.random.normal(kw, (24, 8))
+    vw = 0.02 * jax.nn.softplus(jax.random.normal(kw2, (24, 8)))
+    x = GaussianTensor.from_mean_var(mx, vx).to_srm()
+    w = GaussianTensor.from_mean_var(mw, vw).to_srm()
+    out = pfp_dense(x, w)
+
+    xs = mx + jnp.sqrt(vx) * jax.random.normal(kx, (n_mc, 4, 24))
+    ws = mw + jnp.sqrt(vw) * jax.random.normal(kw, (n_mc, 24, 8))
+    ys = jnp.einsum("nbk,nko->nbo", xs, ws)
+    np.testing.assert_allclose(out.mean, ys.mean(0), atol=0.05)
+    np.testing.assert_allclose(out.var, ys.var(0), rtol=0.05, atol=0.05)
+
+
+def test_dense_formulations_equivalent():
+    """Eq. 12 (SRM) and Eq. 7 (var) must agree analytically (Fig. 5)."""
+    from repro.core.pfp_layers import pfp_einsum
+
+    kx, kw = jax.random.split(KEY)
+    x = GaussianTensor.from_mean_var(
+        jax.random.normal(kx, (5, 16)),
+        jax.nn.softplus(jax.random.normal(kx, (5, 16)))).to_srm()
+    w = GaussianTensor.from_mean_var(
+        0.2 * jax.random.normal(kw, (16, 9)),
+        0.01 * jnp.ones((16, 9))).to_srm()
+    a = pfp_einsum("bk,kn->bn", x, w, formulation="srm")
+    b = pfp_einsum("bk,kn->bn", x, w, formulation="var")
+    np.testing.assert_allclose(a.mean, b.mean, rtol=1e-5)
+    np.testing.assert_allclose(a.var, b.var, rtol=1e-4, atol=1e-5)
+
+
+def test_first_layer_eq13_consistent():
+    """Eq. 13 equals the general path with a point-mass input."""
+    kx, kw = jax.random.split(KEY)
+    x_det = jax.random.normal(kx, (3, 12))
+    w = GaussianTensor.from_mean_var(
+        0.3 * jax.random.normal(kw, (12, 7)), 0.02 * jnp.ones((12, 7)))
+    out13 = pfp_dense(x_det, w)
+    out_gen = pfp_dense(GaussianTensor.deterministic(x_det).to_srm(),
+                        w.to_srm())
+    np.testing.assert_allclose(out13.mean, out_gen.mean, rtol=1e-5)
+    np.testing.assert_allclose(out13.var, out_gen.var, rtol=1e-4, atol=1e-6)
+
+
+def test_maxpool_vs_mc():
+    k1, k2 = jax.random.split(KEY)
+    mu = jax.random.normal(k1, (1, 4, 4, 3))
+    var = jax.nn.softplus(jax.random.normal(k2, (1, 4, 4, 3)))
+    out = pfp_maxpool2d(GaussianTensor.from_mean_var(mu, var))
+    s = mu + jnp.sqrt(var) * jax.random.normal(k1, (100_000, 1, 4, 4, 3))
+    p = jax.lax.reduce_window(s, -jnp.inf, jax.lax.max,
+                              (1, 1, 2, 2, 1), (1, 1, 2, 2, 1), "VALID")
+    np.testing.assert_allclose(out.mean, p.mean(0), atol=0.03)
+    # Tournament re-Gaussianization: variance approx within ~15 % (PFP's
+    # documented moment-matching error, cf. paper Fig. 2 discussion).
+    np.testing.assert_allclose(out.var, p.var(0), rtol=0.2, atol=0.05)
+
+
+def test_glu_product_vs_mc():
+    k1, k2 = jax.random.split(KEY)
+    ma = jax.random.normal(k1, (6,))
+    va = jax.nn.softplus(jax.random.normal(k1, (6,)))
+    mb = jax.random.normal(k2, (6,))
+    vb = jax.nn.softplus(jax.random.normal(k2, (6,)))
+    a = GaussianTensor.from_mean_var(ma, va).to_srm()
+    b = GaussianTensor.from_mean_var(mb, vb).to_srm()
+    out = pfp_glu_product(a, b)
+    sa = ma + jnp.sqrt(va) * jax.random.normal(k1, (N_MC, 6))
+    sb = mb + jnp.sqrt(vb) * jax.random.normal(k2, (N_MC, 6))
+    prod = sa * sb
+    np.testing.assert_allclose(out.mean, prod.mean(0), atol=0.05)
+    np.testing.assert_allclose(out.srm, (prod ** 2).mean(0), rtol=0.08,
+                               atol=0.1)
+
+
+def test_rmsnorm_delta_method_vs_mc():
+    k1, k2 = jax.random.split(KEY)
+    mu = jax.random.normal(k1, (2, 32))
+    var = 0.05 * jax.nn.softplus(jax.random.normal(k2, (2, 32)))
+    g = jnp.ones((32,))
+    out = pfp_rmsnorm(GaussianTensor.from_mean_var(mu, var), g)
+    s = mu + jnp.sqrt(var) * jax.random.normal(k1, (N_MC // 3, 2, 32))
+    norm = s * jax.lax.rsqrt(jnp.mean(s ** 2, -1, keepdims=True) + 1e-6)
+    # Delta method: accurate to O(var/rms^2) — a few percent here.
+    np.testing.assert_allclose(out.mean, norm.mean(0), atol=0.03)
+    np.testing.assert_allclose(out.var, norm.var(0), rtol=0.35, atol=0.01)

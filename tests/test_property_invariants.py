@@ -1,0 +1,119 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pfp_math
+from repro.core.gaussian import GaussianTensor, SRM, VAR
+from repro.training.compression import (compress_with_feedback,
+                                        dequantize_int8, quantize_int8)
+
+_finite = st.floats(min_value=-50.0, max_value=50.0, allow_nan=False)
+_var = st.floats(min_value=0.0, max_value=25.0, allow_nan=False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(_finite, min_size=1, max_size=16),
+       st.lists(_var, min_size=1, max_size=16))
+def test_relu_moments_invariants(mus, vs):
+    n = min(len(mus), len(vs))
+    mu = jnp.array(mus[:n])
+    var = jnp.array(vs[:n])
+    m, srm = pfp_math.relu_moments(mu, var)
+    m, srm = np.asarray(m), np.asarray(srm)
+    assert np.all(np.isfinite(m)) and np.all(np.isfinite(srm))
+    # ReLU output is nonnegative: mean >= 0, SRM >= mean^2 (variance >= 0)
+    assert np.all(m >= -1e-5)  # erf tail rounding at |mu|>>sigma
+    # variance nonnegative up to f32 rounding of srm ~ mu^2 (relative)
+    assert np.all(srm - m ** 2 >= -1e-3 * (1.0 + np.abs(srm)))
+    # Mean dominates max(mu, 0) up to f32 rounding at large |mu|
+    assert np.all(m >= np.maximum(mu, 0.0) - 1e-4 * (1.0 + np.abs(mu)))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(_finite, min_size=2, max_size=12),
+       st.lists(_var, min_size=2, max_size=12))
+def test_clark_max_dominates_means(mus, vs):
+    n = min(len(mus), len(vs)) // 2
+    if n == 0:
+        return
+    mu1, mu2 = jnp.array(mus[:n]), jnp.array(mus[n:2 * n])
+    v1, v2 = jnp.array(vs[:n]), jnp.array(vs[n:2 * n])
+    m, srm = pfp_math.clark_max_moments(mu1, v1, mu2, v2)
+    m, srm = np.asarray(m), np.asarray(srm)
+    # E[max(X,Y)] >= max(E X, E Y); second moment consistent
+    assert np.all(m >= np.maximum(mu1, mu2) - 1e-4)
+    assert np.all(srm - m ** 2 >= -1e-3)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(_finite, min_size=1, max_size=16),
+       st.lists(st.floats(min_value=1e-4, max_value=25.0), min_size=1,
+                max_size=16))
+def test_rep_conversion_roundtrip(mus, vs):
+    n = min(len(mus), len(vs))
+    g = GaussianTensor.from_mean_var(jnp.array(mus[:n]), jnp.array(vs[:n]))
+    back = g.to_srm().to_var()
+    np.testing.assert_allclose(back.second, g.second, rtol=1e-4, atol=1e-4)
+    assert back.rep == VAR and g.to_srm().rep == SRM
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(_finite, min_size=1, max_size=16),
+       st.lists(_var, min_size=1, max_size=16))
+def test_gaussian_sum_variance_adds(mus, vs):
+    n = min(len(mus), len(vs))
+    a = GaussianTensor.from_mean_var(jnp.array(mus[:n]), jnp.array(vs[:n]))
+    b = GaussianTensor.from_mean_var(jnp.array(mus[:n][::-1]),
+                                     jnp.array(vs[:n][::-1]))
+    c = a + b
+    np.testing.assert_allclose(c.mean, a.mean + b.mean, rtol=1e-5)
+    np.testing.assert_allclose(c.var, a.var + b.var, rtol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=2000),
+       st.floats(min_value=1e-3, max_value=1e3))
+def test_int8_quantization_error_bound(n, scale):
+    x = scale * jnp.sin(jnp.arange(n, dtype=jnp.float32))
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape)
+    # blockwise symmetric int8: error <= scale/254 per block max
+    max_err = np.max(np.abs(np.asarray(back - x)))
+    assert max_err <= float(jnp.max(jnp.abs(x))) / 254.0 + 1e-7
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=300))
+def test_error_feedback_is_lossless_in_sum(n):
+    """EF invariant: sum of reconstructed grads + final error == sum of
+    true grads (no information lost over time)."""
+    key = jax.random.PRNGKey(n)
+    grads = jax.random.normal(key, (5, n))
+    err = jnp.zeros((n,))
+    recon_sum = jnp.zeros((n,))
+    for i in range(5):
+        q, s, err = compress_with_feedback(grads[i], err)
+        recon_sum = recon_sum + dequantize_int8(q, s, (n,))
+    np.testing.assert_allclose(recon_sum + err, grads.sum(0),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_svi_sampling_deterministic_per_key(seed):
+    """Same ctx key + layer tag -> identical SVI weight sample."""
+    from repro.core.modes import Mode
+    from repro.nn.module import Context, init_bayes, resolve_weight
+
+    p = init_bayes(jax.random.PRNGKey(0), (4, 4), sigma_init=0.5)
+    c1 = Context(mode=Mode.SVI, key=jax.random.PRNGKey(seed))
+    c2 = Context(mode=Mode.SVI, key=jax.random.PRNGKey(seed))
+    w1 = resolve_weight(p, c1)
+    w2 = resolve_weight(p, c2)
+    np.testing.assert_array_equal(w1, w2)
+    # and a different layer tag gives a different sample
+    c3 = Context(mode=Mode.SVI, key=jax.random.PRNGKey(seed), layer_tag=7)
+    w3 = resolve_weight(p, c3)
+    assert not np.allclose(w1, w3)

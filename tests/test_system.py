@@ -1,0 +1,59 @@
+"""End-to-end behaviour tests for the PFP system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bayes.convert import svi_to_pfp
+from repro.core.modes import Mode
+from repro.models.simple import mlp_forward, mlp_init
+from repro.nn.module import Context
+
+
+def test_three_modes_one_pytree():
+    """One parameter pytree serves deterministic / SVI / PFP programs."""
+    params = mlp_init(jax.random.PRNGKey(0), d_hidden=16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 784))
+    det = mlp_forward(params, x, Context(mode=Mode.DETERMINISTIC))
+    svi = mlp_forward(params, x, Context(mode=Mode.SVI,
+                                         key=jax.random.PRNGKey(2)))
+    pfp = mlp_forward(params, x, Context(mode=Mode.PFP))
+    assert det.shape == svi.shape == pfp.mean.shape == (4, 10)
+    # tiny init sigma: all three agree closely at initialization
+    np.testing.assert_allclose(det, pfp.mean, atol=1e-3)
+    np.testing.assert_allclose(det, svi, atol=1e-2)
+
+
+def test_pfp_variance_grows_with_weight_uncertainty():
+    params = mlp_init(jax.random.PRNGKey(0), d_hidden=16, sigma_init=1e-4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 784))
+    lo = mlp_forward(svi_to_pfp(params), x, Context(mode=Mode.PFP))
+    wide = jax.tree_util.tree_map(lambda a: a, params)
+    # inflate all rho
+    def inflate(p):
+        if isinstance(p, dict) and "rho" in p:
+            return {"mu": p["mu"], "rho": p["rho"] + 3.0}
+        return p
+    from repro.nn.module import is_bayes_param
+    wide = jax.tree_util.tree_map(inflate, params, is_leaf=is_bayes_param)
+    hi = mlp_forward(svi_to_pfp(wide), x, Context(mode=Mode.PFP))
+    assert float(hi.var.mean()) > 100 * float(lo.var.mean())
+
+
+def test_svi_mc_converges_to_pfp_moments():
+    """Many SVI samples converge to PFP's analytic moments (the PFP
+    approximation is exact for linear layers; the MLP deviation stays
+    small) — the framework-level statement of the paper's premise."""
+    params = mlp_init(jax.random.PRNGKey(3), d_hidden=16, sigma_init=0.05)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 784))
+    pfp = mlp_forward(svi_to_pfp(params), x, Context(mode=Mode.PFP))
+
+    def one(k):
+        return mlp_forward(params, x, Context(mode=Mode.SVI, key=k))
+
+    samples = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(5), 800))
+    mc_mean = samples.mean(0)
+    mc_var = samples.var(0)
+    np.testing.assert_allclose(np.asarray(pfp.mean), np.asarray(mc_mean),
+                               atol=0.05)
+    ratio = np.asarray(pfp.var) / np.maximum(np.asarray(mc_var), 1e-8)
+    assert 0.5 < np.median(ratio) < 2.0, np.median(ratio)
