@@ -3,7 +3,8 @@
 Times each PFP layer of the MLP and LeNet-5 separately (jit per layer) at
 mini-batch 10, reporting the latency fraction per operator type — the
 paper's observation that "trivial" ops (ReLU, MaxPool) become hot under
-PFP is the quantity of interest.
+PFP is the quantity of interest. Ops run through the impl-dispatch
+registry, so ``run.py --impl kernel`` profiles the Pallas stack per layer.
 """
 from __future__ import annotations
 
@@ -12,10 +13,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.bayes.convert import svi_to_pfp
+from repro.core.dispatch import (pfp_activation, pfp_conv2d_im2col,
+                                 pfp_dense, pfp_maxpool2d)
 from repro.core.gaussian import GaussianTensor
 from repro.core.modes import Mode
-from repro.core.pfp_layers import (pfp_activation, pfp_conv2d_im2col,
-                                   pfp_dense, pfp_maxpool2d)
 from repro.models.simple import lenet5_init, mlp_init
 from repro.nn.module import Context, resolve_weight
 

@@ -1,12 +1,21 @@
-"""Shared benchmark utilities: timing, CSV emission, model builders."""
+"""Shared benchmark utilities: timing, CSV emission, model builders.
+
+Every emitted row names the active PFP operator implementation (the
+impl-dispatch registry default — flipped fleet-wide by ``run.py --impl``),
+so result files are self-describing about which stack they measured.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.dispatch import resolve_impl
+
+CSV_HEADER = "name,us_per_call,impl,derived"
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -21,8 +30,9 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
     return float(np.median(times))
 
 
-def emit(name: str, seconds: float, derived: str = "") -> str:
-    line = f"{name},{seconds * 1e6:.1f},{derived}"
+def emit(name: str, seconds: float, derived: str = "",
+         impl: Optional[str] = None) -> str:
+    line = f"{name},{seconds * 1e6:.1f},{resolve_impl(impl)},{derived}"
     print(line)
     return line
 
@@ -34,7 +44,6 @@ def trained_paper_models(quick: bool = True):
     from repro.models.simple import (lenet5_forward, lenet5_init,
                                      mlp_forward, mlp_init)
     from repro.bayes.variational import KLSchedule
-    from repro.nn.module import Context
     from repro.training.optimizer import Adam
     from repro.training.train_loop import init_train_state, make_svi_train_step
 

@@ -16,7 +16,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. fig7,table5)")
+    ap.add_argument("--impl", default=None, choices=["xla", "kernel"],
+                    help="PFP operator implementation: flips the dispatch-"
+                         "registry default so every bench (including full "
+                         "model graphs) runs through the chosen stack")
     args = ap.parse_args()
+
+    if args.impl:
+        from repro.core.dispatch import set_default_impl
+
+        set_default_impl(args.impl)
 
     from benchmarks import (bench_fig5_formulations, bench_fig7_batch_sweep,
                             bench_table1_quality, bench_table2_schedules,
@@ -32,8 +41,10 @@ def main() -> None:
         "fig7": bench_fig7_batch_sweep,
         "table5": bench_table5_processors,
     }
+    from benchmarks.common import CSV_HEADER
+
     selected = (args.only.split(",") if args.only else list(benches))
-    print("name,us_per_call,derived")
+    print(CSV_HEADER)
     failures = []
     for name in selected:
         try:

@@ -1,7 +1,10 @@
-"""Core PFP library: Gaussian tensors, moment algebra, PFP layers/attention."""
+"""Core PFP library: Gaussian tensors, moment algebra, PFP layers/attention,
+and the impl-dispatch registry (`dispatch`) that routes every PFP op to its
+XLA or Pallas implementation."""
 from repro.core.gaussian import GaussianTensor, as_gaussian, is_gaussian, SRM, VAR
 from repro.core.modes import Mode
-from repro.core import pfp_math, pfp_layers, pfp_attention
+from repro.core import dispatch, pfp_math, pfp_layers, pfp_attention
+from repro.core.dispatch import get_default_impl, set_default_impl
 
 __all__ = [
     "GaussianTensor",
@@ -10,7 +13,10 @@ __all__ = [
     "SRM",
     "VAR",
     "Mode",
+    "dispatch",
     "pfp_math",
     "pfp_layers",
     "pfp_attention",
+    "get_default_impl",
+    "set_default_impl",
 ]

@@ -1,0 +1,432 @@
+"""Single impl-dispatch registry for every PFP operator.
+
+The paper's speedups come from a dedicated library of Gaussian-propagating
+operators compiled and tuned per target (TVM there, Pallas here). This repo
+previously carried TWO parallel operator stacks — ``core.pfp_layers``
+(pure-jnp, GaussianTensor-level) and ``kernels.ops`` (padded/blocked
+wrappers over the Pallas kernels) — and the model zoo hard-routed through
+the former, leaving the tuned kernels dead code on every end-to-end
+forward. This module collapses the stacks:
+
+  * each PFP op is registered ONCE with an ``'xla'`` and a ``'kernel'``
+    implementation, both operating on :class:`GaussianTensor`;
+  * the representation contract (compute layers consume SRM and emit VAR,
+    activations consume VAR and emit SRM — paper §5) is enforced HERE, in
+    exactly one place, by the public wrappers;
+  * ``Context.impl`` (or the process-wide :func:`set_default_impl`) flips
+    an entire model forward — MLP, LeNet-5, the transformer LM zoo —
+    between the XLA graph and the Pallas kernel path with one flag.
+
+Layering: ``core`` must stay importable without ``kernels`` (oracle-only
+tools, docs builds), so kernel implementations import ``repro.kernels.ops``
+lazily at call time. Ops whose optimal form IS the XLA-native one (gather
+for embeddings, the two adds of a residual) register the same function for
+both impls — the registry still owns the routing decision, and the parity
+suite (tests/test_impl_dispatch.py) covers them like any other op.
+
+This registry is also the seam for per-op autotuning (paper §6: pick block
+shapes per (op, shape, target)) and multi-backend dispatch later: both are
+"register another implementation / decorate the lookup" changes now.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pfp_layers
+from repro.core.gaussian import SRM, VAR, GaussianTensor, as_gaussian, is_gaussian
+from repro.core.pfp_layers import ACTIVATION_MOMENTS, DETERMINISTIC_ACTIVATIONS
+
+IMPLS = ("xla", "kernel")
+_DEFAULT_IMPL = "xla"
+
+# op name -> {'xla': fn, 'kernel': fn}
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+# ---------------------------------------------------------------------------
+# Registry plumbing
+# ---------------------------------------------------------------------------
+def set_default_impl(impl: str) -> None:
+    """Process-wide default used when ``Context.impl`` is None."""
+    global _DEFAULT_IMPL
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def resolve_impl(impl: Optional[str]) -> str:
+    """None -> process default; otherwise validate and pass through."""
+    if impl is None:
+        return _DEFAULT_IMPL
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    return impl
+
+
+def register(name: str, impl: str):
+    """Decorator: register ``fn`` as the ``impl`` implementation of ``name``."""
+    assert impl in IMPLS, impl
+
+    def deco(fn):
+        _REGISTRY.setdefault(name, {})[impl] = fn
+        return fn
+
+    return deco
+
+
+def get_op(name: str, impl: Optional[str] = None) -> Callable:
+    return _REGISTRY[name][resolve_impl(impl)]
+
+
+def registered_ops() -> Dict[str, Dict[str, Callable]]:
+    """Snapshot of the registry (op -> impl -> fn)."""
+    return {k: dict(v) for k, v in _REGISTRY.items()}
+
+
+def _kernel_ops():
+    # Lazy: keeps core importable without the kernels package and avoids a
+    # core <-> kernels import cycle at module-load time.
+    from repro.kernels import ops
+
+    return ops
+
+
+def _out_dtype(*xs) -> Any:
+    for x in xs:
+        if hasattr(x, "dtype"):
+            return x.dtype
+    return jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# dense — the paper's flagship operator (Eqs. 4/12/13)
+# ---------------------------------------------------------------------------
+@register("dense", "xla")
+def _dense_xla(x, w, formulation):
+    return pfp_layers.pfp_dense(x, w, formulation=formulation)
+
+
+@register("dense", "kernel")
+def _dense_kernel(x, w, formulation):
+    if formulation != "srm":
+        # The Pallas dense kernel is the production Eq. 12 schedule; the
+        # Eq. 7 'var' formulation exists only for the Fig. 5 ablation.
+        return _dense_xla(x, w, formulation)
+    ops = _kernel_ops()
+    dtype = _out_dtype(x, w)
+    if not is_gaussian(x):
+        # First-layer simplification (Eq. 13): deterministic inputs.
+        mu, var = ops.pfp_dense(x, x, w.mean, w.var, impl="kernel",
+                                first_layer=True)
+    else:
+        mu, var = ops.pfp_dense(x.mean, x.srm, w.mean, w.srm, impl="kernel")
+    return GaussianTensor(mu.astype(dtype), var.astype(dtype), VAR)
+
+
+def pfp_dense(x, w, b=None, *, formulation: str = "srm",
+              impl: Optional[str] = None) -> GaussianTensor:
+    """PFP dense y = x @ W (+ b). Consumes SRM, emits VAR (contract here).
+
+    ``b`` may be None, a deterministic array, or a GaussianTensor (the
+    paper's three bias configurations, §5) — bias handling is shared by
+    both implementations.
+    """
+    x = _to_compute_rep(x, formulation)
+    out = get_op("dense", impl)(x, w, formulation)
+    return _add_bias(out, b)
+
+
+def _to_compute_rep(x, formulation):
+    # Production (Eq. 12) contract: compute layers consume SRM. The Eq. 7
+    # ablation natively consumes variances — converting it to SRM here would
+    # charge the ablation a conversion it doesn't need (Fig. 5 fairness).
+    if not is_gaussian(x):
+        return x
+    return x.to_srm() if formulation == "srm" else x.to_var()
+
+
+def _add_bias(out: GaussianTensor, b) -> GaussianTensor:
+    if b is None:
+        return out
+    if is_gaussian(b):
+        return GaussianTensor(out.mean + b.mean, out.var + b.var, VAR)
+    return GaussianTensor(out.mean + b, out.var, VAR)
+
+
+# ---------------------------------------------------------------------------
+# einsum — generalized PFP contraction
+# ---------------------------------------------------------------------------
+@register("einsum", "xla")
+def _einsum_xla(subscripts, x, w, formulation):
+    return pfp_layers.pfp_einsum(subscripts, x, w, formulation=formulation)
+
+
+def _parse_batched_mm(subscripts: str):
+    """Match 'bmk,bkn->bmn'-shaped specs (e.g. the MoE 'ecd,edf->ecf').
+
+    Returns True when both operands are rank-3 with a shared leading batch
+    letter and a single shared contraction letter, so the op is a batch of
+    independent PFP dense contractions.
+    """
+    spec = subscripts.replace(" ", "")
+    if "->" not in spec or "." in spec:
+        return False
+    ins, out = spec.split("->")
+    if ins.count(",") != 1:
+        return False
+    lhs, rhs = ins.split(",")
+    if not (len(lhs) == len(rhs) == len(out) == 3):
+        return False
+    return (lhs[0] == rhs[0] == out[0] and lhs[2] == rhs[1]
+            and out[1] == lhs[1] and out[2] == rhs[2])
+
+
+@register("einsum", "kernel")
+def _einsum_kernel(subscripts, x, w, formulation):
+    if formulation != "srm":
+        return _einsum_xla(subscripts, x, w, formulation)
+    spec = subscripts.replace(" ", "")
+    if spec in ("...k,kn->...n", "bk,kn->bn", "btk,kn->btn"):
+        return _dense_kernel(x, w, "srm")
+    if _parse_batched_mm(spec):
+        # Batched per-expert contraction: vmap the blocked dense kernel over
+        # the shared leading axis (Pallas batches by extending the grid).
+        ops = _kernel_ops()
+        dtype = _out_dtype(x, w)
+        if not is_gaussian(x):
+            fn = jax.vmap(lambda xe, mw, vw: ops.pfp_dense(
+                xe, xe, mw, vw, impl="kernel", first_layer=True))
+            mu, var = fn(x, w.mean, w.var)
+        else:
+            fn = jax.vmap(lambda mx, sx, mw, sw: ops.pfp_dense(
+                mx, sx, mw, sw, impl="kernel"))
+            mu, var = fn(x.mean, x.srm, w.mean, w.srm)
+        return GaussianTensor(mu.astype(dtype), var.astype(dtype), VAR)
+    # General contractions (depthwise convs etc.) have no blocked kernel
+    # yet; the XLA formulation is the registered fallback.
+    return _einsum_xla(subscripts, x, w, formulation)
+
+
+def pfp_einsum(subscripts: str, x, w, *, formulation: str = "srm",
+               impl: Optional[str] = None) -> GaussianTensor:
+    """PFP generalized contraction. Consumes SRM, emits VAR."""
+    return get_op("einsum", impl)(subscripts, _to_compute_rep(x, formulation),
+                                  w, formulation)
+
+
+# ---------------------------------------------------------------------------
+# conv2d (im2col) — shares the dense kernel's blocked schedule
+# ---------------------------------------------------------------------------
+@register("conv2d_im2col", "xla")
+def _conv_xla(x, w, stride, padding, formulation):
+    return pfp_layers.pfp_conv2d_im2col(x, w, stride=stride, padding=padding,
+                                        formulation=formulation)
+
+
+@register("conv2d_im2col", "kernel")
+def _conv_kernel(x, w, stride, padding, formulation):
+    xp, w2 = pfp_layers.im2col(x, w, stride=stride, padding=padding)
+    return _dense_kernel(xp, w2, formulation)
+
+
+def pfp_conv2d_im2col(x, w, b=None, *, stride: int = 1, padding: str = "VALID",
+                      formulation: str = "srm",
+                      impl: Optional[str] = None) -> GaussianTensor:
+    """PFP conv2d (NHWC, HWIO). Consumes SRM, emits VAR."""
+    x = _to_compute_rep(x, formulation)
+    out = get_op("conv2d_im2col", impl)(x, w, stride, padding, formulation)
+    return _add_bias(out, b)
+
+
+# ---------------------------------------------------------------------------
+# activation — moment-matched elementwise nonlinearities
+# ---------------------------------------------------------------------------
+@register("activation", "xla")
+def _activation_xla(x, kind):
+    return pfp_layers.pfp_activation(x, kind)
+
+
+@register("activation", "kernel")
+def _activation_kernel(x, kind):
+    if kind == "identity":  # pure representation conversion, no transcendentals
+        return _activation_xla(x, kind)
+    ops = _kernel_ops()
+    mu, srm = ops.pfp_activation(x.mean, x.var, kind=kind, impl="kernel")
+    return GaussianTensor(mu.astype(x.dtype), srm.astype(x.dtype), SRM)
+
+
+def pfp_activation(x: GaussianTensor, kind: str,
+                   impl: Optional[str] = None) -> GaussianTensor:
+    """Moment-matched activation. Consumes VAR, emits SRM (contract here)."""
+    return get_op("activation", impl)(x.to_var(), kind)
+
+
+# ---------------------------------------------------------------------------
+# maxpool2d — Clark tournament (k=2), paper §6.2
+# ---------------------------------------------------------------------------
+@register("maxpool2d", "xla")
+def _maxpool_xla(x, window):
+    return pfp_layers.pfp_maxpool2d(x, window=window)
+
+
+@register("maxpool2d", "kernel")
+def _maxpool_kernel(x, window):
+    assert window == 2, "production path specializes k=2 like the paper"
+    ops = _kernel_ops()
+    mu, var = ops.pfp_maxpool2d(x.mean, x.var, impl="kernel")
+    return GaussianTensor(mu.astype(x.dtype), var.astype(x.dtype), VAR)
+
+
+def pfp_maxpool2d(x: GaussianTensor, window: int = 2,
+                  impl: Optional[str] = None) -> GaussianTensor:
+    """PFP max pool (NHWC). Consumes VAR, emits VAR."""
+    return get_op("maxpool2d", impl)(x.to_var(), window)
+
+
+# ---------------------------------------------------------------------------
+# attention — mean-field joint mean/variance softmax attention
+# ---------------------------------------------------------------------------
+@register("attention", "xla")
+def _attention_xla(q_mu, k_mu, v_mu, v_var, scale, causal):
+    return _kernel_ops().pfp_attention(q_mu, k_mu, v_mu, v_var, scale=scale,
+                                       causal=causal, impl="xla")
+
+
+@register("attention", "kernel")
+def _attention_kernel(q_mu, k_mu, v_mu, v_var, scale, causal):
+    return _kernel_ops().pfp_attention(q_mu, k_mu, v_mu, v_var, scale=scale,
+                                       causal=causal, impl="kernel")
+
+
+def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float,
+                  causal: bool = True, impl: Optional[str] = None):
+    """Mean-field PFP attention: q (B, H, Tq, D), kv (B, Hkv, Tk, D),
+    H % Hkv == 0 -> (mean, var) at H heads.
+
+    Array-level (not GaussianTensor): attention mixes deterministic score
+    means with value variances, so the layer assembles the tensors. Causal
+    masking is right-aligned by index — callers with non-trivial position
+    remappings, windows or per-batch validity masks keep the chunked XLA
+    core in nn/attention.py.
+    """
+    dtype = q_mu.dtype
+    mu, var = get_op("attention", impl)(q_mu, k_mu, v_mu, v_var, scale, causal)
+    return mu.astype(dtype), var.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms — delta-method RMSNorm/LayerNorm, optional fused activation epilogue
+# ---------------------------------------------------------------------------
+@register("rmsnorm", "xla")
+def _rmsnorm_xla(x, gain, eps, act):
+    out = pfp_layers.pfp_rmsnorm(x, gain, eps=eps)
+    return pfp_layers.pfp_activation(out, act) if act is not None else out
+
+
+@register("rmsnorm", "kernel")
+def _rmsnorm_kernel(x, gain, eps, act):
+    ops = _kernel_ops()
+    mu, sec = ops.pfp_rmsnorm(x.mean, x.second, gain, rep=x.rep, eps=eps,
+                              act=act, impl="kernel")
+    rep = SRM if act is not None else VAR
+    return GaussianTensor(mu.astype(x.dtype), sec.astype(x.dtype), rep)
+
+
+def pfp_rmsnorm(x: GaussianTensor, gain, *, eps: float = 1e-6,
+                act: Optional[str] = None,
+                impl: Optional[str] = None) -> GaussianTensor:
+    """RMSNorm under PFP. Emits VAR; with ``act`` the following
+    moment-matched activation is fused at the registry level and the op
+    emits SRM (activation contract)."""
+    return get_op("rmsnorm", impl)(x, gain, eps, act)
+
+
+@register("layernorm", "xla")
+def _layernorm_xla(x, gain, bias, eps, act):
+    out = pfp_layers.pfp_layernorm(x, gain, bias=bias, eps=eps)
+    return pfp_layers.pfp_activation(out, act) if act is not None else out
+
+
+@register("layernorm", "kernel")
+def _layernorm_kernel(x, gain, bias, eps, act):
+    ops = _kernel_ops()
+    mu, sec = ops.pfp_layernorm(x.mean, x.second, gain, bias, rep=x.rep,
+                                eps=eps, act=act, impl="kernel")
+    rep = SRM if act is not None else VAR
+    return GaussianTensor(mu.astype(x.dtype), sec.astype(x.dtype), rep)
+
+
+def pfp_layernorm(x: GaussianTensor, gain, bias=None, *, eps: float = 1e-6,
+                  act: Optional[str] = None,
+                  impl: Optional[str] = None) -> GaussianTensor:
+    """LayerNorm under PFP. Emits VAR (SRM with fused ``act``)."""
+    return get_op("layernorm", impl)(x, gain, bias, eps, act)
+
+
+# ---------------------------------------------------------------------------
+# glu_product — exact gated product (SwiGLU / GeGLU / RG-LRU gates)
+# ---------------------------------------------------------------------------
+@register("glu_product", "xla")
+def _glu_xla(a, b):
+    return pfp_layers.pfp_glu_product(a, b)
+
+
+@register("glu_product", "kernel")
+def _glu_kernel(a, b):
+    ops = _kernel_ops()
+    mu, srm = ops.pfp_glu_product(a.mean, a.srm, b.mean, b.srm, impl="kernel")
+    return GaussianTensor(mu.astype(a.dtype), srm.astype(a.dtype), SRM)
+
+
+def pfp_glu_product(a: GaussianTensor, b: GaussianTensor,
+                    impl: Optional[str] = None) -> GaussianTensor:
+    """Product of independent Gaussians. Consumes SRM, emits SRM (exact)."""
+    return get_op("glu_product", impl)(a.to_srm(), b.to_srm())
+
+
+# ---------------------------------------------------------------------------
+# embedding / residual — memory-bound ops whose tuned form IS the XLA one
+# ---------------------------------------------------------------------------
+def _embedding_impl(table, ids):
+    return pfp_layers.pfp_embedding(table, ids)
+
+
+register("embedding", "xla")(_embedding_impl)
+register("embedding", "kernel")(_embedding_impl)
+
+
+def pfp_embedding(table: GaussianTensor, ids,
+                  impl: Optional[str] = None) -> GaussianTensor:
+    """Bayesian embedding gather. Emits VAR. (Gathers are XLA-native on
+    every backend; both impls share the one implementation.)"""
+    return get_op("embedding", impl)(table.to_var(), ids)
+
+
+def _residual_impl(x, y):
+    return pfp_layers.pfp_residual(x, y)
+
+
+register("residual", "xla")(_residual_impl)
+register("residual", "kernel")(_residual_impl)
+
+
+def pfp_residual(x, y, impl: Optional[str] = None) -> GaussianTensor:
+    """Residual add of independent Gaussians. Emits VAR."""
+    return get_op("residual", impl)(as_gaussian(x), as_gaussian(y))
+
+
+__all__ = [
+    "IMPLS", "set_default_impl", "get_default_impl", "resolve_impl",
+    "register", "get_op", "registered_ops",
+    "pfp_dense", "pfp_einsum", "pfp_conv2d_im2col", "pfp_activation",
+    "pfp_maxpool2d", "pfp_attention", "pfp_rmsnorm", "pfp_layernorm",
+    "pfp_glu_product", "pfp_embedding", "pfp_residual",
+    "ACTIVATION_MOMENTS", "DETERMINISTIC_ACTIVATIONS",
+]

@@ -189,18 +189,20 @@ def _split_pairs(a: jax.Array, axis: int):
     return lo, hi
 
 
-def pfp_conv2d_im2col(
+def im2col(
     x: GaussianTensor | jax.Array,
     w: GaussianTensor,
     stride: int = 1,
     padding: str = "VALID",
-    formulation: str = "srm",
-) -> GaussianTensor:
-    """PFP conv2d (NHWC, HWIO) via im2col + the PFP dense contraction.
+) -> tuple:
+    """Shared im2col plumbing for conv-as-dense (impl-independent).
 
-    The TPU-native adaptation of the paper's conv operator: patches are
-    extracted once and shared by the mean and variance matmuls (joint
-    operator), so the MXU does three GEMMs on an identical layout.
+    Returns ``(patches, w2)``: patches (N, Ho, Wo, cin*kh*kw) — a
+    GaussianTensor in SRM rep when ``x`` is Gaussian — and the weight
+    reshaped to the matching (cin*kh*kw, cout) contraction layout.
+    Patches are extracted once and shared by the mean and variance
+    matmuls (joint operator), so the MXU does three GEMMs on an
+    identical layout.
     """
     kh, kw, cin, cout = w.shape
     # conv_general_dilated_patches emits features channel-major: (cin, kh, kw).
@@ -217,7 +219,21 @@ def pfp_conv2d_im2col(
         return p  # (N, Ho, Wo, cin*kh*kw)
 
     if not is_gaussian(x):
-        xp = _patches(x)
+        return _patches(x), w2
+    return GaussianTensor(_patches(x.mean), _patches(x.srm), SRM), w2
+
+
+def pfp_conv2d_im2col(
+    x: GaussianTensor | jax.Array,
+    w: GaussianTensor,
+    stride: int = 1,
+    padding: str = "VALID",
+    formulation: str = "srm",
+) -> GaussianTensor:
+    """PFP conv2d (NHWC, HWIO) via im2col + the PFP dense contraction.
+
+    The TPU-native adaptation of the paper's conv operator."""
+    xp, w2 = im2col(x, w, stride=stride, padding=padding)
+    if not is_gaussian(xp):
         return pfp_dense(xp, w2)
-    xp = GaussianTensor(_patches(x.mean), _patches(x.srm), SRM)
     return pfp_dense(xp, w2, formulation=formulation)

@@ -20,22 +20,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.pfp_activations import pfp_activation_pallas
+from repro.kernels.pfp_activations import pfp_activation_pallas, pfp_glu_pallas
 from repro.kernels.pfp_attention import pfp_attention_pallas
 from repro.kernels.pfp_dense import pfp_dense_pallas
 from repro.kernels.pfp_maxpool import pfp_maxpool2d_pallas
+from repro.kernels.pfp_norms import pfp_layernorm_pallas, pfp_rmsnorm_pallas
 
 Impl = Literal["kernel", "xla"]
-_DEFAULT_IMPL: Impl = "xla"
 
 
 def set_default_impl(impl: Impl) -> None:
-    global _DEFAULT_IMPL
-    _DEFAULT_IMPL = impl
+    """Back-compat shim: the process-wide default now lives in the
+    impl-dispatch registry (`repro.core.dispatch`), which models resolve
+    their `Context.impl` against."""
+    from repro.core.dispatch import set_default_impl as _set
+
+    _set(impl)
 
 
 def get_default_impl() -> Impl:
-    return _DEFAULT_IMPL
+    from repro.core.dispatch import get_default_impl as _get
+
+    return _get()
 
 
 def _interpret() -> bool:
@@ -58,7 +64,7 @@ def pfp_dense(
     first_layer: bool = False,
 ):
     """Joint PFP dense for (..., K) x (K, N). Returns (mean, var)."""
-    impl = impl or _DEFAULT_IMPL
+    impl = impl or get_default_impl()
     lead = mu_x.shape[:-1]
     kdim = mu_x.shape[-1]
     n = mu_w.shape[-1]
@@ -91,10 +97,11 @@ def pfp_dense(
 def pfp_activation(mu, var, *, kind: str = "relu", impl: Impl | None = None,
                    block_rows: int = 256, block_cols: int = 512):
     """Fused moment-matched activation for any shape. Returns (mean, srm)."""
-    impl = impl or _DEFAULT_IMPL
+    impl = impl or get_default_impl()
     if impl == "xla":
         fn = {"relu": ref.pfp_relu_ref, "gelu": ref.pfp_gelu_ref,
-              "silu": ref.pfp_silu_ref}[kind]
+              "silu": ref.pfp_silu_ref, "tanh": ref.pfp_tanh_ref,
+              "sigmoid": ref.pfp_sigmoid_ref}[kind]
         return fn(mu, var)
     shape = mu.shape
     cols = shape[-1]
@@ -120,7 +127,7 @@ def pfp_activation(mu, var, *, kind: str = "relu", impl: Impl | None = None,
 
 def pfp_maxpool2d(mu, var, *, impl: Impl | None = None):
     """2x2/2 PFP max pool on NHWC. Returns (mean, var)."""
-    impl = impl or _DEFAULT_IMPL
+    impl = impl or get_default_impl()
     if impl == "xla":
         return ref.pfp_maxpool2d_ref(mu, var)
     return pfp_maxpool2d_pallas(mu, var, interpret=_interpret())
@@ -128,14 +135,107 @@ def pfp_maxpool2d(mu, var, *, impl: Impl | None = None):
 
 def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float, causal: bool = True,
                   impl: Impl | None = None, block_q: int = 128, block_k: int = 128):
-    """Mean-field PFP attention (B, H, T, D). Returns (mean, var)."""
-    impl = impl or _DEFAULT_IMPL
+    """Mean-field PFP attention, q (B, H, Tq, D) x kv (B, Hkv, Tk, D).
+
+    Grouped-query: H % Hkv == 0. The Pallas kernel maps query heads to
+    shared KV tiles in its BlockSpec (no repeated KV buffers); the oracle
+    materializes the repeat. Returns (mean, var)."""
+    impl = impl or get_default_impl()
     if impl == "xla":
+        group = q_mu.shape[1] // k_mu.shape[1]
+        if group > 1:
+            k_mu, v_mu, v_var = (jnp.repeat(a, group, axis=1)
+                                 for a in (k_mu, v_mu, v_var))
         return ref.pfp_attention_ref(q_mu, k_mu, v_mu, v_var, scale, causal)
     return pfp_attention_pallas(
         q_mu, k_mu, v_mu, v_var, scale=scale, causal=causal,
         block_q=block_q, block_k=block_k, interpret=_interpret(),
     )
+
+
+def _norm_2d(mu, second, *, block_rows: int):
+    """Flatten to (rows, d), pad rows to a block multiple and cols to lanes."""
+    d = mu.shape[-1]
+    mu2 = mu.reshape(-1, d)
+    sec2 = second.reshape(-1, d)
+    rows = mu2.shape[0]
+    bm = min(block_rows, _ceil_mult(rows, 8))
+    mu2 = _pad_to(mu2, bm, 0)
+    sec2 = _pad_to(sec2, bm, 0)
+    mu2 = _pad_to(mu2, 128, 1)
+    sec2 = _pad_to(sec2, 128, 1)
+    return mu2, sec2, rows, d, bm
+
+
+def _vec_pad(v, cols):
+    return _pad_to(v.reshape(1, -1), cols, 1)
+
+
+def pfp_rmsnorm(mu, second, gain, *, rep: str = "var", eps: float = 1e-6,
+                act: str | None = None, impl: Impl | None = None,
+                block_rows: int = 256):
+    """Fused PFP RMSNorm over the last axis, any leading shape.
+
+    Returns (mean, second): second is VAR without `act`, SRM with the fused
+    activation epilogue (activation contract).
+    """
+    impl = impl or get_default_impl()
+    if impl == "xla":
+        shape = mu.shape
+        m, v = ref.pfp_rmsnorm_ref(mu.reshape(-1, shape[-1]),
+                                   second.reshape(-1, shape[-1]),
+                                   gain, rep=rep, eps=eps)
+        if act is not None:
+            m, v = pfp_activation(m, v, kind=act, impl="xla")
+        return m.reshape(shape), v.reshape(shape)
+    shape = mu.shape
+    mu2, sec2, rows, d, bm = _norm_2d(mu, second, block_rows=block_rows)
+    mo, so = pfp_rmsnorm_pallas(
+        mu2, sec2, _vec_pad(gain, mu2.shape[1]), rep=rep, d=d, eps=eps,
+        act=act, block_rows=bm, interpret=_interpret())
+    return (mo[:rows, :d].reshape(shape), so[:rows, :d].reshape(shape))
+
+
+def pfp_layernorm(mu, second, gain, bias=None, *, rep: str = "var",
+                  eps: float = 1e-6, act: str | None = None,
+                  impl: Impl | None = None, block_rows: int = 256):
+    """Fused PFP LayerNorm over the last axis, any leading shape."""
+    impl = impl or get_default_impl()
+    if bias is None:
+        bias = jnp.zeros_like(gain)
+    if impl == "xla":
+        shape = mu.shape
+        m, v = ref.pfp_layernorm_ref(mu.reshape(-1, shape[-1]),
+                                     second.reshape(-1, shape[-1]),
+                                     gain, bias, rep=rep, eps=eps)
+        if act is not None:
+            m, v = pfp_activation(m, v, kind=act, impl="xla")
+        return m.reshape(shape), v.reshape(shape)
+    shape = mu.shape
+    mu2, sec2, rows, d, bm = _norm_2d(mu, second, block_rows=block_rows)
+    cols = mu2.shape[1]
+    mo, so = pfp_layernorm_pallas(
+        mu2, sec2, _vec_pad(gain, cols), _vec_pad(bias, cols), rep=rep, d=d,
+        eps=eps, act=act, block_rows=bm, interpret=_interpret())
+    return (mo[:rows, :d].reshape(shape), so[:rows, :d].reshape(shape))
+
+
+def pfp_glu_product(mu_a, srm_a, mu_b, srm_b, *, impl: Impl | None = None,
+                    block_rows: int = 256, block_cols: int = 512):
+    """Fused SRM gated product, any shape. Returns (mean, srm)."""
+    impl = impl or get_default_impl()
+    if impl == "xla":
+        return ref.pfp_glu_ref(mu_a, srm_a, mu_b, srm_b)
+    shape = mu_a.shape
+    cols = shape[-1]
+    args = [a.reshape(-1, cols) for a in (mu_a, srm_a, mu_b, srm_b)]
+    m = args[0].shape[0]
+    bm = min(block_rows, _ceil_mult(m, 8))
+    bn = min(block_cols, _ceil_mult(cols))
+    args = [_pad_to(_pad_to(a, bm, 0), bn, 1) for a in args]
+    mo, so = pfp_glu_pallas(*args, block_rows=bm, block_cols=bn,
+                            interpret=_interpret())
+    return mo[:m, :cols].reshape(shape), so[:m, :cols].reshape(shape)
 
 
 def _ceil_mult(x: int, base: int = 128) -> int:
@@ -147,5 +247,6 @@ def _ceil_mult(x: int, base: int = 128) -> int:
 
 __all__ = [
     "pfp_dense", "pfp_activation", "pfp_maxpool2d", "pfp_attention",
+    "pfp_rmsnorm", "pfp_layernorm", "pfp_glu_product",
     "set_default_impl", "get_default_impl",
 ]

@@ -26,9 +26,7 @@ _SQRT_2 = math.sqrt(2.0)
 _SQRT_2PI = math.sqrt(2.0 * math.pi)
 
 
-def _relu_kernel(mu_ref, var_ref, mu_out_ref, srm_out_ref):
-    mu = mu_ref[...].astype(jnp.float32)
-    var = var_ref[...].astype(jnp.float32)
+def _relu_moments(mu, var):
     safe_var = jnp.maximum(var, VAR_EPS)
     std = jnp.sqrt(safe_var)
     cdf = 0.5 * (1.0 + jax.lax.erf(mu / (std * _SQRT_2)))
@@ -37,17 +35,16 @@ def _relu_kernel(mu_ref, var_ref, mu_out_ref, srm_out_ref):
     srm_out = (safe_var + jnp.square(mu)) * cdf + mu * pdf      # Eq. (9)
     det = var <= VAR_EPS
     det_mean = jnp.maximum(mu, 0.0)
-    mu_out_ref[...] = jnp.where(det, det_mean, mean_out)
-    srm_out_ref[...] = jnp.where(det, jnp.square(det_mean), jnp.maximum(srm_out, 0.0))
+    mean_out = jnp.where(det, det_mean, mean_out)
+    srm_out = jnp.where(det, jnp.square(det_mean), jnp.maximum(srm_out, 0.0))
+    return mean_out, srm_out
 
 
-def _make_gh_kernel(fn, num_nodes: int):
+def _make_gh_moments(fn, num_nodes: int):
     nodes, weights = np.polynomial.hermite.hermgauss(num_nodes)
     weights = weights / math.sqrt(math.pi)
 
-    def kernel(mu_ref, var_ref, mu_out_ref, srm_out_ref):
-        mu = mu_ref[...].astype(jnp.float32)
-        var = var_ref[...].astype(jnp.float32)
+    def moments(mu, var):
         scale = jnp.sqrt(jnp.maximum(var, 0.0)) * _SQRT_2
         acc_m = jnp.zeros_like(mu)
         acc_s = jnp.zeros_like(mu)
@@ -55,19 +52,47 @@ def _make_gh_kernel(fn, num_nodes: int):
             fx = fn(mu + scale * float(xi))
             acc_m = acc_m + float(wi) * fx
             acc_s = acc_s + float(wi) * jnp.square(fx)
-        mu_out_ref[...] = acc_m
-        srm_out_ref[...] = acc_s
+        return acc_m, acc_s
+
+    return moments
+
+
+# In-kernel moment-matching bodies: fn(mu, var) -> (mean, srm) in fp32.
+# Shared with the fused norm kernels (pfp_norms.py activation epilogues).
+MOMENT_FNS = {
+    "relu": _relu_moments,
+    "gelu": _make_gh_moments(jax.nn.gelu, 8),
+    "silu": _make_gh_moments(jax.nn.silu, 8),
+    "tanh": _make_gh_moments(jnp.tanh, 8),
+    "sigmoid": _make_gh_moments(jax.nn.sigmoid, 8),
+}
+
+
+def _make_kernel(kind: str):
+    def kernel(mu_ref, var_ref, mu_out_ref, srm_out_ref):
+        m, s = MOMENT_FNS[kind](
+            mu_ref[...].astype(jnp.float32), var_ref[...].astype(jnp.float32)
+        )
+        mu_out_ref[...] = m
+        srm_out_ref[...] = s
 
     return kernel
 
 
-_KERNELS = {
-    "relu": _relu_kernel,
-    "gelu": _make_gh_kernel(jax.nn.gelu, 8),
-    "silu": _make_gh_kernel(jax.nn.silu, 8),
-    "tanh": _make_gh_kernel(jnp.tanh, 8),
-    "sigmoid": _make_gh_kernel(jax.nn.sigmoid, 8),
-}
+_KERNELS = {kind: _make_kernel(kind) for kind in MOMENT_FNS}
+
+
+def _glu_product_kernel(mu_a_ref, srm_a_ref, mu_b_ref, srm_b_ref,
+                        mu_out_ref, srm_out_ref):
+    """Exact product of independent Gaussians in SRM representation.
+
+    The representation-contract payoff (paper §5): two elementwise
+    multiplies per element, one fused HBM round-trip for both outputs.
+    """
+    mu_out_ref[...] = (mu_a_ref[...].astype(jnp.float32)
+                       * mu_b_ref[...].astype(jnp.float32))
+    srm_out_ref[...] = (srm_a_ref[...].astype(jnp.float32)
+                        * srm_b_ref[...].astype(jnp.float32))
 
 
 @functools.partial(
@@ -99,3 +124,35 @@ def pfp_activation_pallas(
         interpret=interpret,
     )
     return fn(mu, var)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "block_cols", "interpret")
+)
+def pfp_glu_pallas(
+    mu_a,
+    srm_a,
+    mu_b,
+    srm_b,
+    *,
+    block_rows: int = 256,
+    block_cols: int = 512,
+    interpret: bool = False,
+):
+    """Fused SRM gated product: (mu, srm) x (mu, srm) -> (mu, srm), 2D padded."""
+    m, n = mu_a.shape
+    bm, bn = min(block_rows, m), min(block_cols, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    fn = pl.pallas_call(
+        _glu_product_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[spec] * 4,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(mu_a, srm_a, mu_b, srm_b)

@@ -114,8 +114,17 @@ def pfp_attention_pallas(
     block_k: int = 128,
     interpret: bool = False,
 ):
-    """(B, H, Tq, D) x (B, H, Tk, D) -> mean/var (B, H, Tq, D), fp32."""
+    """(B, H, Tq, D) x (B, Hkv, Tk, D) -> mean/var (B, H, Tq, D), fp32.
+
+    Grouped-query friendly: K/V may carry fewer heads (H % Hkv == 0). The
+    query->kv-head mapping happens in the KV BlockSpec index map (head
+    order is kv-major: h = kv * group + g), so grouped K/V are never
+    materialized at H heads — each kernel instance DMAs the shared tile.
+    """
     b, h, tq, d = q_mu.shape
+    hkv = k_mu.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
     tk = k_mu.shape[2]
     bq = min(block_q, tq)
     bk = min(block_k, tk)
@@ -133,13 +142,14 @@ def pfp_attention_pallas(
 
     bh = b * h
     q_mu = q_mu.reshape(bh, tq_p, d)
-    k_mu = k_mu.reshape(bh, tk_p, d)
-    v_mu = v_mu.reshape(bh, tk_p, d)
-    v_var = v_var.reshape(bh, tk_p, d)
+    k_mu = k_mu.reshape(b * hkv, tk_p, d)
+    v_mu = v_mu.reshape(b * hkv, tk_p, d)
+    v_var = v_var.reshape(b * hkv, tk_p, d)
     nk = tk_p // bk
 
     q_spec = pl.BlockSpec((1, bq, d), lambda bh_, i, k_: (bh_, i, 0))
-    kv_spec = pl.BlockSpec((1, bk, d), lambda bh_, i, k_: (bh_, k_, 0))
+    # bh_ = b*H + h with H = Hkv*group  =>  bh_ // group = b*Hkv + h//group.
+    kv_spec = pl.BlockSpec((1, bk, d), lambda bh_, i, k_: (bh_ // group, k_, 0))
     out_spec = pl.BlockSpec((1, bq, d), lambda bh_, i, k_: (bh_, i, 0))
 
     kernel = functools.partial(

@@ -1,0 +1,126 @@
+"""Fused PFP normalization Pallas kernels (RMSNorm / LayerNorm).
+
+Both norms are row-reductions followed by an affine map, so the kernel
+blocks over rows and keeps the full (padded) feature axis resident in
+VMEM: one pass computes the per-token normalizer from the second raw
+moments, applies the deterministic scale to (mean, var), and — the
+joint-operator principle again — optionally fuses the *following*
+moment-matched activation as an epilogue so the normalized tile never
+round-trips through HBM between the two ops.
+
+Padding contract: feature columns are zero-padded to a lane multiple by
+`ops.py`; the kernels divide reductions by the TRUE feature count `d`
+(compile-time constant), and LayerNorm's spread is computed in moment
+form  E[var + mean^2] - mu_tok^2  so zero-padded columns contribute
+exact zeros to every accumulator.
+
+Representation handling is static: `rep` selects whether the `second`
+input holds variances or second raw moments, and the missing one is
+derived in-register exactly like `GaussianTensor.var`/`.srm` would.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gaussian import SRM, VAR
+from repro.kernels.pfp_activations import MOMENT_FNS
+
+
+def _split_reps(mu, second, rep):
+    """(var, srm) from the stored second moment, fp32."""
+    if rep == VAR:
+        return second, second + jnp.square(mu)
+    return second - jnp.square(mu), second
+
+
+def _rmsnorm_kernel(mu_ref, sec_ref, gain_ref, mu_out_ref, sec_out_ref,
+                    *, rep: str, d: int, eps: float, act):
+    mu = mu_ref[...].astype(jnp.float32)
+    sec = sec_ref[...].astype(jnp.float32)
+    var, srm = _split_reps(mu, sec, rep)
+    # E[rms^2] = mean_j E[x_j^2]: normalizer from the SRMs (delta method).
+    norm = jax.lax.rsqrt(
+        jnp.sum(srm, axis=-1, keepdims=True) / d + eps)
+    scale = norm * gain_ref[...].astype(jnp.float32)
+    mean = mu * scale
+    var = var * jnp.square(scale)
+    if act is not None:  # fused activation epilogue: VAR -> SRM
+        mean, var = MOMENT_FNS[act](mean, var)
+    mu_out_ref[...] = mean
+    sec_out_ref[...] = var
+
+
+def _layernorm_kernel(mu_ref, sec_ref, gain_ref, bias_ref,
+                      mu_out_ref, sec_out_ref,
+                      *, rep: str, d: int, eps: float, act):
+    mu = mu_ref[...].astype(jnp.float32)
+    sec = sec_ref[...].astype(jnp.float32)
+    var, srm = _split_reps(mu, sec, rep)
+    mu_tok = jnp.sum(mu, axis=-1, keepdims=True) / d
+    # mean(var + (mu - mu_tok)^2) in moment form (zero-padding safe).
+    spread = (jnp.sum(var + jnp.square(mu), axis=-1, keepdims=True) / d
+              - jnp.square(mu_tok))
+    scale = jax.lax.rsqrt(spread + eps) * gain_ref[...].astype(jnp.float32)
+    mean = (mu - mu_tok) * scale + bias_ref[...].astype(jnp.float32)
+    var = var * jnp.square(scale)
+    if act is not None:
+        mean, var = MOMENT_FNS[act](mean, var)
+    mu_out_ref[...] = mean
+    sec_out_ref[...] = var
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rep", "d", "eps", "act", "block_rows", "interpret"),
+)
+def pfp_rmsnorm_pallas(mu, second, gain, *, rep: str = VAR, d: int,
+                       eps: float = 1e-6, act=None,
+                       block_rows: int = 256, interpret: bool = False):
+    """Fused PFP RMSNorm on (rows, cols_padded). Returns (mean, second).
+
+    Output second moment is VAR without `act`, SRM with it (activation
+    contract). `d` is the true (pre-padding) feature count.
+    """
+    return _norm_call(_rmsnorm_kernel, (mu, second, gain), rep=rep, d=d,
+                      eps=eps, act=act, block_rows=block_rows,
+                      interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rep", "d", "eps", "act", "block_rows", "interpret"),
+)
+def pfp_layernorm_pallas(mu, second, gain, bias, *, rep: str = VAR, d: int,
+                         eps: float = 1e-6, act=None,
+                         block_rows: int = 256, interpret: bool = False):
+    """Fused PFP LayerNorm on (rows, cols_padded). Returns (mean, second)."""
+    return _norm_call(_layernorm_kernel, (mu, second, gain, bias), rep=rep,
+                      d=d, eps=eps, act=act, block_rows=block_rows,
+                      interpret=interpret)
+
+
+def _norm_call(kernel, args, *, rep, d, eps, act, block_rows, interpret):
+    assert rep in (VAR, SRM), rep
+    mu = args[0]
+    m, n = mu.shape
+    bm = min(block_rows, m)
+    assert m % bm == 0, (m, bm)
+    row_spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((1, n), lambda i: (0, 0))  # gain/bias broadcast
+    in_specs = [row_spec, row_spec] + [vec_spec] * (len(args) - 2)
+    fn = pl.pallas_call(
+        functools.partial(kernel, rep=rep, d=d, eps=eps, act=act),
+        grid=(m // bm,),
+        in_specs=in_specs,
+        out_specs=[row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(*args)

@@ -50,6 +50,54 @@ def pfp_silu_ref(mu, var, num_nodes: int = 8):
     )
 
 
+def pfp_tanh_ref(mu, var, num_nodes: int = 8):
+    return pfp_math.tanh_moments(
+        mu.astype(jnp.float32), var.astype(jnp.float32), num_nodes
+    )
+
+
+def pfp_sigmoid_ref(mu, var, num_nodes: int = 8):
+    return pfp_math.sigmoid_moments(
+        mu.astype(jnp.float32), var.astype(jnp.float32), num_nodes
+    )
+
+
+# -- pfp_norms ---------------------------------------------------------------
+def _var_srm(mu, second, rep):
+    if rep == "var":
+        return second, second + jnp.square(mu)
+    return second - jnp.square(mu), second
+
+
+def pfp_rmsnorm_ref(mu, second, gain, *, rep="var", eps=1e-6):
+    """Delta-method RMSNorm oracle: (mean, var) out. Rows x features."""
+    f32 = jnp.float32
+    mu, second = mu.astype(f32), second.astype(f32)
+    var, srm = _var_srm(mu, second, rep)
+    norm = jax.lax.rsqrt(jnp.mean(srm, axis=-1, keepdims=True) + eps)
+    scale = norm * gain.astype(f32)
+    return mu * scale, var * jnp.square(scale)
+
+
+def pfp_layernorm_ref(mu, second, gain, bias, *, rep="var", eps=1e-6):
+    """Delta-method LayerNorm oracle: (mean, var) out. Rows x features."""
+    f32 = jnp.float32
+    mu, second = mu.astype(f32), second.astype(f32)
+    var, srm = _var_srm(mu, second, rep)
+    mu_tok = jnp.mean(mu, axis=-1, keepdims=True)
+    spread = jnp.mean(var + jnp.square(mu - mu_tok), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(spread + eps) * gain.astype(f32)
+    return (mu - mu_tok) * scale + bias.astype(f32), var * jnp.square(scale)
+
+
+# -- pfp_glu -----------------------------------------------------------------
+def pfp_glu_ref(mu_a, srm_a, mu_b, srm_b):
+    """Exact SRM product of independent Gaussians: (mean, srm) out."""
+    f32 = jnp.float32
+    return (mu_a.astype(f32) * mu_b.astype(f32),
+            srm_a.astype(f32) * srm_b.astype(f32))
+
+
 # -- pfp_maxpool -------------------------------------------------------------
 def pfp_maxpool2d_ref(mu, var):
     """2x2/stride-2 PFP max pool on NHWC via Clark tournament (VAR->VAR)."""

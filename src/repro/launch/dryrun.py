@@ -36,7 +36,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__),
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              mode_override=None, save: bool = True, tag: str = "",
-             formulation: str = "srm", serve_params: str = "auto") -> dict:
+             formulation: str = "srm", serve_params: str = "auto",
+             impl: str = None) -> dict:
     mesh_name = "multipod" if multi_pod else "pod"
     ok, why = cell_is_applicable(arch, shape_name)
     result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -53,6 +54,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         prog = build_program(arch, shape_name, mesh,
                              mode_override=mode_override,
                              formulation=formulation,
+                             impl=impl,
                              serve_params=serve_params)
         with mesh:
             jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings,
@@ -76,6 +78,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         # XLA's cost_analysis counts while-loop bodies ONCE (a scanned
         # 36-layer model shows ~36x too cheap) — kept for reference only.
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0] if cost else {}
         xla_flops = float(cost.get("flops", 0.0))
 
         # Trip-count-correct costs: exact dot FLOPs from the jaxpr (global /
@@ -104,6 +108,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             status="ok",
             chips=chips,
             program=prog.name,
+            impl=prog.meta.get("impl"),
             lower_s=round(t_lower, 2),
             compile_s=round(t_compile, 2),
             flops_per_device=flops,
@@ -171,6 +176,8 @@ def main():
                     help="override program mode (svi/pfp/deterministic)")
     ap.add_argument("--tag", default="", help="result-file suffix")
     ap.add_argument("--formulation", default="srm", choices=["srm", "var"])
+    ap.add_argument("--impl", default=None, choices=["xla", "kernel"],
+                    help="PFP operator implementation (core/dispatch.py)")
     ap.add_argument("--serve-params", default="auto",
                     choices=["auto", "tp", "fsdp"])
     ap.add_argument("--all", action="store_true")
@@ -187,6 +194,7 @@ def main():
                 r = run_cell(arch, shape, multi_pod=mp,
                              mode_override=args.mode, tag=args.tag,
                              formulation=args.formulation,
+                             impl=args.impl,
                              serve_params=args.serve_params)
                 statuses.append((arch, shape, r["mesh"], r["status"]))
     bad = [s for s in statuses if s[3] == "error"]

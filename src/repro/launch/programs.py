@@ -95,6 +95,7 @@ def build_program(arch: str, shape_name: str, mesh, *,
                   mode_override: Optional[str] = None,
                   query_chunk: Optional[int] = None,
                   formulation: str = "srm",
+                  impl: Optional[str] = None,
                   serve_params: str = "tp",
                   logical_rules: Optional[dict] = None) -> Program:
     cfg = get_config(arch)
@@ -144,6 +145,12 @@ def build_program(arch: str, shape_name: str, mesh, *,
     pjit_hints.set_rules(rules)
 
     meta["formulation"] = formulation
+    # Which registered PFP operator implementation the serve programs run
+    # (core/dispatch.py); recorded so the dry-run result JSON names the
+    # operator stack that was benchmarked.
+    from repro.core.dispatch import resolve_impl
+
+    meta["impl"] = resolve_impl(impl)
     if serve_params == "auto" or serve_params == "tp":
         # TP-only weights kill the per-layer AG/AR storm (§Perf cell A) but
         # replicate params over 'data': only safe when the bf16 (mu, srm)
@@ -158,9 +165,9 @@ def build_program(arch: str, shape_name: str, mesh, *,
         return _train_program(cfg, shape, mesh, meta, mode_override)
     if shape.kind == "prefill":
         return _prefill_program(cfg, shape, mesh, meta, mode_override,
-                                formulation, serve_tp)
+                                formulation, serve_tp, meta["impl"])
     return _decode_program(cfg, shape, mesh, meta, mode_override, formulation,
-                           serve_tp)
+                           serve_tp, meta["impl"])
 
 
 def _train_program(cfg, shape, mesh, meta, mode_override) -> Program:
@@ -238,10 +245,11 @@ def _train_program(cfg, shape, mesh, meta, mode_override) -> Program:
 
 
 def _prefill_program(cfg, shape, mesh, meta, mode_override,
-                     formulation="srm", serve_tp=True) -> Program:
+                     formulation="srm", serve_tp=True,
+                     impl=None) -> Program:
     mode = Mode.parse(mode_override) if mode_override else Mode.PFP
     fn = make_prefill_step(cfg, max_len=shape.seq_len, mode=mode,
-                           formulation=formulation)
+                           formulation=formulation, impl=impl)
     param_specs = (pfp_param_specs(cfg) if mode == Mode.PFP
                    else _sds(variational_param_specs(cfg), jnp.bfloat16))
     batch_specs = input_specs(cfg, shape)
@@ -258,9 +266,10 @@ def _prefill_program(cfg, shape, mesh, meta, mode_override,
 
 
 def _decode_program(cfg, shape, mesh, meta, mode_override,
-                    formulation="srm", serve_tp=True) -> Program:
+                    formulation="srm", serve_tp=True,
+                    impl=None) -> Program:
     mode = Mode.parse(mode_override) if mode_override else Mode.PFP
-    fn = make_serve_step(cfg, mode=mode, formulation=formulation)
+    fn = make_serve_step(cfg, mode=mode, formulation=formulation, impl=impl)
     param_specs = (pfp_param_specs(cfg) if mode == Mode.PFP
                    else _sds(variational_param_specs(cfg), jnp.bfloat16))
     batch_specs = input_specs(cfg, shape)

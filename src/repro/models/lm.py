@@ -87,7 +87,8 @@ def _block_init(kind: str, cfg: ModelConfig, key):
 
 
 def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
-                 positions, image_emb=None, state=None, cache_len=None):
+                 positions, image_emb=None, state=None, cache_len=None,
+                 standard_positions=False):
     """Returns (x, new_state, aux_loss)."""
     norm_apply = NORMS[cfg.norm][1]
     aux = jnp.zeros((), jnp.float32)
@@ -106,6 +107,7 @@ def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
             cross_kv=image_emb if kind == "cross" else None,
             cache=state if kind != "cross" else None,
             cache_len=cache_len,
+            standard_positions=standard_positions,
         )
         x = residual_add(x, attn_out)
         h = norm_apply(params["ln2"], x, ctx)
@@ -201,9 +203,13 @@ def _embed_inputs(params, cfg: ModelConfig, inputs, ctx: Context):
             x.dtype)
         x = residual_add(x, jnp.broadcast_to(pos_emb, (b, t, cfg.d_model))) \
             if is_gaussian(x) else x + pos_emb
+    # Whether positions are the default 0..T-1 arange is a *static* fact
+    # (did the caller supply them?): the kernel-attention fast path masks
+    # causally by index and is only valid for the default layout.
+    standard_positions = "positions" not in inputs
     positions = inputs.get(
         "positions", jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t)))
-    return x, positions
+    return x, positions, standard_positions
 
 
 def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
@@ -214,7 +220,7 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
     per-layer states and get back the filled ones alongside the output.
     Returns (logits, aux_loss, new_states).
     """
-    x, positions = _embed_inputs(params, cfg, inputs, ctx)
+    x, positions, standard_positions = _embed_inputs(params, cfg, inputs, ctx)
     x = constrain(x, "batch", "seq", "embed")
     image_emb = inputs.get("image_embeddings")
     if image_emb is not None and ctx.mode == Mode.PFP:
@@ -227,7 +233,8 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
         st = None if states is None else states.get(f"head{i}")
         x, new_st, aux = _block_apply("attn", params[f"head{i}"], x,
                                       ctx.with_layer(1000 + i), cfg,
-                                      positions=positions, state=st)
+                                      positions=positions, state=st,
+                                      standard_positions=standard_positions)
         aux_total = aux_total + aux
         if collect_states and states is not None:
             states[f"head{i}"] = new_st
@@ -252,7 +259,8 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                 def run_block(x_, gp_i, st_, _kind=kind):
                     return _block_apply(
                         _kind, gp_i, x_, lctx, cfg,
-                        positions=positions, image_emb=image_emb, state=st_)
+                        positions=positions, image_emb=image_emb, state=st_,
+                        standard_positions=standard_positions)
 
                 # Nested remat: per-layer checkpoints inside the remat'd
                 # group bound the backward live-set to ONE layer.
@@ -281,7 +289,8 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
         x, new_st, aux = _block_apply(kind, params[f"tail{i}"], x,
                                       ctx.with_layer(2000 + i), cfg,
                                       positions=positions,
-                                      image_emb=image_emb, state=st)
+                                      image_emb=image_emb, state=st,
+                                      standard_positions=standard_positions)
         aux_total = aux_total + aux
         if collect_states and states is not None:
             states[f"tail{i}"] = new_st

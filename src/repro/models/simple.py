@@ -9,9 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.gaussian import GaussianTensor, VAR, is_gaussian
-from repro.core.pfp_layers import (pfp_activation, pfp_conv2d_im2col,
-                                   pfp_maxpool2d)
+from repro.core import dispatch
+from repro.core.gaussian import GaussianTensor, is_gaussian
 from repro.nn.layers import activation_apply, dense_apply, dense_init
 from repro.nn.module import Context, init_bayes, resolve_weight
 
@@ -33,8 +32,7 @@ def mlp_forward(params, x, ctx: Context):
     h = x  # deterministic input -> first PFP layer uses Eq. 13
     for i in range(n):
         h = dense_apply(params[f"dense{i}"], h, ctx)
-        h = (pfp_activation(h, "relu") if is_gaussian(h)
-             else activation_apply(h, "relu", ctx))
+        h = activation_apply(h, "relu", ctx)
     return dense_apply(params[f"dense{n}"], h, ctx)
 
 
@@ -51,9 +49,9 @@ def conv_apply(params, x, ctx: Context, *, padding: str = "SAME"):
     w = resolve_weight(params["w"], ctx)
     b = resolve_weight(params["b"], ctx)
     if isinstance(w, GaussianTensor):
-        out = pfp_conv2d_im2col(x, w, padding=padding,
-                                formulation=ctx.formulation)
-        return GaussianTensor(out.mean + b.mean, out.var + b.var, VAR)
+        return dispatch.pfp_conv2d_im2col(x, w, b, padding=padding,
+                                          formulation=ctx.formulation,
+                                          impl=ctx.impl)
     xm = x.mean if is_gaussian(x) else x
     y = jax.lax.conv_general_dilated(
         xm, w, (1, 1), padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -76,31 +74,22 @@ def lenet5_init(key, *, num_classes: int = 10, in_channels: int = 1,
 
 def _maxpool(x, ctx: Context):
     if is_gaussian(x):
-        return pfp_maxpool2d(x.to_var())
+        return dispatch.pfp_maxpool2d(x, impl=ctx.impl)
     return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-
-
-def _act(x, ctx: Context, kind="relu"):
-    if is_gaussian(x):
-        return pfp_activation(x, kind)
-    return activation_apply(x, kind, ctx)
 
 
 def lenet5_forward(params, x, ctx: Context):
     """x: (B, 28, 28, 1) deterministic images."""
     h = conv_apply(params["conv0"], x, ctx)            # (B, 28, 28, 6)
-    h = _act(h, ctx)
-    h = _maxpool(h.to_var() if is_gaussian(h) else h, ctx)   # (B, 14, 14, 6)
+    h = activation_apply(h, "relu", ctx)
+    h = _maxpool(h, ctx)                               # (B, 14, 14, 6)
     h = conv_apply(params["conv1"], h, ctx)            # (B, 14, 14, 16)
-    h = _act(h, ctx)
-    h = _maxpool(h.to_var() if is_gaussian(h) else h, ctx)   # (B, 7, 7, 16)
-    if is_gaussian(h):
-        h = h.reshape(h.shape[0], -1)
-    else:
-        h = h.reshape(h.shape[0], -1)
-    h = dense_apply(params["dense0"], h.to_srm() if is_gaussian(h) else h, ctx)
-    h = _act(h, ctx)
+    h = activation_apply(h, "relu", ctx)
+    h = _maxpool(h, ctx)                               # (B, 7, 7, 16)
+    h = h.reshape(h.shape[0], -1)
+    h = dense_apply(params["dense0"], h, ctx)
+    h = activation_apply(h, "relu", ctx)
     h = dense_apply(params["dense1"], h, ctx)
-    h = _act(h, ctx)
+    h = activation_apply(h, "relu", ctx)
     return dense_apply(params["dense2"], h, ctx)

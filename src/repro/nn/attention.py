@@ -17,7 +17,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import pfp_math
+from repro.core import dispatch, pfp_math
 from repro.core.gaussian import GaussianTensor, VAR, is_gaussian
 from repro.nn.layers import dense_apply, dense_init, rope_angles, rope_apply
 from repro.nn.module import Context
@@ -94,6 +94,7 @@ def attention_apply(
     cross_kv=None,                     # (B, S, d_model) overrides self K/V
     cache: Optional[KVCache] = None,   # decode: append at `positions`
     cache_len: Optional[jax.Array] = None,  # valid entries in cache
+    standard_positions: bool = False,  # static: positions are 0..Tq-1 arange
 ):
     """Returns (output, new_cache|None). x: (B, Tq, d_model) or Gaussian."""
     scale = head_dim ** -0.5
@@ -165,12 +166,28 @@ def attention_apply(
     q_var = _group(q.var) if (pfp and ctx.attention_mode ==
                               "variance_corrected") else None
 
-    out_mu, out_var = _attention_core(
-        q_mu, q_var, k_mu, v_mu, v_var if pfp else None,
-        q_pos=positions, k_pos=k_pos, k_valid=k_valid,
-        causal=causal, window=window, scale=scale,
-        chunk_size=_QUERY_CHUNK,
-    )
+    # Registry fast path: mean-field PFP attention with plain (right-aligned)
+    # causal or full masking lowers to the flash-style Pallas kernel via the
+    # impl-dispatch registry. Cases the kernel's index-based mask cannot
+    # express keep the chunked XLA core below (which is also the registered
+    # 'xla' implementation's production analogue): sliding windows, per-batch
+    # cache validity, probit-corrected scores — and causal masking under
+    # caller-supplied position ids (packed sequences remap positions, and the
+    # kernel masks by index, not position; `standard_positions` is the
+    # caller's static promise that positions are the default arange).
+    if (pfp and dispatch.resolve_impl(ctx.impl) == "kernel"
+            and q_var is None and window is None and k_valid is None
+            and (standard_positions or not causal)):
+        out_mu, out_var = _attention_registry(
+            q_mu, k_mu, v_mu, v_var, group=group, scale=scale, causal=causal,
+            impl=ctx.impl)
+    else:
+        out_mu, out_var = _attention_core(
+            q_mu, q_var, k_mu, v_mu, v_var if pfp else None,
+            q_pos=positions, k_pos=k_pos, k_valid=k_valid,
+            causal=causal, window=window, scale=scale,
+            chunk_size=_QUERY_CHUNK,
+        )
     b = out_mu.shape[0]
     out_mu = out_mu.reshape(b, num_heads, -1, head_dim)
     if pfp:
@@ -187,6 +204,23 @@ def attention_apply(
 # Query-block size for the chunked (flash-style at XLA level) path: the
 # (bq, Tk) score tile is the peak attention memory, never (Tq, Tk).
 _QUERY_CHUNK = 1024
+
+
+def _attention_registry(q_mu, k_mu, v_mu, v_var, *, group, scale, causal,
+                        impl):
+    """Dispatch grouped attention through the registry op.
+
+    Queries collapse their (Hkv, G) grouping into kv-major full heads; K/V
+    stay at Hkv heads — the registry op is GQA-aware and the Pallas kernel
+    maps query head -> shared KV tile in its BlockSpec index map, so no
+    repeated KV buffer is materialized.
+    """
+    b, hkv, g, tq, dh = q_mu.shape
+    qf = q_mu.reshape(b, hkv * g, tq, dh)
+    out_mu, out_var = dispatch.pfp_attention(
+        qf, k_mu, v_mu, v_var, scale=scale, causal=causal, impl=impl)
+    return (out_mu.reshape(b, hkv, g, tq, dh),
+            out_var.reshape(b, hkv, g, tq, dh))
 
 
 def _attention_core(q_mu, q_var, k_mu, v_mu, v_var, *, q_pos, k_pos,

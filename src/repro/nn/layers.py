@@ -2,21 +2,21 @@
 
 Each layer resolves its Bayesian parameters through the execution context:
 DETERMINISTIC/SVI paths run plain jnp ops on sampled/mean weights; the PFP
-path runs the moment-propagating primitives from `repro.core.pfp_layers`.
-A layer therefore *is* the paper's "custom operator", selected at trace
-time — one model definition, three lowered programs.
+path routes every moment-propagating op through the impl-dispatch registry
+(`repro.core.dispatch`), so `ctx.impl` selects the XLA graph or the Pallas
+kernel stack per forward. A layer therefore *is* the paper's "custom
+operator", selected at trace time — one model definition, three lowered
+programs (and two operator backends for the PFP one).
 """
 from __future__ import annotations
-
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.gaussian import GaussianTensor, SRM, VAR, is_gaussian
-from repro.core import pfp_layers
-from repro.core.modes import Mode
-from repro.nn.module import Context, init_bayes, init_deterministic, resolve_weight
+from repro.core import dispatch
+from repro.core.dispatch import DETERMINISTIC_ACTIVATIONS
+from repro.core.gaussian import GaussianTensor, VAR, is_gaussian
+from repro.nn.module import Context, init_bayes, resolve_weight
 
 
 # -- dense --------------------------------------------------------------------
@@ -35,13 +35,8 @@ def dense_apply(params, x, ctx: Context):
     w = resolve_weight(params["w"], ctx)
     b = resolve_weight(params.get("b"), ctx) if "b" in params else None
     if isinstance(w, GaussianTensor):  # PFP path
-        out = pfp_layers.pfp_dense(x, w.to_srm(), formulation=ctx.formulation)
-        if b is not None:
-            if isinstance(b, GaussianTensor):  # probabilistic bias (paper §5)
-                out = GaussianTensor(out.mean + b.mean, out.var + b.var, VAR)
-            else:  # deterministic bias
-                out = GaussianTensor(out.mean + b, out.var, VAR)
-        return out
+        return dispatch.pfp_dense(x, w, b, formulation=ctx.formulation,
+                                  impl=ctx.impl)
     y = (x.mean if is_gaussian(x) else x) @ w
     if b is not None:
         y = y + b
@@ -58,7 +53,7 @@ def embedding_init(key, vocab: int, d_model: int, *, sigma_init=1e-4,
 def embedding_apply(params, ids, ctx: Context):
     t = resolve_weight(params["table"], ctx)
     if isinstance(t, GaussianTensor):
-        return pfp_layers.pfp_embedding(t.to_var(), ids)
+        return dispatch.pfp_embedding(t, ids, impl=ctx.impl)
     return t[ids]
 
 
@@ -70,7 +65,7 @@ def rmsnorm_init(d: int, dtype=jnp.float32):
 def rmsnorm_apply(params, x, ctx: Context, eps: float = 1e-6):
     g = params["g"].astype(x.dtype)  # keep bf16 activations bf16
     if is_gaussian(x):
-        return pfp_layers.pfp_rmsnorm(x, g, eps=eps)
+        return dispatch.pfp_rmsnorm(x, g, eps=eps, impl=ctx.impl)
     norm = jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
     return x * norm * g
 
@@ -83,7 +78,7 @@ def layernorm_apply(params, x, ctx: Context, eps: float = 1e-6):
     g = params["g"].astype(x.dtype)
     b = params["b"].astype(x.dtype)
     if is_gaussian(x):
-        return pfp_layers.pfp_layernorm(x, g, bias=b, eps=eps)
+        return dispatch.pfp_layernorm(x, g, b, eps=eps, impl=ctx.impl)
     mu = jnp.mean(x, axis=-1, keepdims=True)
     var = jnp.var(x, axis=-1, keepdims=True)
     return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
@@ -98,16 +93,16 @@ NORMS = {
 # -- activations -----------------------------------------------------------------
 def activation_apply(x, kind: str, ctx: Context):
     if is_gaussian(x):
-        return pfp_layers.pfp_activation(x, kind)
-    return pfp_layers.DETERMINISTIC_ACTIVATIONS[kind](x)
+        return dispatch.pfp_activation(x, kind, impl=ctx.impl)
+    return DETERMINISTIC_ACTIVATIONS[kind](x)
 
 
 def glu_apply(gate, up, act_kind: str, ctx: Context):
     """Gated linear unit: act(gate) * up — SwiGLU/GeGLU."""
     if is_gaussian(gate):
-        g = pfp_layers.pfp_activation(gate, act_kind)       # VAR -> SRM
-        return pfp_layers.pfp_glu_product(g, up.to_srm())   # exact product
-    return pfp_layers.DETERMINISTIC_ACTIVATIONS[act_kind](gate) * up
+        g = dispatch.pfp_activation(gate, act_kind, impl=ctx.impl)  # VAR -> SRM
+        return dispatch.pfp_glu_product(g, up, impl=ctx.impl)       # exact
+    return DETERMINISTIC_ACTIVATIONS[act_kind](gate) * up
 
 
 # -- rotary position embeddings ----------------------------------------------------
@@ -145,7 +140,5 @@ def sinusoidal_embedding(positions, d_model: int):
 # -- residual ---------------------------------------------------------------------
 def residual_add(x, y):
     if is_gaussian(x) or is_gaussian(y):
-        from repro.core.gaussian import as_gaussian
-
-        return pfp_layers.pfp_residual(as_gaussian(x), as_gaussian(y))
+        return dispatch.pfp_residual(x, y)
     return x + y

@@ -45,7 +45,10 @@ class Context:
     key: Optional[jax.Array] = None
     formulation: str = "srm"          # 'srm' (Eq. 12) | 'var' (Eq. 7)
     attention_mode: str = "mean_field"
-    impl: str = "xla"                 # 'xla' | 'kernel' — kernels/ops dispatch
+    # 'xla' | 'kernel' | None — which registered implementation every PFP op
+    # resolves to (core/dispatch.py). None follows the process-wide default
+    # set by `repro.core.dispatch.set_default_impl`.
+    impl: Optional[str] = None
     layer_tag: Any = 0                # folded into SVI sample keys (scan idx)
     compute_dtype: Any = None         # cast weights at use (bf16 training)
     _counter: int = dataclasses.field(default=0, repr=False)

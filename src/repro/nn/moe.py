@@ -28,8 +28,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.core.gaussian import GaussianTensor, SRM, VAR, is_gaussian
-from repro.core.pfp_layers import pfp_einsum, pfp_activation, pfp_glu_product
 from repro.nn.layers import activation_apply, dense_apply, dense_init
 from repro.nn.mlp import mlp_apply, mlp_init
 from repro.nn.module import Context, init_bayes, resolve_weight
@@ -65,8 +65,8 @@ def _expert_dense(param, x, ctx: Context):
     """Batched per-expert contraction: (E,C,din) x (E,din,dout)."""
     w = resolve_weight(param, ctx)
     if isinstance(w, GaussianTensor):
-        return pfp_einsum("ecd,edf->ecf", x, w.to_srm(),
-                          formulation=ctx.formulation)
+        return dispatch.pfp_einsum("ecd,edf->ecf", x, w,
+                                   formulation=ctx.formulation, impl=ctx.impl)
     xv = x.mean if is_gaussian(x) else x
     return jnp.einsum("ecd,edf->ecf", xv, w)
 
@@ -76,8 +76,8 @@ def _expert_mlp(params, x, ctx: Context, activation: str):
     if "w_gate" in params:
         gate = _expert_dense(params["w_gate"], x, ctx)
         if is_gaussian(gate):
-            g = pfp_activation(gate, activation)
-            h = pfp_glu_product(g, up.to_srm())
+            g = dispatch.pfp_activation(gate, activation, impl=ctx.impl)
+            h = dispatch.pfp_glu_product(g, up, impl=ctx.impl)
         else:
             h = activation_apply(gate, activation, ctx) * up
     else:

@@ -28,8 +28,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.core.gaussian import GaussianTensor, SRM, VAR, is_gaussian
-from repro.core.pfp_layers import pfp_activation, pfp_glu_product
 from repro.nn.layers import activation_apply, dense_apply, dense_init
 from repro.nn.module import Context, init_bayes, resolve_weight
 
@@ -80,13 +80,9 @@ def _causal_depthwise_conv(u, conv_param, ctx: Context,
         )                                                  # (W, B, T, R)
 
     if isinstance(w, GaussianTensor):  # PFP: SRM-formulation conv (Eq. 12 analogue)
-        mu_taps = _shift_stack(u.mean, state_mean)
-        srm_taps = _shift_stack(u.srm, state_srm)
-        w_srm = w.srm
-        mu = jnp.einsum("wbtr,wr->btr", mu_taps, w.mean)
-        var = jnp.einsum("wbtr,wr->btr", srm_taps, w_srm) - jnp.einsum(
-            "wbtr,wr->btr", jnp.square(mu_taps), jnp.square(w.mean))
-        return GaussianTensor(mu, var, VAR)
+        taps = GaussianTensor(_shift_stack(u.mean, state_mean),
+                              _shift_stack(u.srm, state_srm), SRM)
+        return dispatch.pfp_einsum("wbtr,wr->btr", taps, w, impl=ctx.impl)
     taps = _shift_stack(u, state_mean)
     return jnp.einsum("wbtr,wr->btr", taps, w)
 
@@ -149,8 +145,8 @@ def rglru_block_apply(params, x, ctx: Context, *,
 
     # Merge with GeLU branch and project out.
     if pfp:
-        y_act = pfp_activation(y, "gelu")                  # VAR -> SRM
-        merged = pfp_glu_product(y_act, h.to_srm())
+        y_act = dispatch.pfp_activation(y, "gelu", impl=ctx.impl)  # VAR -> SRM
+        merged = dispatch.pfp_glu_product(y_act, h, impl=ctx.impl)
     else:
         merged = activation_apply(y, "gelu", ctx) * h
     out = dense_apply(params["w_out"], merged, ctx)

@@ -28,9 +28,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.core.gaussian import GaussianTensor, SRM, VAR, is_gaussian
-from repro.core.pfp_layers import pfp_activation, pfp_glu_product
-from repro.nn.layers import activation_apply, dense_apply, dense_init, rmsnorm_apply
+from repro.nn.layers import dense_apply, dense_init, rmsnorm_apply
 from repro.nn.module import Context, resolve_weight
 
 
@@ -167,8 +167,9 @@ def mamba2_apply(params, x, ctx: Context, *, d_state: int = 128,
         pre_m = jnp.einsum("wbtr,wr->btr", t_m, w_x)
         pre_v = jnp.einsum("wbtr,wr->btr", t_s, w_x_srm) - jnp.einsum(
             "wbtr,wr->btr", jnp.square(t_m), jnp.square(w_x))
-        act = pfp_activation(
-            GaussianTensor(pre_m, jnp.maximum(pre_v, 0.0), VAR), "silu")
+        act = dispatch.pfp_activation(
+            GaussianTensor(pre_m, jnp.maximum(pre_v, 0.0), VAR), "silu",
+            impl=ctx.impl)
         xin_gauss = act.to_var()
     # dt, decay coefficients (mean path).
     dt = jax.nn.softplus(dt_m + params["dt_bias"].astype(dt_m.dtype))  # (B,T,H)
@@ -229,8 +230,8 @@ def mamba2_apply(params, x, ctx: Context, *, d_state: int = 128,
         y_v = y_v + xv * jnp.square(d_skip)
         y = GaussianTensor(from_heads(y_m), jnp.maximum(from_heads(y_v), 0.0), VAR)
         z = GaussianTensor(z_m, z_v, VAR)
-        z_act = pfp_activation(z, "silu")
-        gated = pfp_glu_product(z_act, y.to_srm())
+        z_act = dispatch.pfp_activation(z, "silu", impl=ctx.impl)
+        gated = dispatch.pfp_glu_product(z_act, y, impl=ctx.impl)
         normed = rmsnorm_apply({"g": params["norm_g"]}, gated.to_var(), ctx)
     else:
         xm = to_heads(xin_m2)

@@ -56,15 +56,18 @@ def uncertainty_decode(logit_mean, logit_var, key, *,
 
 def make_serve_step(cfg: ModelConfig, *, mode: Mode = Mode.PFP,
                     attention_mode: str = "mean_field",
-                    formulation: str = "srm"):
+                    formulation: str = "srm", impl: str | None = None):
     """Returns serve_step(params, inputs, states) -> (logits, new_states).
 
     This is the function the dry-run lowers for decode_* shapes: one new
-    token against a seq_len-sized state.
+    token against a seq_len-sized state. ``impl`` selects the PFP operator
+    implementation ('xla' | 'kernel' | None = process default) via the
+    impl-dispatch registry.
     """
     def serve_step(params, inputs, states):
         ctx = Context(mode=mode, attention_mode=attention_mode,
-                      formulation=formulation, compute_dtype=jnp.bfloat16)
+                      formulation=formulation, impl=impl,
+                      compute_dtype=jnp.bfloat16)
         logits, new_states = lm.decode_step(params, cfg, inputs, states, ctx)
         if is_gaussian(logits):
             return (logits.mean, logits.var), new_states
@@ -74,9 +77,10 @@ def make_serve_step(cfg: ModelConfig, *, mode: Mode = Mode.PFP,
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int, *,
-                      mode: Mode = Mode.PFP, formulation: str = "srm"):
+                      mode: Mode = Mode.PFP, formulation: str = "srm",
+                      impl: str | None = None):
     def prefill_step(params, inputs):
-        ctx = Context(mode=mode, formulation=formulation,
+        ctx = Context(mode=mode, formulation=formulation, impl=impl,
                       compute_dtype=jnp.bfloat16)
         last, states = lm.prefill(params, cfg, inputs, ctx, max_len)
         if is_gaussian(last):

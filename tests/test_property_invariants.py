@@ -1,8 +1,16 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Requires the optional `hypothesis` dev dependency (requirements-dev.txt);
+the module is skipped cleanly when it is absent so the tier-1 suite stays
+runnable from a bare runtime image.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import pfp_math
 from repro.core.gaussian import GaussianTensor, SRM, VAR
