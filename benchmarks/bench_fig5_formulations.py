@@ -16,7 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, schedule_note, time_fn
 from repro.core import dispatch
 from repro.core.gaussian import GaussianTensor, SRM, VAR
 
@@ -74,7 +74,9 @@ def run(quick: bool = True, impl=None):
                      + time_fn(separate_var, mu_x, var_x, mu_w, var_w))
             tag = f"b{b}_{k}x{n}"
             lines.append(emit(f"fig5/joint_srm/{tag}", t_joint_srm,
-                              "Eq.12 3-matmul", impl=impl))
+                              "Eq.12 3-matmul", impl=impl,
+                              schedule=schedule_note(joint_srm, mu_x, srm_x,
+                                                     mu_w, srm_w, impl=impl)))
             lines.append(emit(f"fig5/joint_var/{tag}", t_joint_var,
                               "Eq.7 4-matmul (xla fallback under kernel)",
                               impl=impl))

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, schedule_note, time_fn
 from repro.bayes.convert import svi_to_pfp
 from repro.core.modes import Mode
 from repro.models.simple import mlp_forward, mlp_init
@@ -47,7 +47,8 @@ def run(quick: bool = True):
         t_svi = time_fn(svi_fn, x, key, iters=5)
         lines.append(emit(f"fig7/det/b{b}", t_det, ""))
         lines.append(emit(f"fig7/pfp/b{b}", t_pfp,
-                          f"vs_det={t_pfp / t_det:.1f}x_slower"))
+                          f"vs_det={t_pfp / t_det:.1f}x_slower",
+                          schedule=schedule_note(pfp_fn, x)))
         lines.append(emit(f"fig7/svi30/b{b}", t_svi,
                           f"pfp_speedup={t_svi / t_pfp:.0f}x"))
     return lines

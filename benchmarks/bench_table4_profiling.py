@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, schedule_note, time_fn
 from repro.bayes.convert import svi_to_pfp
 from repro.core.dispatch import (pfp_activation, pfp_conv2d_im2col,
                                  pfp_dense, pfp_maxpool2d)
@@ -51,10 +51,12 @@ def run(quick: bool = True):
     layers.append(("dense2", f_d2, (h3,)))
 
     times = {n: time_fn(f, *a) for n, f, a in layers}
+    scheds = {n: schedule_note(f, *a) for n, f, a in layers}
     total = sum(times.values())
     for n, t in times.items():
         lines.append(emit(f"table4/mlp/{n}", t,
-                          f"fraction={t / total:.2%}"))
+                          f"fraction={t / total:.2%}",
+                          schedule=scheds[n]))
     lines.append(emit("table4/mlp/total", total, ""))
 
     # ---- LeNet-5 --------------------------------------------------------
@@ -84,10 +86,12 @@ def run(quick: bool = True):
         ("dense0", f_fd, (flat,)),
     ]
     times = {n: time_fn(f, *a) for n, f, a in lenet_layers}
+    scheds = {n: schedule_note(f, *a) for n, f, a in lenet_layers}
     total = sum(times.values())
     for n, t in times.items():
         lines.append(emit(f"table4/lenet5/{n}", t,
-                          f"fraction={t / total:.2%}"))
+                          f"fraction={t / total:.2%}",
+                          schedule=scheds[n]))
     lines.append(emit("table4/lenet5/total", total,
                       "relu+pool hot under PFP (paper Fig. 6)"))
     return lines

@@ -1,8 +1,11 @@
 """Shared benchmark utilities: timing, CSV emission, model builders.
 
 Every emitted row names the active PFP operator implementation (the
-impl-dispatch registry default — flipped fleet-wide by ``run.py --impl``),
-so result files are self-describing about which stack they measured.
+impl-dispatch registry default — flipped fleet-wide by ``run.py --impl``)
+AND the tuned schedule(s) the kernel path actually ran (consulted from the
+process-global schedule cache — warmed by ``run.py --tune``), so result
+files are self-describing about which stack and which schedules they
+measured.
 """
 from __future__ import annotations
 
@@ -15,7 +18,37 @@ import numpy as np
 
 from repro.core.dispatch import resolve_impl
 
-CSV_HEADER = "name,us_per_call,impl,derived"
+CSV_HEADER = "name,us_per_call,impl,schedule,derived"
+
+
+def schedule_note(fn: Callable, *args, impl: Optional[str] = None) -> str:
+    """Per-op digest of the schedules ``fn(*args)`` dispatches on the
+    kernel stack (e.g. ``dense[bk=896/bm=104/bn=128];activation:default``),
+    '-' on the XLA stack or when fn dispatches no kernel ops.
+
+    The digest comes from an abstract trace (``jax.eval_shape`` under the
+    tuning shape recorder) — zero FLOPs and deterministic. ``disable_jit``
+    forces the Python dispatch layer to actually re-run: a jitted fn the
+    harness already traced would otherwise replay its cached jaxpr and
+    record nothing.
+
+    Caveat: the digest reflects the CURRENT cache state. Schedules bind at
+    trace time and are not part of jax's jit cache key, so warm the cache
+    (run.py does --tune/--schedule-cache before importing benches) before
+    the measured fn first traces — a fn traced cold keeps executing the
+    default schedules even after the cache warms."""
+    if resolve_impl(impl) != "kernel":
+        return "-"
+    from repro.tuning import cache as _tc
+
+    with _tc.record_shapes() as rec, jax.disable_jit():
+        jax.eval_shape(fn, *args)
+    used: dict = {}
+    for op, shape_key, dtype, backend in rec:
+        hit = _tc.global_cache().get(op, shape_key, dtype, backend)
+        used.setdefault(op, set()).add(
+            hit.describe() if hit is not None else f"{op}:default")
+    return ";".join("+".join(sorted(used[op])) for op in sorted(used)) or "-"
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -31,8 +64,12 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 
 def emit(name: str, seconds: float, derived: str = "",
-         impl: Optional[str] = None) -> str:
-    line = f"{name},{seconds * 1e6:.1f},{resolve_impl(impl)},{derived}"
+         impl: Optional[str] = None, schedule: Optional[str] = None) -> str:
+    """One CSV row. Benches whose measured fn dispatches PFP kernel ops
+    pass ``schedule=schedule_note(fn, *args)`` (or an explicit
+    ``Schedule.describe()``); rows with no schedule information show '-'."""
+    sched = schedule if schedule is not None else "-"
+    line = f"{name},{seconds * 1e6:.1f},{resolve_impl(impl)},{sched},{derived}"
     print(line)
     return line
 

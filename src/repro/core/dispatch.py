@@ -24,9 +24,15 @@ for embeddings, the two adds of a residual) register the same function for
 both impls — the registry still owns the routing decision, and the parity
 suite (tests/test_impl_dispatch.py) covers them like any other op.
 
-This registry is also the seam for per-op autotuning (paper §6: pick block
-shapes per (op, shape, target)) and multi-backend dispatch later: both are
-"register another implementation / decorate the lookup" changes now.
+This registry is also the per-op autotuning seam (paper §6: pick block
+shapes per (op, shape, target)): every kernel-impl call consults the
+process-global schedule cache (``repro.tuning``) keyed on
+``(op, logical shape, dtype, backend)`` and threads the tuned
+:class:`~repro.tuning.schedules.Schedule` into ``kernels/ops.py``; a miss
+falls back to the fixed defaults, so an untuned process behaves exactly as
+before. ``repro.tuning.autotune(forward, params, batch)`` warms the cache
+for a model's actual shape set. Multi-backend dispatch stays a "register
+another implementation / decorate the lookup" change.
 """
 from __future__ import annotations
 
@@ -105,6 +111,28 @@ def _out_dtype(*xs) -> Any:
     return jnp.float32
 
 
+def _schedule_for(op: str, shape_key, dtype) -> Optional[Any]:
+    """Consult the tuned-schedule cache for this kernel-impl call.
+
+    Shapes are concrete at trace time, so this is a Python-side dict hit
+    per op call per trace — zero cost in the compiled graph. Returns None
+    (-> the wrapper's fixed defaults) on miss. The import is lazy only to
+    keep module load order acyclic — the kernel path already hard-requires
+    ``repro.tuning`` (kernels/ops.py imports its Schedule type).
+    """
+    from repro.tuning import cache as _schedule_cache
+
+    return _schedule_cache.lookup(op, tuple(int(d) for d in shape_key),
+                                  jnp.dtype(dtype).name)
+
+
+def _rows(shape) -> int:
+    n = 1
+    for d in shape[:-1]:
+        n *= int(d)
+    return n
+
+
 # ---------------------------------------------------------------------------
 # dense — the paper's flagship operator (Eqs. 4/12/13)
 # ---------------------------------------------------------------------------
@@ -121,12 +149,18 @@ def _dense_kernel(x, w, formulation):
         return _dense_xla(x, w, formulation)
     ops = _kernel_ops()
     dtype = _out_dtype(x, w)
+    shape_key = (_rows(x.shape), x.shape[-1], w.shape[-1])
     if not is_gaussian(x):
-        # First-layer simplification (Eq. 13): deterministic inputs.
+        # First-layer simplification (Eq. 13): deterministic inputs run a
+        # two-matmul kernel — tuned under its own 'dense_first' op so its
+        # schedules never collide with three-matmul entries.
+        sched = _schedule_for("dense_first", shape_key, dtype)
         mu, var = ops.pfp_dense(x, x, w.mean, w.var, impl="kernel",
-                                first_layer=True)
+                                first_layer=True, schedule=sched)
     else:
-        mu, var = ops.pfp_dense(x.mean, x.srm, w.mean, w.srm, impl="kernel")
+        sched = _schedule_for("dense", shape_key, dtype)
+        mu, var = ops.pfp_dense(x.mean, x.srm, w.mean, w.srm, impl="kernel",
+                                schedule=sched)
     return GaussianTensor(mu.astype(dtype), var.astype(dtype), VAR)
 
 
@@ -198,15 +232,20 @@ def _einsum_kernel(subscripts, x, w, formulation):
     if _parse_batched_mm(spec):
         # Batched per-expert contraction: vmap the blocked dense kernel over
         # the shared leading axis (Pallas batches by extending the grid).
+        # Schedules key on the PER-EXPERT (c, d, f) dense problem.
         ops = _kernel_ops()
         dtype = _out_dtype(x, w)
+        expert_key = (x.shape[1], x.shape[2], w.shape[-1])
         if not is_gaussian(x):
+            sched = _schedule_for("dense_first", expert_key, dtype)
             fn = jax.vmap(lambda xe, mw, vw: ops.pfp_dense(
-                xe, xe, mw, vw, impl="kernel", first_layer=True))
+                xe, xe, mw, vw, impl="kernel", first_layer=True,
+                schedule=sched))
             mu, var = fn(x, w.mean, w.var)
         else:
+            sched = _schedule_for("dense", expert_key, dtype)
             fn = jax.vmap(lambda mx, sx, mw, sw: ops.pfp_dense(
-                mx, sx, mw, sw, impl="kernel"))
+                mx, sx, mw, sw, impl="kernel", schedule=sched))
             mu, var = fn(x.mean, x.srm, w.mean, w.srm)
         return GaussianTensor(mu.astype(dtype), var.astype(dtype), VAR)
     # General contractions (depthwise convs etc.) have no blocked kernel
@@ -258,7 +297,10 @@ def _activation_kernel(x, kind):
     if kind == "identity":  # pure representation conversion, no transcendentals
         return _activation_xla(x, kind)
     ops = _kernel_ops()
-    mu, srm = ops.pfp_activation(x.mean, x.var, kind=kind, impl="kernel")
+    sched = _schedule_for("activation", (_rows(x.shape), x.shape[-1]),
+                          x.dtype)
+    mu, srm = ops.pfp_activation(x.mean, x.var, kind=kind, impl="kernel",
+                                 schedule=sched)
     return GaussianTensor(mu.astype(x.dtype), srm.astype(x.dtype), SRM)
 
 
@@ -280,7 +322,8 @@ def _maxpool_xla(x, window):
 def _maxpool_kernel(x, window):
     assert window == 2, "production path specializes k=2 like the paper"
     ops = _kernel_ops()
-    mu, var = ops.pfp_maxpool2d(x.mean, x.var, impl="kernel")
+    sched = _schedule_for("maxpool2d", x.shape, x.dtype)
+    mu, var = ops.pfp_maxpool2d(x.mean, x.var, impl="kernel", schedule=sched)
     return GaussianTensor(mu.astype(x.dtype), var.astype(x.dtype), VAR)
 
 
@@ -301,8 +344,12 @@ def _attention_xla(q_mu, k_mu, v_mu, v_var, scale, causal):
 
 @register("attention", "kernel")
 def _attention_kernel(q_mu, k_mu, v_mu, v_var, scale, causal):
+    b, h, tq, d = q_mu.shape
+    sched = _schedule_for(
+        "attention", (b, h, k_mu.shape[1], tq, k_mu.shape[2], d), q_mu.dtype)
     return _kernel_ops().pfp_attention(q_mu, k_mu, v_mu, v_var, scale=scale,
-                                       causal=causal, impl="kernel")
+                                       causal=causal, impl="kernel",
+                                       schedule=sched)
 
 
 def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float,
@@ -333,8 +380,9 @@ def _rmsnorm_xla(x, gain, eps, act):
 @register("rmsnorm", "kernel")
 def _rmsnorm_kernel(x, gain, eps, act):
     ops = _kernel_ops()
+    sched = _schedule_for("rmsnorm", (_rows(x.shape), x.shape[-1]), x.dtype)
     mu, sec = ops.pfp_rmsnorm(x.mean, x.second, gain, rep=x.rep, eps=eps,
-                              act=act, impl="kernel")
+                              act=act, impl="kernel", schedule=sched)
     rep = SRM if act is not None else VAR
     return GaussianTensor(mu.astype(x.dtype), sec.astype(x.dtype), rep)
 
@@ -357,8 +405,10 @@ def _layernorm_xla(x, gain, bias, eps, act):
 @register("layernorm", "kernel")
 def _layernorm_kernel(x, gain, bias, eps, act):
     ops = _kernel_ops()
+    sched = _schedule_for("layernorm", (_rows(x.shape), x.shape[-1]), x.dtype)
     mu, sec = ops.pfp_layernorm(x.mean, x.second, gain, bias, rep=x.rep,
-                                eps=eps, act=act, impl="kernel")
+                                eps=eps, act=act, impl="kernel",
+                                schedule=sched)
     rep = SRM if act is not None else VAR
     return GaussianTensor(mu.astype(x.dtype), sec.astype(x.dtype), rep)
 
@@ -381,7 +431,10 @@ def _glu_xla(a, b):
 @register("glu_product", "kernel")
 def _glu_kernel(a, b):
     ops = _kernel_ops()
-    mu, srm = ops.pfp_glu_product(a.mean, a.srm, b.mean, b.srm, impl="kernel")
+    sched = _schedule_for("glu_product", (_rows(a.shape), a.shape[-1]),
+                          a.dtype)
+    mu, srm = ops.pfp_glu_product(a.mean, a.srm, b.mean, b.srm, impl="kernel",
+                                  schedule=sched)
     return GaussianTensor(mu.astype(a.dtype), srm.astype(a.dtype), SRM)
 
 

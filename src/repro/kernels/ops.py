@@ -9,12 +9,18 @@ Responsibilities:
     ``ref.py`` (what the pjit'd production graphs use — XLA already fuses
     the joint-operator structure there; the Pallas kernels are the
     TPU-core-level statement of the same schedule);
+  * schedule resolution — every wrapper takes an optional
+    :class:`~repro.tuning.schedules.Schedule`.  ``None`` (the cache-miss
+    path) reproduces the legacy fixed defaults bit-for-bit; a tuned
+    schedule overrides the block shapes, clamped to the padded problem so
+    ANY schedule the search space emits is safe (wrong-but-fast is
+    impossible — only padding volume changes, never the math);
   * a process-wide default so models can flip implementations globally.
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +31,23 @@ from repro.kernels.pfp_attention import pfp_attention_pallas
 from repro.kernels.pfp_dense import pfp_dense_pallas
 from repro.kernels.pfp_maxpool import pfp_maxpool2d_pallas
 from repro.kernels.pfp_norms import pfp_layernorm_pallas, pfp_rmsnorm_pallas
+from repro.tuning.schedules import Schedule
 
 Impl = Literal["kernel", "xla"]
+
+
+def _round_up(x: int, base: int) -> int:
+    return -(-x // base) * base
+
+
+def _block(schedule: Optional[Schedule], name: str, legacy: int,
+           dim: int, align: int) -> int:
+    """Resolve one block size: a tuned override is clamped to the padded
+    problem dim (so oversized candidates degrade to more padding, never to
+    wrong results); without an override the legacy default clamp applies."""
+    if schedule is not None and schedule.has(name):
+        return min(schedule.block(name), _round_up(max(dim, 1), align))
+    return legacy
 
 
 def set_default_impl(impl: Impl) -> None:
@@ -61,7 +82,7 @@ def pfp_dense(
     mu_x, srm_x, mu_w, srm_w,
     *, impl: Impl | None = None,
     block_m: int = 128, block_n: int = 128, block_k: int = 512,
-    first_layer: bool = False,
+    first_layer: bool = False, schedule: Optional[Schedule] = None,
 ):
     """Joint PFP dense for (..., K) x (K, N). Returns (mean, var)."""
     impl = impl or get_default_impl()
@@ -78,9 +99,10 @@ def pfp_dense(
             mu, var = ref.pfp_dense_ref(mu2, srm2, mu_w, srm_w)
     else:
         m = mu2.shape[0]
-        bm = min(block_m, _ceil_mult(m))
-        bn = min(block_n, _ceil_mult(n))
-        bk = min(block_k, _ceil_mult(kdim))
+        bm = _block(schedule, "block_m", min(block_m, _ceil_mult(m)), m, 8)
+        bn = _block(schedule, "block_n", min(block_n, _ceil_mult(n)), n, 128)
+        bk = _block(schedule, "block_k", min(block_k, _ceil_mult(kdim)),
+                    kdim, 128)
         mu2p = _pad_to(_pad_to(mu2, bm, 0), bk, 1)
         srm2p = _pad_to(_pad_to(srm2, bm, 0), bk, 1)
         mwp = _pad_to(_pad_to(mu_w, bk, 0), bn, 1)
@@ -95,7 +117,8 @@ def pfp_dense(
 
 
 def pfp_activation(mu, var, *, kind: str = "relu", impl: Impl | None = None,
-                   block_rows: int = 256, block_cols: int = 512):
+                   block_rows: int = 256, block_cols: int = 512,
+                   schedule: Optional[Schedule] = None):
     """Fused moment-matched activation for any shape. Returns (mean, srm)."""
     impl = impl or get_default_impl()
     if impl == "xla":
@@ -108,8 +131,10 @@ def pfp_activation(mu, var, *, kind: str = "relu", impl: Impl | None = None,
     mu2 = mu.reshape(-1, cols)
     var2 = var.reshape(-1, cols)
     m = mu2.shape[0]
-    bm = min(block_rows, _ceil_mult(m, 8))
-    bn = min(block_cols, _ceil_mult(cols))
+    bm = _block(schedule, "block_rows", min(block_rows, _ceil_mult(m, 8)),
+                m, 8)
+    bn = _block(schedule, "block_cols", min(block_cols, _ceil_mult(cols)),
+                cols, 128)
     mu2 = _pad_to(mu2, bm, 0)
     # Pad variances with ones (not zeros) to dodge the det-branch select;
     # padded outputs are sliced away regardless.
@@ -125,16 +150,24 @@ def pfp_activation(mu, var, *, kind: str = "relu", impl: Impl | None = None,
     return mo, so
 
 
-def pfp_maxpool2d(mu, var, *, impl: Impl | None = None):
+def pfp_maxpool2d(mu, var, *, impl: Impl | None = None,
+                  block_rows: int = 256, block_cols: int = 128,
+                  schedule: Optional[Schedule] = None):
     """2x2/2 PFP max pool on NHWC. Returns (mean, var)."""
     impl = impl or get_default_impl()
     if impl == "xla":
         return ref.pfp_maxpool2d_ref(mu, var)
-    return pfp_maxpool2d_pallas(mu, var, interpret=_interpret())
+    n, h, w, c = mu.shape
+    rows = n * (h // 2) * (w // 2)
+    bm = _block(schedule, "block_rows", block_rows, rows, 8)
+    bn = _block(schedule, "block_cols", block_cols, c, 128)
+    return pfp_maxpool2d_pallas(mu, var, block_rows=bm, block_cols=bn,
+                                interpret=_interpret())
 
 
 def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float, causal: bool = True,
-                  impl: Impl | None = None, block_q: int = 128, block_k: int = 128):
+                  impl: Impl | None = None, block_q: int = 128,
+                  block_k: int = 128, schedule: Optional[Schedule] = None):
     """Mean-field PFP attention, q (B, H, Tq, D) x kv (B, Hkv, Tk, D).
 
     Grouped-query: H % Hkv == 0. The Pallas kernel maps query heads to
@@ -147,19 +180,22 @@ def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float, causal: bool = True,
             k_mu, v_mu, v_var = (jnp.repeat(a, group, axis=1)
                                  for a in (k_mu, v_mu, v_var))
         return ref.pfp_attention_ref(q_mu, k_mu, v_mu, v_var, scale, causal)
+    bq = _block(schedule, "block_q", block_q, q_mu.shape[2], 8)
+    bk = _block(schedule, "block_k", block_k, k_mu.shape[2], 8)
     return pfp_attention_pallas(
         q_mu, k_mu, v_mu, v_var, scale=scale, causal=causal,
-        block_q=block_q, block_k=block_k, interpret=_interpret(),
+        block_q=bq, block_k=bk, interpret=_interpret(),
     )
 
 
-def _norm_2d(mu, second, *, block_rows: int):
+def _norm_2d(mu, second, *, block_rows: int, schedule=None):
     """Flatten to (rows, d), pad rows to a block multiple and cols to lanes."""
     d = mu.shape[-1]
     mu2 = mu.reshape(-1, d)
     sec2 = second.reshape(-1, d)
     rows = mu2.shape[0]
-    bm = min(block_rows, _ceil_mult(rows, 8))
+    bm = _block(schedule, "block_rows",
+                min(block_rows, _ceil_mult(rows, 8)), rows, 8)
     mu2 = _pad_to(mu2, bm, 0)
     sec2 = _pad_to(sec2, bm, 0)
     mu2 = _pad_to(mu2, 128, 1)
@@ -173,7 +209,7 @@ def _vec_pad(v, cols):
 
 def pfp_rmsnorm(mu, second, gain, *, rep: str = "var", eps: float = 1e-6,
                 act: str | None = None, impl: Impl | None = None,
-                block_rows: int = 256):
+                block_rows: int = 256, schedule: Optional[Schedule] = None):
     """Fused PFP RMSNorm over the last axis, any leading shape.
 
     Returns (mean, second): second is VAR without `act`, SRM with the fused
@@ -189,7 +225,8 @@ def pfp_rmsnorm(mu, second, gain, *, rep: str = "var", eps: float = 1e-6,
             m, v = pfp_activation(m, v, kind=act, impl="xla")
         return m.reshape(shape), v.reshape(shape)
     shape = mu.shape
-    mu2, sec2, rows, d, bm = _norm_2d(mu, second, block_rows=block_rows)
+    mu2, sec2, rows, d, bm = _norm_2d(mu, second, block_rows=block_rows,
+                                      schedule=schedule)
     mo, so = pfp_rmsnorm_pallas(
         mu2, sec2, _vec_pad(gain, mu2.shape[1]), rep=rep, d=d, eps=eps,
         act=act, block_rows=bm, interpret=_interpret())
@@ -198,7 +235,8 @@ def pfp_rmsnorm(mu, second, gain, *, rep: str = "var", eps: float = 1e-6,
 
 def pfp_layernorm(mu, second, gain, bias=None, *, rep: str = "var",
                   eps: float = 1e-6, act: str | None = None,
-                  impl: Impl | None = None, block_rows: int = 256):
+                  impl: Impl | None = None, block_rows: int = 256,
+                  schedule: Optional[Schedule] = None):
     """Fused PFP LayerNorm over the last axis, any leading shape."""
     impl = impl or get_default_impl()
     if bias is None:
@@ -212,7 +250,8 @@ def pfp_layernorm(mu, second, gain, bias=None, *, rep: str = "var",
             m, v = pfp_activation(m, v, kind=act, impl="xla")
         return m.reshape(shape), v.reshape(shape)
     shape = mu.shape
-    mu2, sec2, rows, d, bm = _norm_2d(mu, second, block_rows=block_rows)
+    mu2, sec2, rows, d, bm = _norm_2d(mu, second, block_rows=block_rows,
+                                      schedule=schedule)
     cols = mu2.shape[1]
     mo, so = pfp_layernorm_pallas(
         mu2, sec2, _vec_pad(gain, cols), _vec_pad(bias, cols), rep=rep, d=d,
@@ -221,7 +260,8 @@ def pfp_layernorm(mu, second, gain, bias=None, *, rep: str = "var",
 
 
 def pfp_glu_product(mu_a, srm_a, mu_b, srm_b, *, impl: Impl | None = None,
-                    block_rows: int = 256, block_cols: int = 512):
+                    block_rows: int = 256, block_cols: int = 512,
+                    schedule: Optional[Schedule] = None):
     """Fused SRM gated product, any shape. Returns (mean, srm)."""
     impl = impl or get_default_impl()
     if impl == "xla":
@@ -230,8 +270,10 @@ def pfp_glu_product(mu_a, srm_a, mu_b, srm_b, *, impl: Impl | None = None,
     cols = shape[-1]
     args = [a.reshape(-1, cols) for a in (mu_a, srm_a, mu_b, srm_b)]
     m = args[0].shape[0]
-    bm = min(block_rows, _ceil_mult(m, 8))
-    bn = min(block_cols, _ceil_mult(cols))
+    bm = _block(schedule, "block_rows", min(block_rows, _ceil_mult(m, 8)),
+                m, 8)
+    bn = _block(schedule, "block_cols", min(block_cols, _ceil_mult(cols)),
+                cols, 128)
     args = [_pad_to(_pad_to(a, bm, 0), bn, 1) for a in args]
     mo, so = pfp_glu_pallas(*args, block_rows=bm, block_cols=bn,
                             interpret=_interpret())

@@ -16,6 +16,9 @@ s is computed once for both paths.
 Grid: (B*H, Tq/bq, Tk/bk); the Tk axis is sequential with fp32 accumulators
 (m, l broadcast over 128 lanes; acc_mu, acc_var of shape (bq, d)) in VMEM.
 Causality is right-aligned (decode/prefill-with-cache friendly).
+(block_q, block_k) default to 128x128; the autotuner (repro.tuning)
+overrides them per shape via `ops.pfp_attention`'s schedule argument —
+masking is by absolute index, so block choice never changes results.
 """
 from __future__ import annotations
 

@@ -11,7 +11,10 @@ The paper's two key operator insights (TVM §5) map to one kernel design:
 
 Grid: (M/bm, N/bn, K/bk) with the K axis 'arbitrary' (sequential) so the
 fp32 accumulators live in VMEM across K steps. Block shapes default to
-MXU-aligned (128, 128) tiles with bk=512.
+MXU-aligned (128, 128) tiles with bk=512; the autotuner (repro.tuning)
+overrides them per (shape, dtype, backend) through `ops.pfp_dense`'s
+schedule argument — this kernel only requires block-multiple (padded)
+operands, so any searched schedule is legal.
 
 A `first_layer` variant implements Eq. 13 (deterministic inputs): two
 matmuls, no mu^2 correction accumulator.

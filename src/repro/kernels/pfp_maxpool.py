@@ -7,6 +7,10 @@ kernel runs a pure-elementwise tournament of three Clark pairwise maxes —
 fully VPU-vectorized with zero shuffles inside the kernel.
 
 Consumes VAR, emits VAR (paper: pooling layers keep variances).
+
+(block_rows, block_cols) tile the flattened (N*Ho*Wo, C) phase arrays;
+the autotuner (repro.tuning) overrides the defaults through
+`ops.pfp_maxpool2d`'s schedule argument.
 """
 from __future__ import annotations
 

@@ -17,6 +17,10 @@ exact zeros to every accumulator.
 Representation handling is static: `rep` selects whether the `second`
 input holds variances or second raw moments, and the missing one is
 derived in-register exactly like `GaussianTensor.var`/`.srm` would.
+
+`block_rows` is the schedule axis the autotuner (repro.tuning) searches;
+tuned values arrive through the `schedule` argument of
+`ops.pfp_rmsnorm`/`ops.pfp_layernorm` (rows are padded to any block).
 """
 from __future__ import annotations
 

@@ -56,13 +56,26 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                              formulation=formulation,
                              impl=impl,
                              serve_params=serve_params)
+        from repro.tuning import cache as schedule_cache  # noqa: E402
+
         with mesh:
             jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings,
                              donate_argnums=prog.donate_argnums)
-            lowered = jitted.lower(*prog.arg_specs)
+            # Record the dispatch layer's schedule-cache queries made while
+            # tracing, so the result JSON names the schedule each kernel-impl
+            # op would run (tuned describe() or 'default' on a cache miss).
+            with schedule_cache.record_shapes() as sched_queries:
+                lowered = jitted.lower(*prog.arg_specs)
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
+
+        schedules = {}
+        for op, shape_key, dtype, backend in sched_queries:
+            hit = schedule_cache.global_cache().get(op, shape_key, dtype,
+                                                    backend)
+            key = f"{op}|{'x'.join(map(str, shape_key))}|{dtype}"
+            schedules[key] = hit.describe() if hit is not None else "default"
 
         mem = compiled.memory_analysis()
         mem_info = {}
@@ -109,6 +122,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             chips=chips,
             program=prog.name,
             impl=prog.meta.get("impl"),
+            schedules=schedules,
             lower_s=round(t_lower, 2),
             compile_s=round(t_compile, 2),
             flops_per_device=flops,
@@ -180,8 +194,17 @@ def main():
                     help="PFP operator implementation (core/dispatch.py)")
     ap.add_argument("--serve-params", default="auto",
                     choices=["auto", "tp", "fsdp"])
+    ap.add_argument("--schedule-cache", default=None,
+                    help="tuned-schedule cache JSON to load (repro.tuning); "
+                         "kernel-impl cells then compile with and report the "
+                         "tuned block shapes")
     ap.add_argument("--all", action="store_true")
     args = ap.parse_args()
+
+    if args.schedule_cache:
+        from repro.tuning import load_global_cache
+
+        load_global_cache(args.schedule_cache)
 
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
     archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]

@@ -1,0 +1,29 @@
+"""Per-op schedule autotuning for the PFP operator library (paper §6).
+
+The dispatch registry (``core/dispatch.py``) consults this package's
+process-global schedule cache on every kernel-impl call; a miss falls back
+to the fixed MXU-aligned defaults in ``kernels/ops.py``. The pieces:
+
+  * :mod:`repro.tuning.schedules` — :class:`Schedule` descriptors + defaults
+  * :mod:`repro.tuning.search`    — candidate spaces + analytic cost model
+  * :mod:`repro.tuning.cache`     — persistent cache, shape recorder
+  * :mod:`repro.tuning.measure`   — wall-clock / cost-model-ranked tuner
+  * :mod:`repro.tuning.autotune`  — ``autotune(forward, params, batch)``
+"""
+from repro.tuning.autotune import autotune, collect_queries
+from repro.tuning.cache import (ScheduleCache, ScheduleCacheWarning,
+                                consult_digest, global_cache,
+                                load_global_cache, lookup, record_shapes,
+                                reset_global_cache)
+from repro.tuning.measure import TuneResult, tune_op
+from repro.tuning.schedules import (DEFAULT_SCHEDULES, OP_BLOCK_NAMES,
+                                    TUNABLE_OPS, Schedule)
+from repro.tuning.search import candidates, cost_summary, score
+
+__all__ = [
+    "Schedule", "ScheduleCache", "ScheduleCacheWarning", "TuneResult",
+    "DEFAULT_SCHEDULES", "OP_BLOCK_NAMES", "TUNABLE_OPS",
+    "autotune", "collect_queries", "candidates", "cost_summary", "score",
+    "tune_op", "lookup", "record_shapes", "consult_digest", "global_cache",
+    "load_global_cache", "reset_global_cache",
+]

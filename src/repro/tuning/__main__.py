@@ -1,0 +1,5 @@
+"""``python -m repro.tuning`` — the autotuner CLI (see autotune.py)."""
+from repro.tuning.autotune import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Model-level autotuning: warm the schedule cache for a model's shape set.
+
+``autotune(forward, params, batch)`` discovers every (op, shape, dtype)
+the model's kernel-impl forward actually dispatches — by tracing it under
+the shape recorder with ``jax.eval_shape``, so discovery costs zero FLOPs
+— then tunes each unique query and stores the winner in the (global by
+default) schedule cache. Subsequent forwards through
+``Context(impl='kernel')`` pick the tuned schedules up automatically via
+the dispatch-layer cache consult.
+
+Cache hits short-circuit measurement (pass ``force=True`` to re-tune), so
+warming is idempotent and cheap to call at process start.
+
+CLI (also the CI interpret-mode smoke):
+
+    PYTHONPATH=src python -m repro.tuning.autotune --model mlp --batch 32
+    PYTHONPATH=src python -m repro.tuning.autotune --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+from typing import Callable, Dict, Optional
+
+import jax
+
+from repro.tuning import measure
+from repro.tuning.cache import (Query, ScheduleCache, global_cache,
+                                record_shapes)
+from repro.tuning.schedules import Schedule
+
+
+def collect_queries(forward: Callable, params, batch, ctx=None) -> list:
+    """Unique (op, shape_key, dtype, backend) queries of one forward, in
+    first-dispatch order. ``forward(params, batch, ctx)`` must be traceable;
+    it is never executed (``jax.eval_shape``). ``disable_jit`` guarantees
+    the Python-level dispatch runs even when the forward is jitted and was
+    already traced at these shapes (a pjit cache hit records nothing)."""
+    ctx = ctx or _kernel_ctx()
+    with record_shapes() as rec, jax.disable_jit():
+        jax.eval_shape(lambda p, b: forward(p, b, ctx), params, batch)
+    seen, unique = set(), []
+    for query in rec:
+        if query not in seen:
+            seen.add(query)
+            unique.append(query)
+    return unique
+
+
+def _kernel_ctx():
+    from repro.core.modes import Mode
+    from repro.nn.module import Context
+
+    return Context(mode=Mode.PFP, impl="kernel")
+
+
+def autotune(forward: Callable, params, batch, *, ctx=None,
+             cache: Optional[ScheduleCache] = None, mode: Optional[str] = None,
+             limit: int = 8, iters: int = 5, force: bool = False,
+             save_path: Optional[str] = None,
+             verbose: bool = False) -> Dict[Query, Schedule]:
+    """Tune every op/shape the model dispatches and warm ``cache`` (the
+    process-global one by default). Returns query -> winning schedule."""
+    cache = cache if cache is not None else global_cache()
+    chosen: Dict[Query, Schedule] = {}
+    for query in collect_queries(forward, params, batch, ctx):
+        op, shape_key, dtype, backend = query
+        hit = cache.get(op, shape_key, dtype, backend)
+        if hit is not None and not force:
+            chosen[query] = hit  # cache hit: no measurement
+            if verbose:
+                print(f"  [hit ] {op} {shape_key} -> {hit.describe()}")
+            continue
+        result = measure.tune_op(op, shape_key, dtype, mode=mode, limit=limit,
+                                 iters=iters)
+        cache.put(op, shape_key, dtype, backend, result.best)
+        chosen[query] = result.best
+        if verbose:
+            print(f"  [tune] {op} {shape_key} ({result.mode}) -> "
+                  f"{result.best.describe()}")
+    if save_path or cache.path:
+        cache.save(save_path or cache.path)
+    return chosen
+
+
+# ---------------------------------------------------------------------------
+# CLI — doubles as the CI interpret-mode smoke (no hardware timing)
+# ---------------------------------------------------------------------------
+def _model_and_batch(name: str, batch: int, key):
+    from repro.bayes.convert import svi_to_pfp
+    from repro.models.simple import (lenet5_forward, lenet5_init, mlp_forward,
+                                     mlp_init)
+
+    if name == "mlp":
+        params = svi_to_pfp(mlp_init(key, d_hidden=64))
+        x = jax.random.normal(key, (batch, 784))
+        return mlp_forward, params, x
+    if name == "lenet5":
+        params = svi_to_pfp(lenet5_init(key))
+        x = jax.random.normal(key, (batch, 28, 28, 1))
+        return lenet5_forward, params, x
+    raise SystemExit(f"unknown --model {name!r} (mlp | lenet5)")
+
+
+def _smoke() -> None:
+    """Search-space enumeration + cache save/load round-trip + a warmed
+    kernel forward, all in interpret/rank mode. Exits non-zero on drift."""
+    import numpy as np
+
+    from repro.core.modes import Mode
+    from repro.nn.module import Context
+
+    forward, params, x = _model_and_batch("mlp", 8, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "schedules.json")
+        cache = ScheduleCache(path)
+        chosen = autotune(forward, params, x, cache=cache, mode="rank",
+                          save_path=path, verbose=True)
+        assert chosen, "autotune recorded no shape queries"
+        reloaded = ScheduleCache().load(path)
+        assert reloaded.entries() == cache.entries(), "round-trip drift"
+        # Warm the global cache from disk and run the real kernel forward.
+        global_cache().load(path)
+        try:
+            out_k = forward(params, x, Context(mode=Mode.PFP, impl="kernel"))
+            out_x = forward(params, x, Context(mode=Mode.PFP, impl="xla"))
+        finally:
+            global_cache().clear()
+        drift = float(np.max(np.abs(np.asarray(out_k.mean - out_x.mean))))
+        assert drift < 1e-3, f"tuned-schedule forward drifted: {drift}"
+        print(f"smoke ok: {len(chosen)} queries tuned, "
+              f"round-trip exact, max logit drift {drift:.2e}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="mlp", help="mlp | lenet5")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--mode", default=None, choices=measure.MEASURE_MODES,
+                    help="default: time on TPU, rank (cost model) elsewhere")
+    ap.add_argument("--save", default=None, help="cache file to write")
+    ap.add_argument("--limit", type=int, default=8,
+                    help="max candidates per (op, shape)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-tune even on cache hits")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: enumerate + cache round-trip, no timing")
+    args = ap.parse_args()
+    if args.smoke:
+        _smoke()
+        return
+    forward, params, x = _model_and_batch(args.model, args.batch,
+                                          jax.random.PRNGKey(0))
+    chosen = autotune(forward, params, x, mode=args.mode, limit=args.limit,
+                      force=args.force, save_path=args.save, verbose=True)
+    print(f"tuned {len(chosen)} (op, shape, dtype) queries"
+          + (f"; cache -> {args.save}" if args.save else ""))
+
+
+if __name__ == "__main__":
+    main()

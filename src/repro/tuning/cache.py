@@ -1,0 +1,210 @@
+"""Persistent per-op schedule cache + the process-global tuning runtime.
+
+The cache maps ``(op, shape_key, dtype, backend)`` to the winning
+:class:`~repro.tuning.schedules.Schedule`. ``core/dispatch.py`` consults
+the process-global instance on every kernel-impl call (:func:`lookup`);
+a miss falls back to the fixed defaults baked into ``kernels/ops.py``, so
+an empty cache is bit-identical to the pre-tuner behavior.
+
+Robustness contract (tests/test_tuning.py): a corrupt, stale-versioned or
+otherwise malformed cache file must degrade to an empty cache with a
+``ScheduleCacheWarning`` — never raise into a model forward.
+
+The module also hosts two trace-time instruments:
+
+  * :func:`record_shapes` — a context manager that captures every
+    ``(op, shape_key, dtype, backend)`` query made while tracing a model
+    forward.  ``autotune`` drives ``jax.eval_shape`` under it to discover
+    a model's actual shape set without running a single FLOP.
+  * :func:`consult_digest` — a compact description of which schedules the
+    most recent kernel-impl calls actually ran (tuned vs default), which
+    the benchmark harness stamps into its CSV/JSON rows.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import warnings
+from typing import Dict, List, Optional, Tuple
+
+from repro.tuning.schedules import Schedule, shape_key_str
+
+CACHE_VERSION = 1
+DEFAULT_CACHE_ENV = "REPRO_SCHEDULE_CACHE"
+
+ShapeKey = Tuple[int, ...]
+Query = Tuple[str, ShapeKey, str, str]  # (op, shape_key, dtype, backend)
+
+
+class ScheduleCacheWarning(UserWarning):
+    """A schedule-cache file could not be used; defaults are in effect."""
+
+
+def cache_key(op: str, shape_key: ShapeKey, dtype: str, backend: str) -> str:
+    return f"{op}|{shape_key_str(shape_key)}|{dtype}|{backend}"
+
+
+class ScheduleCache:
+    """In-memory schedule store with JSON save/load."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._entries: Dict[str, Schedule] = {}
+
+    # -- core mapping -------------------------------------------------------
+    def get(self, op: str, shape_key: ShapeKey, dtype: str,
+            backend: str) -> Optional[Schedule]:
+        return self._entries.get(cache_key(op, shape_key, dtype, backend))
+
+    def put(self, op: str, shape_key: ShapeKey, dtype: str, backend: str,
+            schedule: Schedule) -> None:
+        if schedule.op != op:
+            raise ValueError(f"schedule for op {schedule.op!r} stored under "
+                             f"op {op!r}")
+        self._entries[cache_key(op, shape_key, dtype, backend)] = schedule
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entries(self) -> Dict[str, Schedule]:
+        return dict(self._entries)
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if path is None:
+            raise ValueError("no cache path given")
+        payload = {
+            "version": CACHE_VERSION,
+            "entries": {k: s.to_json() for k, s in self._entries.items()},
+        }
+        directory = os.path.dirname(os.path.abspath(path))
+        os.makedirs(directory, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+    def load(self, path: Optional[str] = None) -> "ScheduleCache":
+        """Merge entries from ``path``. Corrupt/stale files warn + no-op."""
+        path = path or self.path
+        if path is None:
+            raise ValueError("no cache path given")
+        self.path = path
+        if not os.path.exists(path):
+            return self
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            warnings.warn(
+                f"schedule cache {path!r} is unreadable ({e}); "
+                "falling back to default schedules", ScheduleCacheWarning)
+            return self
+        if (not isinstance(payload, dict)
+                or not isinstance(payload.get("entries"), dict)):
+            warnings.warn(
+                f"schedule cache {path!r} is malformed; falling back to "
+                "default schedules", ScheduleCacheWarning)
+            return self
+        if payload.get("version") != CACHE_VERSION:
+            warnings.warn(
+                f"schedule cache {path!r} has stale version "
+                f"{payload.get('version')!r} (want {CACHE_VERSION}); "
+                "ignoring it — re-run autotune to regenerate",
+                ScheduleCacheWarning)
+            return self
+        bad = 0
+        for key, entry in payload["entries"].items():
+            try:
+                self._entries[str(key)] = Schedule.from_json(entry)
+            except (ValueError, KeyError, TypeError):
+                bad += 1
+        if bad:
+            warnings.warn(
+                f"schedule cache {path!r}: skipped {bad} malformed "
+                "entr(y/ies); defaults apply for those shapes",
+                ScheduleCacheWarning)
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Process-global runtime: what core/dispatch.py consults
+# ---------------------------------------------------------------------------
+_GLOBAL_CACHE = ScheduleCache()
+_RECORDERS: List[List[Query]] = []
+_CONSULTS: Dict[str, str] = {}  # op -> describe() of the last schedule used
+
+
+def global_cache() -> ScheduleCache:
+    return _GLOBAL_CACHE
+
+
+def load_global_cache(path: Optional[str] = None) -> ScheduleCache:
+    """Load ``path`` (or $REPRO_SCHEDULE_CACHE) into the global cache."""
+    path = path or os.environ.get(DEFAULT_CACHE_ENV)
+    if path:
+        _GLOBAL_CACHE.load(path)
+    return _GLOBAL_CACHE
+
+
+def reset_global_cache() -> None:
+    _GLOBAL_CACHE.clear()
+    _GLOBAL_CACHE.path = None
+    _CONSULTS.clear()
+
+
+def default_backend() -> str:
+    import jax  # local: keep this module importable without initializing jax
+
+    return jax.default_backend()
+
+
+def lookup(op: str, shape_key: ShapeKey, dtype: str) -> Optional[Schedule]:
+    """The dispatch-layer query: record (if tracing under the recorder),
+    consult the global cache, note what ran. Returns None on miss."""
+    backend = default_backend()
+    shape_key = tuple(int(d) for d in shape_key)
+    query: Query = (op, shape_key, str(dtype), backend)
+    for rec in _RECORDERS:
+        rec.append(query)
+    schedule = _GLOBAL_CACHE.get(op, shape_key, str(dtype), backend)
+    _CONSULTS[op] = schedule.describe() if schedule is not None else "default"
+    return schedule
+
+
+@contextlib.contextmanager
+def record_shapes():
+    """Capture every dispatch-layer schedule query made inside the block.
+
+    Yields a list of (op, shape_key, dtype, backend) tuples, appended in
+    call order (duplicates included; ``autotune`` de-duplicates)."""
+    rec: List[Query] = []
+    _RECORDERS.append(rec)
+    try:
+        yield rec
+    finally:
+        _RECORDERS.remove(rec)
+
+
+def consults_snapshot(reset: bool = False) -> Dict[str, str]:
+    """op -> describe()/'default' for every schedule consult since the
+    last reset (the benchmark harness scopes this to one measurement)."""
+    snap = dict(_CONSULTS)
+    if reset:
+        _CONSULTS.clear()
+    return snap
+
+
+def consult_digest(reset: bool = False) -> str:
+    """Compact ';'-joined summary of the last schedule used per op, e.g.
+    ``dense[bm=8/bn=128/bk=512];activation:default``."""
+    snap = consults_snapshot(reset=reset)
+    return ";".join(snap[op] if snap[op] != "default" else f"{op}:default"
+                    for op in sorted(snap))

@@ -1,0 +1,167 @@
+"""Schedule measurement harness.
+
+Two modes, chosen by backend:
+
+  * ``time`` (real TPU/GPU) — run each candidate through the actual kernel
+    wrapper at the recorded shape and keep the median wall clock;
+  * ``rank`` (interpret mode / CPU) — Pallas interpret-mode wall clock
+    measures the interpreter, not the schedule, so candidates are ranked
+    by the analytic cost model instead (VMEM fit, MXU alignment,
+    arithmetic intensity, grid steps).  This keeps the tuner meaningful
+    in CI and produces the same cache artifact shape as hardware runs.
+
+Kernels are imported lazily so ``repro.tuning`` stays importable in
+oracle-only environments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.tuning import search
+from repro.tuning.schedules import Schedule
+from repro.tuning.search import ShapeKey
+
+MEASURE_MODES = ("time", "rank")
+
+
+def default_mode() -> str:
+    import jax
+
+    return "time" if jax.default_backend() == "tpu" else "rank"
+
+
+@dataclasses.dataclass
+class TuneResult:
+    op: str
+    shape_key: ShapeKey
+    dtype: str
+    mode: str
+    best: Schedule
+    records: List[Dict]  # one per candidate, best-first
+
+
+def make_runner(op: str, shape_key: ShapeKey,
+                dtype: str = "float32") -> Callable[[Schedule], object]:
+    """Closure running the kernel-impl wrapper for ``op`` at ``shape_key``
+    under an explicit schedule. Inputs are deterministic in the shape."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    # crc32, not hash(): str hashing is salted per process, and two tuning
+    # runs of the same (op, shape) must time identical inputs.
+    rng = np.random.default_rng(
+        zlib.crc32(repr((op, tuple(shape_key))).encode()))
+
+    def arr(*shape, positive=False, scale=1.0):
+        a = scale * rng.standard_normal(shape)
+        if positive:
+            a = np.log1p(np.exp(a))  # softplus > 0
+        return jnp.asarray(a, dtype=dtype)
+
+    if op == "dense":
+        m, k, n = shape_key
+        mu_x, var_x = arr(m, k), arr(m, k, positive=True)
+        mu_w, var_w = arr(k, n, scale=0.1), arr(k, n, positive=True, scale=0.1)
+        srm_x = var_x + jnp.square(mu_x)
+        srm_w = var_w + jnp.square(mu_w)
+        return lambda s: ops.pfp_dense(mu_x, srm_x, mu_w, srm_w,
+                                       impl="kernel", schedule=s)
+    if op == "dense_first":
+        m, k, n = shape_key
+        x = arr(m, k)
+        mu_w, var_w = arr(k, n, scale=0.1), arr(k, n, positive=True, scale=0.1)
+        return lambda s: ops.pfp_dense(x, x, mu_w, var_w, impl="kernel",
+                                       first_layer=True, schedule=s)
+    if op == "attention":
+        b, h, hkv, tq, tk, d = shape_key
+        q = arr(b, h, tq, d)
+        kk = arr(b, hkv, tk, d)
+        vm = arr(b, hkv, tk, d)
+        vv = arr(b, hkv, tk, d, positive=True)
+        scale = float(d) ** -0.5
+        return lambda s: ops.pfp_attention(q, kk, vm, vv, scale=scale,
+                                           causal=True, impl="kernel",
+                                           schedule=s)
+    if op == "activation":
+        rows, cols = shape_key
+        mu, var = arr(rows, cols), arr(rows, cols, positive=True)
+        return lambda s: ops.pfp_activation(mu, var, kind="gelu",
+                                            impl="kernel", schedule=s)
+    if op == "glu_product":
+        rows, cols = shape_key
+        a_mu, a_srm = arr(rows, cols), arr(rows, cols, positive=True)
+        b_mu, b_srm = arr(rows, cols), arr(rows, cols, positive=True)
+        return lambda s: ops.pfp_glu_product(a_mu, a_srm, b_mu, b_srm,
+                                             impl="kernel", schedule=s)
+    if op == "maxpool2d":
+        n, h, w, c = shape_key
+        mu, var = arr(n, h, w, c), arr(n, h, w, c, positive=True)
+        return lambda s: ops.pfp_maxpool2d(mu, var, impl="kernel", schedule=s)
+    if op in ("rmsnorm", "layernorm"):
+        rows, d = shape_key
+        mu, var = arr(rows, d), arr(rows, d, positive=True)
+        gain = arr(d)
+        if op == "rmsnorm":
+            return lambda s: ops.pfp_rmsnorm(mu, var, gain, rep="var",
+                                             impl="kernel", schedule=s)
+        bias = arr(d)
+        return lambda s: ops.pfp_layernorm(mu, var, gain, bias, rep="var",
+                                           impl="kernel", schedule=s)
+    raise ValueError(f"unknown tunable op {op!r}")
+
+
+def measure_schedule(run: Callable[[Schedule], object], schedule: Schedule,
+                     *, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock seconds for one candidate (device-synchronized)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(run(schedule))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(schedule))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def tune_op(op: str, shape_key: ShapeKey, dtype: str = "float32", *,
+            mode: Optional[str] = None, limit: int = 8,
+            iters: int = 5) -> TuneResult:
+    """Search the candidate space for one (op, shape, dtype) and return the
+    winner plus the per-candidate record table (best-first)."""
+    mode = mode or default_mode()
+    if mode not in MEASURE_MODES:
+        raise ValueError(f"unknown measure mode {mode!r}; "
+                         f"expected one of {MEASURE_MODES}")
+    shape_key = tuple(int(d) for d in shape_key)
+    cands = search.candidates(op, shape_key, limit=limit)
+    records: List[Dict] = []
+    run = make_runner(op, shape_key, dtype) if mode == "time" else None
+    for cand in cands:
+        cost = search.cost_summary(op, shape_key, cand)
+        rec = {
+            "schedule": cand.describe(),
+            "blocks": cand.as_dict(),
+            "vmem_mb": cost.vmem_bytes / 1e6,
+            "arithmetic_intensity": cost.arithmetic_intensity,
+            "grid_steps": cost.grid_steps,
+            "mxu_aligned": cost.mxu_aligned,
+            "seconds": None,
+        }
+        if mode == "time":
+            rec["seconds"] = measure_schedule(run, cand, iters=iters)
+        records.append(rec)
+    if mode == "time":
+        order = sorted(range(len(cands)), key=lambda i: records[i]["seconds"])
+        cands = [cands[i] for i in order]
+        records = [records[i] for i in order]
+    # rank mode: candidates() already returns best-first by cost model.
+    return TuneResult(op=op, shape_key=shape_key, dtype=dtype, mode=mode,
+                      best=cands[0], records=records)

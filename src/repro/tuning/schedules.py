@@ -1,0 +1,127 @@
+"""Schedule descriptors for the tuned PFP operator library.
+
+A :class:`Schedule` is the unit the autotuner searches over, the cache
+persists, and the dispatch registry hands to the kernel wrappers: a frozen
+mapping of Pallas block-shape parameters for one op kind. It deliberately
+knows nothing about jax or the kernels — ``kernels/ops.py`` imports this
+module, so it must stay dependency-free to keep the layering acyclic
+(tuning.measure reaches back into kernels lazily, at call time).
+
+Shape keys are the *logical* shapes the dispatch layer sees, before any
+flattening or padding the wrappers perform:
+
+    dense       (m, k, n)               m = flattened leading dims
+    attention   (b, h, hkv, tq, tk, d)
+    activation  (rows, cols)            rows = flattened leading dims
+    glu_product (rows, cols)
+    rmsnorm     (rows, d)
+    layernorm   (rows, d)
+    maxpool2d   (n, h, w, c)            NHWC, pre-pooling
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+# Block-parameter names per op, in canonical order. conv2d_im2col and the
+# batched-expert einsum route through the dense kernel and share its
+# "dense" schedules (keyed on their im2col / per-expert shapes).
+# "dense_first" is the Eq. 13 two-matmul variant (deterministic inputs):
+# same block axes, but a distinct op so its schedules are tuned against
+# the kernel that actually runs and never collide with three-matmul
+# entries at the same shape.
+OP_BLOCK_NAMES: Dict[str, Tuple[str, ...]] = {
+    "dense": ("block_m", "block_n", "block_k"),
+    "dense_first": ("block_m", "block_n", "block_k"),
+    "attention": ("block_q", "block_k"),
+    "activation": ("block_rows", "block_cols"),
+    "glu_product": ("block_rows", "block_cols"),
+    "maxpool2d": ("block_rows", "block_cols"),
+    "rmsnorm": ("block_rows",),
+    "layernorm": ("block_rows",),
+}
+
+TUNABLE_OPS = tuple(OP_BLOCK_NAMES)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One point in an op's schedule space (hashable, JSON-able)."""
+
+    op: str
+    blocks: Tuple[Tuple[str, int], ...]  # sorted (name, value) pairs
+
+    @classmethod
+    def make(cls, op: str, **blocks: int) -> "Schedule":
+        names = OP_BLOCK_NAMES.get(op)
+        if names is None:
+            raise ValueError(f"unknown tunable op {op!r}; "
+                             f"expected one of {TUNABLE_OPS}")
+        for name, value in blocks.items():
+            if name not in names:
+                raise ValueError(f"{op}: unknown block param {name!r}; "
+                                 f"expected a subset of {names}")
+            if not isinstance(value, int) or value <= 0:
+                raise ValueError(f"{op}.{name}: block sizes must be positive "
+                                 f"ints, got {value!r}")
+        return cls(op=op, blocks=tuple(sorted(blocks.items())))
+
+    def block(self, name: str, default: Optional[int] = None) -> Optional[int]:
+        for key, value in self.blocks:
+            if key == name:
+                return value
+        return default
+
+    def has(self, name: str) -> bool:
+        return any(key == name for key, _ in self.blocks)
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.blocks)
+
+    def describe(self) -> str:
+        """Compact form, e.g. ``dense[bk=512/bm=8/bn=128]`` (comma-free so
+        it can sit in one benchmark-CSV cell)."""
+        short = "/".join(f"{_short(k)}={v}" for k, v in self.blocks)
+        return f"{self.op}[{short}]"
+
+    def to_json(self) -> Dict[str, object]:
+        return {"op": self.op, "blocks": self.as_dict()}
+
+    @classmethod
+    def from_json(cls, payload: Mapping[str, object]) -> "Schedule":
+        op = payload["op"]
+        blocks = payload["blocks"]
+        if not isinstance(op, str) or not isinstance(blocks, Mapping):
+            raise ValueError(f"malformed schedule payload: {payload!r}")
+        return cls.make(op, **{str(k): v for k, v in blocks.items()})
+
+
+def _short(name: str) -> str:
+    return {"block_m": "bm", "block_n": "bn", "block_k": "bk",
+            "block_q": "bq", "block_rows": "br", "block_cols": "bc"}.get(
+                name, name)
+
+
+# Today's fixed defaults from kernels/ops.py — the miss fallback. Keeping
+# them HERE (and asserting equality in tests) means a cache miss is
+# bit-identical to the pre-tuner behavior.
+DEFAULT_SCHEDULES: Dict[str, Schedule] = {
+    "dense": Schedule.make("dense", block_m=128, block_n=128, block_k=512),
+    "dense_first": Schedule.make("dense_first", block_m=128, block_n=128,
+                                 block_k=512),
+    "attention": Schedule.make("attention", block_q=128, block_k=128),
+    "activation": Schedule.make("activation", block_rows=256, block_cols=512),
+    "glu_product": Schedule.make("glu_product", block_rows=256,
+                                 block_cols=512),
+    "maxpool2d": Schedule.make("maxpool2d", block_rows=256, block_cols=128),
+    "rmsnorm": Schedule.make("rmsnorm", block_rows=256),
+    "layernorm": Schedule.make("layernorm", block_rows=256),
+}
+
+
+def shape_key_str(shape_key: Tuple[int, ...]) -> str:
+    return "x".join(str(int(d)) for d in shape_key)
+
+
+def parse_shape_key(text: str) -> Tuple[int, ...]:
+    return tuple(int(d) for d in text.split("x"))

@@ -1,0 +1,209 @@
+"""Per-op schedule search spaces and the shared analytic cost model.
+
+Generalizes (and replaces) the ad-hoc ``vmem_bytes`` / ``arithmetic_intensity``
+helpers that used to live in ``benchmarks/bench_table2_schedules.py``: every
+quantity that decides a TPU schedule — per-grid-step VMEM working set, MXU
+alignment, arithmetic intensity, grid-step count — is computed HERE, for
+every tunable op, from the logical shape key and a candidate
+:class:`~repro.tuning.schedules.Schedule`.
+
+The search space is deliberately structural: candidates are enumerated from
+small per-axis menus, clamped to the (padded) problem shape, de-duplicated,
+and filtered by the cost model (must fit VMEM). On a real TPU the
+measurement harness times the survivors; off-TPU (Pallas interpret mode,
+where wall clock measures the interpreter, not the schedule) the cost-model
+ranking picks the winner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+from repro.tuning.schedules import (DEFAULT_SCHEDULES, OP_BLOCK_NAMES,
+                                    Schedule)
+
+# v5e-class core: ~16 MB VMEM; keep headroom for double buffering.
+VMEM_LIMIT_BYTES = 16 * 2 ** 20
+VMEM_HEADROOM = 0.75
+
+_SUBLANE = 8    # fp32 sublane multiple
+_LANE = 128     # lane multiple (MXU/VPU width)
+
+ShapeKey = Tuple[int, ...]
+
+
+def _round_up(x: int, base: int) -> int:
+    return -(-int(x) // base) * base
+
+
+def _steps(dim: int, block: int) -> int:
+    return -(-_round_up(dim, block) // block)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostSummary:
+    """Analytic per-schedule cost figures (no hardware required)."""
+
+    vmem_bytes: int          # per-grid-step VMEM working set (fp32)
+    flops: int               # whole-op FLOPs
+    bytes_moved: int         # whole-op HBM traffic estimate (fp32)
+    grid_steps: int          # total grid size after padding
+    mxu_aligned: bool
+    fits_vmem: bool
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes_moved, 1)
+
+
+def cost_summary(op: str, shape_key: ShapeKey, schedule: Schedule) -> CostSummary:
+    if op not in OP_BLOCK_NAMES:
+        raise ValueError(f"unknown tunable op {op!r}")
+    get = schedule.block
+    if op in ("dense", "dense_first"):
+        m, k, n = shape_key
+        bm = min(get("block_m", 128), _round_up(m, _SUBLANE))
+        bn = min(get("block_n", 128), _round_up(n, _LANE))
+        bk = min(get("block_k", 512), _round_up(k, _LANE))
+        # Eq. 12 joint kernel: mu/srm tiles for x and w, 3 matmuls, 3
+        # accumulators. Eq. 13 first-layer variant: one x tile, mu/var
+        # weight tiles, 2 matmuls, 2 accumulators.
+        n_mm = 3 if op == "dense" else 2
+        x_bufs = 2 if op == "dense" else 1
+        vmem = (x_bufs * bm * bk + 2 * bk * bn + n_mm * bm * bn) * 4
+        flops = n_mm * 2 * m * n * k
+        # In the (M/bm, N/bn, K/bk) grid each x tile is re-read once per
+        # N-block and each w tile once per M-block (K is the inner
+        # sequential axis): small bm re-streams the whole weight matrix.
+        io = (x_bufs * m * k * _steps(n, bn) + 2 * k * n * _steps(m, bm)
+              + 2 * m * n) * 4
+        steps = _steps(m, bm) * _steps(n, bn) * _steps(k, bk)
+        aligned = bm % _SUBLANE == 0 and bn % _LANE == 0 and bk % _LANE == 0
+    elif op == "attention":
+        b, h, hkv, tq, tk, d = shape_key
+        bq = min(get("block_q", 128), _round_up(tq, _SUBLANE))
+        bk = min(get("block_k", 128), _round_up(tk, _SUBLANE))
+        vmem = (bq * d + 3 * bk * d          # q tile + k/v_mu/v_var tiles
+                + bq * bk                    # score tile
+                + 4 * bq * d                 # acc_mu/acc_var + two outputs
+                + 2 * bq * _LANE) * 4        # running max / normalizer
+        flops = b * h * tq * tk * (6 * d + 8)
+        io = (b * h * tq * d * 3 + b * hkv * tk * d * 3 * _steps(tq, bq)) * 4
+        steps = b * h * _steps(tq, bq) * _steps(tk, bk)
+        aligned = bq % _SUBLANE == 0 and bk % _SUBLANE == 0
+    elif op in ("activation", "glu_product", "maxpool2d"):
+        rows, cols = _elementwise_rows_cols(op, shape_key)
+        br = min(get("block_rows", 256), _round_up(rows, _SUBLANE))
+        bc = min(get("block_cols", 512), _round_up(cols, _LANE))
+        tiles = {"activation": 4, "glu_product": 6, "maxpool2d": 10}[op]
+        vmem = tiles * br * bc * 4
+        per_elem = {"activation": 50, "glu_product": 2, "maxpool2d": 60}[op]
+        flops = per_elem * rows * cols
+        io = tiles * rows * cols * 4
+        steps = _steps(rows, br) * _steps(cols, bc)
+        aligned = br % _SUBLANE == 0 and bc % _LANE == 0
+    else:  # rmsnorm / layernorm: full (padded) feature axis stays resident
+        rows, d = shape_key
+        dp = _round_up(d, _LANE)
+        br = min(get("block_rows", 256), _round_up(rows, _SUBLANE))
+        vmem = (4 * br * dp + 2 * dp) * 4
+        flops = 12 * rows * d
+        io = 4 * rows * d * 4
+        steps = _steps(rows, br)
+        aligned = br % _SUBLANE == 0
+    return CostSummary(
+        vmem_bytes=vmem, flops=flops, bytes_moved=io, grid_steps=steps,
+        mxu_aligned=aligned,
+        fits_vmem=vmem <= VMEM_LIMIT_BYTES * VMEM_HEADROOM,
+    )
+
+
+def _elementwise_rows_cols(op: str, shape_key: ShapeKey) -> Tuple[int, int]:
+    if op == "maxpool2d":
+        n, h, w, c = shape_key
+        return n * (h // 2) * (w // 2), c
+    rows, cols = shape_key
+    return rows, cols
+
+
+def score(op: str, shape_key: ShapeKey, schedule: Schedule):
+    """Sort key: higher is better. Aligned schedules beat unaligned, then
+    arithmetic intensity, then fewer grid steps (less invocation overhead)."""
+    c = cost_summary(op, shape_key, schedule)
+    return (c.fits_vmem, c.mxu_aligned, c.arithmetic_intensity, -c.grid_steps)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+_DENSE_MENU = {"block_m": (8, 16, 32, 64, 128, 256),
+               "block_n": (128, 256, 512),
+               "block_k": (128, 256, 512, 1024)}
+
+_AXIS_MENU: Dict[str, Dict[str, Sequence[int]]] = {
+    "dense": _DENSE_MENU,
+    "dense_first": _DENSE_MENU,
+    "attention": {"block_q": (16, 32, 64, 128, 256),
+                  "block_k": (32, 64, 128, 256, 512)},
+    "activation": {"block_rows": (8, 64, 128, 256, 512),
+                   "block_cols": (128, 256, 512)},
+    "glu_product": {"block_rows": (8, 64, 128, 256, 512),
+                    "block_cols": (128, 256, 512)},
+    "maxpool2d": {"block_rows": (8, 64, 128, 256, 512),
+                  "block_cols": (128, 256)},
+    "rmsnorm": {"block_rows": (8, 16, 64, 128, 256, 512)},
+    "layernorm": {"block_rows": (8, 16, 64, 128, 256, 512)},
+}
+
+# The dim of the logical shape each block axis tiles, per op — used to clamp
+# menu values so candidates never exceed the padded problem.
+_DENSE_DIM = {"block_m": (0, _SUBLANE), "block_n": (2, _LANE),
+              "block_k": (1, _LANE)}
+
+_AXIS_DIM = {
+    "dense": _DENSE_DIM,
+    "dense_first": _DENSE_DIM,
+    "attention": {"block_q": (3, _SUBLANE), "block_k": (4, _SUBLANE)},
+    "rmsnorm": {"block_rows": (0, _SUBLANE)},
+    "layernorm": {"block_rows": (0, _SUBLANE)},
+}
+
+
+def _clamped_axis_values(op: str, name: str, shape_key: ShapeKey) -> List[int]:
+    menu = _AXIS_MENU[op][name]
+    if op in ("activation", "glu_product", "maxpool2d"):
+        rows, cols = _elementwise_rows_cols(op, shape_key)
+        dim = rows if name == "block_rows" else cols
+        align = _SUBLANE if name == "block_rows" else _LANE
+    else:
+        idx, align = _AXIS_DIM[op][name]
+        dim = shape_key[idx]
+    limit = _round_up(dim, align)
+    vals = sorted({min(v, limit) for v in menu})
+    return vals
+
+
+def candidates(op: str, shape_key: ShapeKey, *,
+               limit: int | None = None) -> List[Schedule]:
+    """Enumerate the filtered, ranked schedule space for ``op`` at
+    ``shape_key``. Always non-empty: the default schedule is included (its
+    clamped form always fits — it is what runs today). Best-ranked first."""
+    if op not in OP_BLOCK_NAMES:
+        raise ValueError(f"unknown tunable op {op!r}")
+    names = OP_BLOCK_NAMES[op]
+    axes = [_clamped_axis_values(op, name, shape_key) for name in names]
+    pool = {Schedule.make(op, **dict(zip(names, combo)))
+            for combo in itertools.product(*axes)}
+    pool.add(DEFAULT_SCHEDULES[op])
+    # describe() tie-break: a total, hash-seed-independent order so the
+    # tuner is deterministic across processes.
+    ranked = sorted(pool,
+                    key=lambda s: (score(op, shape_key, s), s.describe()),
+                    reverse=True)
+    kept = [s for s in ranked if cost_summary(op, shape_key, s).fits_vmem]
+    if not kept:  # paranoid: never return an empty space
+        kept = [DEFAULT_SCHEDULES[op]]
+    if limit is not None:
+        kept = kept[:limit]
+    return kept

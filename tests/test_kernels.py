@@ -1,5 +1,8 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
-sweeping shapes and dtypes per the kernel contract."""
+sweeping shapes and dtypes per the kernel contract — including the
+paper-config ragged (non-MXU-aligned) shapes under non-default tuned
+schedules, so every padding path is pinned for every block choice the
+autotuner may select."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +11,7 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.pfp_attention import pfp_attention_pallas
 from repro.kernels.pfp_dense import pfp_dense_pallas
+from repro.tuning.schedules import Schedule
 
 KEY = jax.random.PRNGKey(0)
 
@@ -50,6 +54,79 @@ def test_pfp_dense_kernel_bf16_inputs():
     # The kernel squares in bf16 (as the MXU path would); the oracle squares
     # after upcast — agreement is bounded by bf16 epsilon on the squares.
     np.testing.assert_allclose(var, rvar, rtol=1e-3, atol=2e-2)
+
+
+# Paper-config ragged shapes: MLP dense-1 at batch 100 (M=100, K=784,
+# N=100) plus deliberately prime-ish dims. Every schedule here exercises a
+# different padding path (block > dim, block ∤ dim, K-padding with zeros).
+@pytest.mark.parametrize("m,k,n", [
+    (100, 784, 100),     # paper MLP dense-1 at batch 100
+    (100, 100, 10),      # paper MLP head
+    (13, 57, 9),         # everything ragged
+])
+@pytest.mark.parametrize("blocks", [
+    (8, 128, 128), (32, 256, 256), (128, 128, 512), (256, 512, 896),
+])
+def test_pfp_dense_ragged_shapes_under_schedules(m, k, n, blocks):
+    bm, bn, bk = blocks
+    sched = Schedule.make("dense", block_m=bm, block_n=bn, block_k=bk)
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, m * 31 + k * 7 + n))
+    mu_x, var_x = _gauss_pair(kx, (m, k))
+    srm_x = var_x + jnp.square(mu_x)
+    mu_w, var_w = _gauss_pair(kw, (k, n), 0.1)
+    srm_w = var_w + jnp.square(mu_w)
+    got = ops.pfp_dense(mu_x, srm_x, mu_w, srm_w, impl="kernel",
+                        schedule=sched)
+    want = ops.pfp_dense(mu_x, srm_x, mu_w, srm_w, impl="xla")
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tq,tk", [(77, 131), (100, 132), (1, 97)])
+@pytest.mark.parametrize("bq,bk", [(16, 32), (64, 64), (128, 256)])
+def test_attention_ragged_shapes_under_schedules(tq, tk, bq, bk):
+    sched = Schedule.make("attention", block_q=bq, block_k=bk)
+    ks = jax.random.split(jax.random.fold_in(KEY, tq * 131 + tk), 4)
+    B, H, D = 2, 3, 64
+    q = jax.random.normal(ks[0], (B, H, tq, D))
+    k = jax.random.normal(ks[1], (B, H, tk, D))
+    vm = jax.random.normal(ks[2], (B, H, tk, D))
+    vv = jax.nn.softplus(jax.random.normal(ks[3], (B, H, tk, D)))
+    scale = D ** -0.5
+    got = ops.pfp_attention(q, k, vm, vv, scale=scale, causal=True,
+                            impl="kernel", schedule=sched)
+    want = ops.pfp_attention(q, k, vm, vv, scale=scale, causal=True,
+                             impl="xla")
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 28, 28, 6), (3, 14, 14, 16)])
+@pytest.mark.parametrize("br,bc", [(8, 128), (64, 64), (512, 256)])
+def test_maxpool_ragged_shapes_under_schedules(shape, br, bc):
+    sched = Schedule.make("maxpool2d", block_rows=br, block_cols=bc)
+    mu, var = _gauss_pair(jax.random.fold_in(KEY, shape[1] * br), shape)
+    got = ops.pfp_maxpool2d(mu, var, impl="kernel", schedule=sched)
+    want = ops.pfp_maxpool2d(mu, var, impl="xla")
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("rows,d", [(26, 48), (100, 100)])
+@pytest.mark.parametrize("br", [8, 64, 512])
+def test_norms_ragged_shapes_under_schedules(rows, d, br):
+    kx, kg = jax.random.split(jax.random.fold_in(KEY, rows * br + d))
+    mu, var = _gauss_pair(kx, (rows, d))
+    gain = jax.random.normal(kg, (d,))
+    bias = jax.random.normal(jax.random.fold_in(kg, 1), (d,))
+    for op, args in (("rmsnorm", (mu, var, gain)),
+                     ("layernorm", (mu, var, gain, bias))):
+        fn = ops.pfp_rmsnorm if op == "rmsnorm" else ops.pfp_layernorm
+        sched = Schedule.make(op, block_rows=br)
+        got = fn(*args, rep="var", impl="kernel", schedule=sched)
+        want = fn(*args, rep="var", impl="xla")
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-5)
 
 
 def test_pfp_dense_first_layer_kernel():
