@@ -1,0 +1,100 @@
+"""Serving-engine benchmark: continuous-batching throughput and latency.
+
+Two row families, emitted through benchmarks/common.py:
+
+  serving/decode_step/...   median wall time of one lockstep engine decode
+                            step (the whole slot batch, select-merge
+                            included) — the engine's hot path;
+  serving/loadgen/...       an end-to-end Poisson loadgen run: derived
+                            column carries throughput, p50/p99 latency and
+                            abstention/escalation rates.
+
+Quick profile: 32 requests; --full: the acceptance-criteria 200-request
+run. Deterministic seeds, so rows are comparable across PRs. On the XLA
+stack these are real CPU timings; with ``run.py --impl kernel`` they run
+the Pallas interpret path (correctness-only off-TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, schedule_note, time_fn
+from repro.bayes.convert import svi_to_pfp
+from repro.configs import reduced_config
+from repro.models import lm
+from repro.serving.engine import (Engine, EngineConfig, RequestScheduler,
+                                  RouterConfig, SchedulerConfig,
+                                  UncertaintyRouter, poisson_trace, run_load)
+
+ARCH = "granite-8b"
+SLOTS = 4
+MAX_LEN = 48
+
+
+def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0):
+    router = UncertaintyRouter(
+        cfg, RouterConfig(mi_continue=mi_continue, mi_abstain=mi_abstain,
+                          escalate_samples=4))
+    scheduler = RequestScheduler(
+        SchedulerConfig(max_queue=256, prefill_chunk=8, prefill_budget=16),
+        max_len=MAX_LEN)
+    return Engine(cfg, params,
+                  EngineConfig(slots=SLOTS, max_len=MAX_LEN,
+                               num_uncertainty_samples=16, seed=0),
+                  router=router, scheduler=scheduler)
+
+
+def run(quick: bool = True):
+    lines = []
+    cfg = reduced_config(ARCH)
+    params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+    # -- hot path: one lockstep decode step over the full slot batch -------
+    engine = _build_engine(cfg, params)
+    positions = np.full(SLOTS, 8, np.int32)
+    lm_mean, lm_var = engine.logit_buffers
+    args = (params,
+            jnp.zeros((SLOTS, 1), jnp.int32),
+            jnp.asarray(positions[:, None]),
+            jnp.asarray(positions + 1),
+            jnp.ones((SLOTS,), bool),
+            engine.pool.states, lm_mean, lm_var)
+    t_step = time_fn(engine.decode_fn, *args)
+    lines.append(emit(
+        f"serving/decode_step/b{SLOTS}", t_step,
+        f"tok_s={SLOTS / t_step:.1f}",
+        schedule=schedule_note(engine.decode_fn, *args)))
+
+    # -- end-to-end: Poisson loadgen through the whole engine --------------
+    n_requests = 32 if quick else 200
+    engine = _build_engine(cfg, params)
+    # warm-up drains a small trace through the SAME engine first, so the
+    # measured row reports hot-path throughput, not trace/compile time
+    warm = poisson_trace(4, rate=0.5, vocab_size=cfg.vocab_size, seed=9,
+                         prompt_len=(4, 16), max_new_tokens=(2, 8))
+    run_load(engine, warm)
+    engine.reset_metrics()
+    trace = poisson_trace(n_requests, rate=0.5, vocab_size=cfg.vocab_size,
+                          seed=1, prompt_len=(4, 16),
+                          max_new_tokens=(2, 8))
+    for r in trace:  # rebase arrivals onto the post-warm-up engine clock
+        r.arrival += engine.now
+    s = run_load(engine, trace)
+    assert s["final_occupancy"] == 0, "slot leak in loadgen run"
+    lines.append(emit(
+        f"serving/loadgen/n{n_requests}",
+        s["elapsed_s"],
+        f"tput={s['throughput_tok_s']:.1f}tok_s"
+        f";p50_s={s['p50_latency_s']:.3f};p99_s={s['p99_latency_s']:.3f}"
+        f";p50_steps={s['p50_latency_steps']:.1f}"
+        f";p99_steps={s['p99_latency_steps']:.1f}"
+        f";abstain={s['abstain_rate']:.3f}"
+        f";escalate={s['escalation_rate']:.3f}"
+        f";occupancy={s['mean_occupancy']:.2f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

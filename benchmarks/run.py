@@ -78,9 +78,9 @@ def main() -> None:
         _tune_paper_models(full=args.full, save_path=args.schedule_cache)
 
     from benchmarks import (bench_fig5_formulations, bench_fig7_batch_sweep,
-                            bench_table1_quality, bench_table2_schedules,
-                            bench_table3_maxpool, bench_table4_profiling,
-                            bench_table5_processors)
+                            bench_serving, bench_table1_quality,
+                            bench_table2_schedules, bench_table3_maxpool,
+                            bench_table4_profiling, bench_table5_processors)
 
     benches = {
         "table1": bench_table1_quality,
@@ -90,6 +90,7 @@ def main() -> None:
         "table4": bench_table4_profiling,
         "fig7": bench_fig7_batch_sweep,
         "table5": bench_table5_processors,
+        "serving": bench_serving,
     }
     from benchmarks.common import CSV_HEADER
 

@@ -6,6 +6,7 @@
 4. Show OOD detection: texture images get high epistemic uncertainty.
 5. Flip the same model onto the Pallas kernel path     (core/dispatch.py)
 6. Autotune per-op kernel schedules for this model     (repro.tuning, §6)
+7. Serve an LM through the continuous-batching engine  (repro.serving.engine)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -120,6 +121,40 @@ def main():
     # To persist: autotune(..., save_path='schedules.json') and later
     # repro.tuning.load_global_cache('schedules.json') (or run benchmarks
     # via `python benchmarks/run.py --tune --impl kernel`).
+
+    print("== 7. Serving: uncertainty-aware continuous batching ==")
+    # The engine (src/repro/serving/engine/, see its README.md) sustains a
+    # request stream against a pooled decode batch: admission-controlled
+    # scheduling, chunked prefill, ONE probabilistic pass per decode step
+    # for the whole batch, and an uncertainty router that turns the free
+    # per-token MI signal into continue / escalate-to-SVI / abstain.
+    import dataclasses
+
+    from repro.configs import reduced_config
+    from repro.models import lm
+    from repro.serving.engine import (Engine, EngineConfig, RouterConfig,
+                                      UncertaintyRouter, poisson_trace,
+                                      run_load)
+
+    lm_cfg = dataclasses.replace(reduced_config("granite-8b"),
+                                 sigma_init=5e-2)  # wide posteriors: the
+    #                            router's gray zone actually gets traffic
+    lm_params = svi_to_pfp(lm.init_params(lm_cfg, jax.random.PRNGKey(0)))
+    engine = Engine(
+        lm_cfg, lm_params,
+        EngineConfig(slots=2, max_len=24, num_uncertainty_samples=16),
+        router=UncertaintyRouter(lm_cfg, RouterConfig(
+            mi_continue=0.02, mi_abstain=1.5, escalate_samples=4)))
+    trace = poisson_trace(5, rate=0.7, vocab_size=lm_cfg.vocab_size,
+                          seed=0, prompt_len=(3, 8), max_new_tokens=(2, 4))
+    s = run_load(engine, trace)
+    print(f"  served {s['completed']} requests / {s['tokens_generated']} "
+          f"tokens in {s['steps']} engine steps "
+          f"(abstained={s['abstained']}, escalations={s['escalations']})")
+    print(f"  p50 latency {s['p50_latency_steps']:.1f} steps, slot pool "
+          f"drained: final occupancy {s['final_occupancy']}")
+    # `python -m repro.launch.serve --engine` runs this on a (data, model)
+    # mesh; `python benchmarks/run.py --only serving` benchmarks it.
 
 
 if __name__ == "__main__":

@@ -34,6 +34,59 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__),
                            "..", "..", "..", "results", "dryrun")
 
 
+def _serving_probe(arch: str, formulation: str) -> dict:
+    """Tiny deterministic engine run on the reduced config: records the
+    abstention/escalation counts the uncertainty router produces, so
+    decode cells carry a serving section comparable across PRs. The
+    dry-run otherwise only compiles; this is the one executed probe
+    (seconds on the reduced config, fixed seeds, XLA stack)."""
+    from repro.bayes.convert import svi_to_pfp
+    from repro.configs import reduced_config
+    from repro.models import lm
+    from repro.nn import pjit_hints
+    from repro.serving.engine import (Engine, EngineConfig, RouterConfig,
+                                      UncertaintyRouter, poisson_trace,
+                                      run_load)
+
+    import dataclasses
+
+    # Widen the init posteriors (sigma 5e-2 vs the paper's 1e-4 init) so
+    # the probe's MI signal actually exercises the router's three bands.
+    cfg = dataclasses.replace(reduced_config(arch), sigma_init=5e-2)
+    if not cfg.embed_inputs:
+        return {"status": "skipped",
+                "reason": "frame-embedding frontend (no token prompts)"}
+    try:
+        pjit_hints.set_rules(None)  # drop the 512-chip cell shardings
+        router_cfg = RouterConfig(mi_continue=0.02, mi_abstain=0.5,
+                                  escalate_samples=4)
+        params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(0)))
+        engine = Engine(
+            cfg, params,
+            EngineConfig(slots=2, max_len=16, num_uncertainty_samples=16,
+                         formulation=formulation, seed=0),
+            router=UncertaintyRouter(cfg, router_cfg,
+                                     formulation=formulation))
+        trace = poisson_trace(6, rate=0.7, vocab_size=cfg.vocab_size,
+                              seed=0, prompt_len=(3, 6),
+                              max_new_tokens=(2, 4))
+        s = run_load(engine, trace, max_steps=500)
+        return {"status": "ok",
+                "router": {"mi_continue": router_cfg.mi_continue,
+                           "mi_abstain": router_cfg.mi_abstain,
+                           "escalate_samples": router_cfg.escalate_samples},
+                "requests": s["submitted"],
+                "completed": s["completed"],
+                "abstained": s["abstained"],
+                "escalations": s["escalations"],
+                "tokens_generated": s["tokens_generated"],
+                "abstain_rate": round(s["abstain_rate"], 4),
+                "escalation_rate": round(s["escalation_rate"], 4),
+                "final_occupancy": s["final_occupancy"]}
+    except Exception as e:  # noqa: BLE001
+        return {"status": "error", "error": f"{type(e).__name__}: {e}"}
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              mode_override=None, save: bool = True, tag: str = "",
              formulation: str = "srm", serve_params: str = "auto",
@@ -164,6 +217,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         result.update(status="error", error=f"{type(e).__name__}: {e}",
                       traceback=traceback.format_exc()[-4000:])
         print(f"[ERR] {arch} x {shape_name} x {mesh_name}: {e}")
+    if SHAPES[shape_name].kind == "decode":
+        result["serving"] = _serving_probe(arch, formulation)
+        if result["serving"].get("status") == "ok":
+            sv = result["serving"]
+            print(f"      serving probe: {sv['completed']} completed, "
+                  f"{sv['abstained']} abstained, "
+                  f"{sv['escalations']} escalations")
     return _save(result) if save else result
 
 

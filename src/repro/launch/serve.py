@@ -1,9 +1,18 @@
-"""Distributed PFP serving driver: prefill + uncertainty-aware decode on a
+"""Distributed PFP serving driver: the continuous-batching engine on a
 (data, model) mesh — the executed version of the decode_* dry-run cells.
+
+Drives ``repro.serving.engine``: Poisson request arrivals, admission-
+controlled scheduling, chunked prefill, one probabilistic forward pass per
+decode step for the whole slot batch, and uncertainty routing
+(continue / escalate-to-SVI / abstain). ``--impl kernel`` flips every PFP
+op onto the Pallas kernels via the impl-dispatch registry (interpret mode
+off-TPU).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --devices 8 --mesh 2,4 \
-      --arch granite-8b --reduced --tokens 8
+      --arch granite-8b --reduced --engine --tokens 8
+  PYTHONPATH=src python -m repro.launch.serve --devices 2 --reduced \
+      --engine --tokens 4            # CI interpret-mode smoke
 """
 import argparse
 import os
@@ -22,62 +31,106 @@ _early_flags()
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 
 from repro.bayes.convert import svi_to_pfp  # noqa: E402
 from repro.configs import get_config, reduced_config  # noqa: E402
 from repro.launch import sharding as shlib  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models import lm  # noqa: E402
-from repro.nn.module import Context  # noqa: E402
-from repro.core.modes import Mode  # noqa: E402
-from repro.serving.decode import uncertainty_decode  # noqa: E402
+from repro.serving.engine import (Engine, EngineConfig, RequestScheduler,  # noqa: E402
+                                  RouterConfig, SchedulerConfig,
+                                  UncertaintyRouter, poisson_trace, run_load)
+
+_SUMMARY_KEYS = (
+    "submitted", "rejected", "expired", "completed", "abstained",
+    "escalations", "tokens_generated", "steps", "throughput_tok_s",
+    "p50_latency_steps", "p99_latency_steps", "abstain_rate",
+    "escalation_rate", "peak_occupancy", "final_occupancy",
+)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
-    ap.add_argument("--mesh", default="2,4")
+    ap.add_argument("--mesh", default=None,
+                    help="data,model dims (default: 1,<devices>)")
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--full-size", dest="reduced", action="store_false",
+                    help="serve the full-size config instead of the "
+                         "reduced CPU-smoke one")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (the continuous batch size)")
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=8,
+                    help="max new tokens per request")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate (requests per engine step)")
+    ap.add_argument("--engine", action="store_true", default=True,
+                    help="no-op compatibility flag: the continuous-batching "
+                         "engine is the only serving path (the pre-engine "
+                         "lockstep demo loop was removed)")
+    ap.add_argument("--impl", default=None, choices=["xla", "kernel"],
+                    help="PFP operator implementation (core/dispatch.py)")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--mi-continue", type=float, default=0.5)
+    ap.add_argument("--mi-abstain", type=float, default=3.0)
+    ap.add_argument("--escalate-samples", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    dims = tuple(int(x) for x in args.mesh.split(","))
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split(","))
+    else:
+        dims = (1, args.devices)
     mesh = make_mesh(dims, ("data", "model"))
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     max_len = args.prompt_len + args.tokens
 
-    params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(0)))
+    params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(args.seed)))
     p_sh = shlib.params_shardings(jax.eval_shape(lambda: params), mesh,
                                   serve=True)
     params = jax.device_put(params, p_sh)
-    ctx = Context(mode=Mode.PFP)
 
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
+    router = UncertaintyRouter(
+        cfg, RouterConfig(mi_continue=args.mi_continue,
+                          mi_abstain=args.mi_abstain,
+                          escalate_samples=args.escalate_samples),
+        impl=args.impl)
+    scheduler = RequestScheduler(
+        SchedulerConfig(prefill_chunk=args.prefill_chunk,
+                        prefill_budget=2 * args.prefill_chunk),
+        max_len=max_len)
+    trace = poisson_trace(
+        args.requests, args.rate, vocab_size=cfg.vocab_size, seed=args.seed,
+        prompt_len=(max(2, args.prompt_len // 2), args.prompt_len),
+        max_new_tokens=(max(1, args.tokens // 2), args.tokens))
+
     with mesh:
-        last, states = lm.prefill(params, cfg, {"tokens": prompt}, ctx,
-                                  max_len=max_len)
-        pos = args.prompt_len
-        print(f"{'step':>4s} {'tokens':24s} {'MI':>24s} abstain")
-        for t in range(args.tokens):
-            out = uncertainty_decode(last.mean.astype(jnp.float32),
-                                     last.var.astype(jnp.float32),
-                                     jax.random.PRNGKey(10 + t))
-            print(f"{t:4d} {str(np.asarray(out.token)):24s} "
-                  f"{str(np.asarray(out.mutual_info).round(2)):>24s} "
-                  f"{np.asarray(out.abstain)}")
-            dec_in = {"tokens": out.token[:, None].astype(jnp.int32),
-                      "positions": jnp.full((args.batch, 1), pos, jnp.int32),
-                      "cache_len": jnp.full((args.batch,), pos, jnp.int32)}
-            last, states = lm.decode_step(params, cfg, dec_in, states, ctx)
-            pos += 1
-    print("served", args.batch, "sequences x", args.tokens,
-          "tokens — one PFP pass per step (SVI would need 30x).")
+        engine = Engine(
+            cfg, params,
+            # bf16 activations, mirroring the decode_* dry-run programs
+            # (serving/decode.py) whose executed version this driver is
+            EngineConfig(slots=args.batch, max_len=max_len, impl=args.impl,
+                         compute_dtype=jnp.bfloat16, seed=args.seed),
+            router=router, scheduler=scheduler, mesh=mesh)
+        summary = run_load(engine, trace)
+
+    print(f"== engine summary ({cfg.name}, mesh={dims}, "
+          f"impl={args.impl or 'default'}) ==")
+    for k in _SUMMARY_KEYS:
+        v = summary[k]
+        print(f"  {k:20s} {v:.4g}" if isinstance(v, float)
+              else f"  {k:20s} {v}")
+    engine.pool.check_invariants()
+    if summary["final_occupancy"] != 0:
+        print("ERROR: slot pool leaked "
+              f"{summary['final_occupancy']} slots", file=sys.stderr)
+        return 1
+    print(f"served {summary['completed']} requests "
+          f"({summary['tokens_generated']} tokens) — one PFP pass per decode "
+          "step; escalations spent SVI samples only on gray-zone tokens.")
     return 0
 
 

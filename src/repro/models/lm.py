@@ -347,6 +347,78 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return states
 
 
+def _state_batch_axis(path) -> int:
+    """Slot/batch axis of a decode-state leaf under this module's stacking
+    convention: leaves under ``states['stack']`` carry a leading scanned
+    group axis (batch is axis 1); head/tail leaves put batch first."""
+    first = path[0]
+    key = getattr(first, "key", None)
+    if key is None:
+        key = getattr(first, "name", str(first))
+    return 1 if str(key) == "stack" else 0
+
+
+def take_decode_slots(states, idx):
+    """Gather per-slot decode state along the slot/batch axis.
+
+    idx: int array of slot indices. Returns a state pytree whose batch dim
+    is ``len(idx)`` — used by the serving engine to run chunked prefill on
+    one slot's state view and to compact a fragmented slot pool (a
+    permutation gather, one device op per leaf, no host round-trip).
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+
+    def take(path, leaf):
+        return jnp.take(leaf, idx, axis=_state_batch_axis(path))
+
+    return jax.tree_util.tree_map_with_path(take, states)
+
+
+def write_decode_slot(states, slot, sub):
+    """Scatter a single-slot substate (batch dim 1) into the pool at
+    ``slot``. Inverse of ``take_decode_slots(states, [slot])``."""
+
+    def wr(path, pool_leaf, sub_leaf):
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool_leaf, sub_leaf.astype(pool_leaf.dtype), slot,
+            axis=_state_batch_axis(path))
+
+    return jax.tree_util.tree_map_with_path(wr, states, sub)
+
+
+def reset_decode_slot(states, slot):
+    """Zero one slot's decode state (KV rows, recurrent/SSM carries) so a
+    newly allocated request never sees the previous occupant's state."""
+
+    def rz(path, leaf):
+        ax = _state_batch_axis(path)
+        shape = list(leaf.shape)
+        shape[ax] = 1
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, jnp.zeros(shape, leaf.dtype), slot, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(rz, states)
+
+
+def select_decode_slots(new_states, old_states, keep_new):
+    """Per-slot merge of two state pytrees: ``keep_new`` (B,) bool takes the
+    freshly updated slot state where True and the old one where False.
+
+    A batched decode step advances EVERY slot's state (recurrent/SSM
+    carries unconditionally; KV caches write a row per slot) — parked and
+    mid-prefill slots must keep their old state or the lockstep step
+    corrupts them.
+    """
+
+    def sel(path, new, old):
+        ax = _state_batch_axis(path)
+        shape = [1] * new.ndim
+        shape[ax] = new.shape[ax]
+        return jnp.where(keep_new.reshape(shape), new, old)
+
+    return jax.tree_util.tree_map_with_path(sel, new_states, old_states)
+
+
 def decode_step(params, cfg: ModelConfig, inputs, states, ctx: Context):
     """One-token decode. inputs: {'tokens': (B,1)} or {'frame_embeddings':
     (B,1,D)}, plus 'positions': (B,1) absolute position, optional

@@ -119,7 +119,9 @@ def attention_apply(
 
     new_cache = None
     if cache is not None:
-        # Insert the new K/V at `positions` (same offset per batch).
+        # Insert the new K/V rows at each batch element's own offset
+        # (positions[b, 0] — continuous-batching slots sit at independent
+        # positions; lockstep callers simply pass equal offsets).
         # Decode (Tq=1): pin the updated cache to the input-cache sharding —
         # a single-token dynamic-update-slice otherwise makes GSPMD
         # replicate the whole cache inside the layer scan. Prefill (full
@@ -129,16 +131,16 @@ def attention_apply(
 
         pin = (lambda a: constrain_kv(a)) if positions.shape[1] == 1 \
             else (lambda a: a)
-        start = positions[0, 0]
-        idx = (0, 0, start, 0)
-        cache = KVCache(
-            pin(jax.lax.dynamic_update_slice(
-                cache.k_mu, k_mu.astype(cache.k_mu.dtype), idx)),
-            pin(jax.lax.dynamic_update_slice(
-                cache.v_mu, v_mu.astype(cache.v_mu.dtype), idx)),
-            pin(jax.lax.dynamic_update_slice(
-                cache.v_var, v_var.astype(cache.v_var.dtype), idx)),
-        )
+        starts = positions[:, 0]
+
+        def _insert(buf, new):
+            upd = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+                c, n, s, axis=1))(buf, new.astype(buf.dtype), starts)
+            return pin(upd)
+
+        cache = KVCache(_insert(cache.k_mu, k_mu),
+                        _insert(cache.v_mu, v_mu),
+                        _insert(cache.v_var, v_var))
         new_cache = cache
         k_mu, v_mu, v_var = cache.k_mu, cache.v_mu, cache.v_var
         s = k_mu.shape[2]

@@ -1,13 +1,21 @@
-"""Request batching for the serving example: continuous-batching lite.
+"""Request batching: the host-side slot layer of the serving stack.
 
-Collects requests into fixed-size decode batches (padding with idle slots),
-tracks per-slot positions/lengths, and evicts finished or abstained
-requests. Single-host logic — the batch itself is sharded by pjit.
+``Request`` is the request record shared by the lite ``Batcher`` below and
+the continuous-batching engine (``repro.serving.engine``): prompt, limits,
+scheduling attributes (priority/deadline) and the generated-token /
+uncertainty traces filled in as the request moves through decode.
+
+``Batcher`` collects requests into fixed-size decode batches (padding with
+idle slots), tracks per-slot occupancy, and evicts finished or abstained
+requests. Single-host logic — the batch itself is sharded by pjit. The
+engine's ``state.DecodeStatePool`` builds on the same slot discipline but
+additionally owns the per-slot KV mean/variance device buffers.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -17,10 +25,22 @@ class Request:
     uid: int
     prompt: np.ndarray          # (T,) int32
     max_new_tokens: int = 16
+    # Scheduling attributes (consumed by engine/scheduler.py; the lite
+    # Batcher is FIFO and ignores them).
+    priority: int = 0           # lower = more urgent
+    deadline: Optional[float] = None  # engine-step deadline for admission
+    arrival: float = 0.0        # engine-step arrival time (loadgen)
+    # Filled in during decode.
     generated: list = dataclasses.field(default_factory=list)
     mi_trace: list = dataclasses.field(default_factory=list)
     abstained: bool = False
+    escalated: int = 0          # number of SVI second-opinion passes taken
     done: bool = False
+    finish_reason: Optional[str] = None  # 'length'|'eos'|'abstain'|...
+
+    def finish(self, reason: str) -> None:
+        self.done = True
+        self.finish_reason = reason
 
 
 class Batcher:
@@ -28,7 +48,7 @@ class Batcher:
         self.batch_size = batch_size
         self.max_len = max_len
         self.slots: List[Optional[Request]] = [None] * batch_size
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -38,26 +58,43 @@ class Batcher:
         admitted = []
         for i in range(self.batch_size):
             if self.slots[i] is None and self.queue:
-                self.slots[i] = self.queue.pop(0)
+                self.slots[i] = self.queue.popleft()
                 admitted.append((i, self.slots[i]))
         return admitted
 
     def active(self):
         return [(i, r) for i, r in enumerate(self.slots) if r is not None]
 
-    def record(self, slot: int, token: int, mi: float,
-               abstain: bool, eos: Optional[int] = None):
+    def evict(self, slot: int, reason: str) -> Optional[Request]:
+        """Free ``slot`` and return the evicted request (None if idle).
+
+        The returned request carries ``finish_reason`` so callers can
+        distinguish abstain-evict from completion-evict.
+        """
         req = self.slots[slot]
         if req is None:
-            return
+            return None
+        req.finish(reason)
+        self.slots[slot] = None
+        return req
+
+    def record(self, slot: int, token: int, mi: float,
+               abstain: bool, eos: Optional[int] = None) -> Optional[Request]:
+        """Record one decoded token; returns the evicted Request when this
+        token finished the request (abstention, eos or length), else None."""
+        req = self.slots[slot]
+        if req is None:
+            return None
         req.generated.append(int(token))
         req.mi_trace.append(float(mi))
         if abstain:
             req.abstained = True
-        if (len(req.generated) >= req.max_new_tokens
-                or (eos is not None and token == eos) or abstain):
-            req.done = True
-            self.slots[slot] = None
+            return self.evict(slot, "abstain")
+        if eos is not None and token == eos:
+            return self.evict(slot, "eos")
+        if len(req.generated) >= req.max_new_tokens:
+            return self.evict(slot, "length")
+        return None
 
     @property
     def idle(self) -> bool:

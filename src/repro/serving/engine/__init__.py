@@ -1,0 +1,23 @@
+"""Uncertainty-aware continuous-batching serving engine (PFP-BNN LMs).
+
+See README.md in this directory for the request lifecycle and the
+uncertainty-routing policy.
+"""
+from repro.serving.batcher import Request
+from repro.serving.engine.engine import Engine, EngineConfig
+from repro.serving.engine.loadgen import poisson_trace, run_load
+from repro.serving.engine.metrics import EngineMetrics, percentile
+from repro.serving.engine.router import (Decision, RouterConfig,
+                                         UncertaintyRouter,
+                                         make_svi_fallback)
+from repro.serving.engine.scheduler import RequestScheduler, SchedulerConfig
+from repro.serving.engine.state import DecodeStatePool
+
+__all__ = [
+    "Engine", "EngineConfig", "Request",
+    "RequestScheduler", "SchedulerConfig",
+    "DecodeStatePool",
+    "UncertaintyRouter", "RouterConfig", "Decision", "make_svi_fallback",
+    "EngineMetrics", "percentile",
+    "poisson_trace", "run_load",
+]

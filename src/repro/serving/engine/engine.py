@@ -1,0 +1,390 @@
+"""The continuous-batching serving engine for PFP-BNN language models.
+
+One ``Engine`` owns a fixed decode batch of ``slots`` sequences over a
+single parameter pytree:
+
+  submit -> scheduler (admission control, priority/deadline + aging)
+         -> slot pool (zeroed per-slot KV mean/variance rows)
+         -> chunked prefill (budgeted prompt tokens per engine step)
+         -> lockstep PFP decode (ONE probabilistic pass per step for the
+            whole batch: logit means + variances)
+         -> uncertainty router (continue / escalate to SVI / abstain)
+         -> eviction on completion or abstention (slot returns to pool)
+
+Per-slot decode state stays on device for a request's whole lifetime; the
+host only sees (B,)-sized tokens and mutual-information values each step.
+Slots advance independently — each sits at its own position, admissions
+and evictions happen mid-flight — which is exactly what the per-slot cache
+insert in ``nn/attention.py`` and the select-merge in ``models/lm.py``
+exist for: parked and mid-prefill slots keep their state bit-identical
+through every lockstep step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.gaussian import is_gaussian
+from repro.core.modes import Mode
+from repro.models import lm
+from repro.nn.module import Context
+from repro.serving.batcher import Request
+from repro.serving.decode import uncertainty_decode
+from repro.serving.engine.metrics import EngineMetrics
+from repro.serving.engine.router import (Decision, RouterConfig,
+                                         UncertaintyRouter)
+from repro.serving.engine.scheduler import RequestScheduler, SchedulerConfig
+from repro.serving.engine.state import DecodeStatePool
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    slots: int = 4
+    max_len: int = 64
+    num_uncertainty_samples: int = 32
+    greedy: bool = True
+    eos_id: Optional[int] = None
+    formulation: str = "srm"
+    impl: Optional[str] = None     # 'xla' | 'kernel' | None = process default
+    compute_dtype: Any = None      # None = f32 (CPU tests); serve uses bf16
+    seed: int = 0
+    auto_compact: bool = False     # compact the pool whenever fragmented
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request
+    admit_seq: int
+    phase: str = "prefill"         # 'prefill' -> 'decode'
+    prefill_pos: int = 0
+    last_input: Optional[int] = None  # token fed at the step behind the
+    #                                   current logits (SVI replay input)
+    # Escalation replay while the current logits come from a prefill
+    # chunk: (pre-chunk substate, chunk inputs, out_idx). None once a
+    # decode step ran — the engine then replays last_input against the
+    # pre-decode pool snapshot instead.
+    replay: Optional[tuple] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params,
+                 config: EngineConfig = EngineConfig(), *,
+                 router: Optional[UncertaintyRouter] = None,
+                 scheduler: Optional[RequestScheduler] = None,
+                 mesh=None):
+        if not cfg.embed_inputs:
+            raise ValueError("engine serves token-prompt models only")
+        self.cfg = cfg
+        self.params = params
+        self.config = config
+        self.router = router if router is not None else UncertaintyRouter(
+            cfg, RouterConfig(), formulation=config.formulation,
+            impl=config.impl)
+        self.scheduler = scheduler if scheduler is not None else \
+            RequestScheduler(SchedulerConfig(), max_len=config.max_len)
+        if self.scheduler.max_len is None:
+            self.scheduler.max_len = config.max_len
+        if self.scheduler.config.prefill_chunk > config.max_len:
+            raise ValueError("prefill_chunk must not exceed max_len")
+        # Attention-family models run every prefill chunk at ONE static
+        # shape (a fixed-size window sliding to the chunk's end, re-feeding
+        # earlier tokens — exact, since PFP k/v rows are deterministic per
+        # (token, position)), so the chunk program compiles once. Models
+        # with recurrent/SSM carries must see each token exactly once, so
+        # they keep exact-length chunks (one trace per distinct length).
+        self._static_chunks = all(k in ("attn", "moe", "cross")
+                                  for k in cfg.pattern)
+        self.pool = DecodeStatePool(cfg, config.slots, config.max_len,
+                                    mesh=mesh)
+        self.metrics = EngineMetrics()
+        self.finished: List[Request] = []
+        self._slots: List[Optional[_Slot]] = [None] * config.slots
+        # Pool states as of just BEFORE the latest lockstep decode step —
+        # a reference swap, not a copy (the old buffers stay alive one
+        # step). Escalation replays against this snapshot so recurrent/SSM
+        # carries are not advanced twice.
+        self._prev_states = None
+        self._admit_seq = 0
+        self._step_idx = 0
+        self._key_unc = jax.random.PRNGKey(config.seed)
+        self._key_esc = jax.random.PRNGKey(config.seed + 1)
+        v = cfg.vocab_size
+        self._lm_mean = jnp.zeros((config.slots, v), jnp.float32)
+        self._lm_var = jnp.zeros((config.slots, v), jnp.float32)
+        self._chunk_fn = jax.jit(self._chunk_step)
+        self._decode_fn = jax.jit(self._decode_step)
+        self._set_row = jax.jit(lambda buf, slot, row: buf.at[slot].set(row))
+        self._unc = jax.jit(functools.partial(
+            uncertainty_decode,
+            num_uncertainty_samples=config.num_uncertainty_samples,
+            mi_threshold=self.router.config.mi_abstain,
+            greedy=config.greedy))
+
+    # -- jitted device programs ---------------------------------------------
+    def _ctx(self) -> Context:
+        return Context(mode=Mode.PFP, formulation=self.config.formulation,
+                       impl=self.config.impl,
+                       compute_dtype=self.config.compute_dtype)
+
+    def _split_logits(self, logits):
+        if is_gaussian(logits):
+            return logits.mean, logits.var
+        return logits, jnp.zeros_like(logits)
+
+    def _chunk_step(self, params, inputs, sub, out_idx):
+        """One prefill chunk on a single-slot state view: (1, C) tokens in,
+        logit (mean, var) at the last *real* token (``out_idx``) + updated
+        substate out."""
+        logits, new_sub = lm.decode_step(params, self.cfg, inputs, sub,
+                                         self._ctx())
+        mean, var = self._split_logits(logits)
+        mean = jax.lax.dynamic_index_in_dim(mean, out_idx, 1, keepdims=False)
+        var = jax.lax.dynamic_index_in_dim(var, out_idx, 1, keepdims=False)
+        return (mean.astype(jnp.float32), var.astype(jnp.float32)), new_sub
+
+    def _decode_step(self, params, tokens, positions, cache_len, active,
+                     states, lm_mean, lm_var):
+        """Lockstep decode for the whole slot batch + select-merge so only
+        ``active`` slots observe the state/logit update."""
+        inputs = {"tokens": tokens, "positions": positions,
+                  "cache_len": cache_len}
+        logits, new_states = lm.decode_step(params, self.cfg, inputs, states,
+                                            self._ctx())
+        mean, var = self._split_logits(logits)
+        mean = mean[:, -1].astype(jnp.float32)
+        var = var[:, -1].astype(jnp.float32)
+        merged = lm.select_decode_slots(new_states, states, active)
+        return (jnp.where(active[:, None], mean, lm_mean),
+                jnp.where(active[:, None], var, lm_var), merged)
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        ok = self.scheduler.submit(req, float(self._step_idx))
+        self.metrics.on_submit(ok)
+        return ok
+
+    def reset_metrics(self) -> None:
+        """Fresh telemetry (e.g. after a warm-up run, so throughput rows
+        measure the hot path instead of trace/compile time). Compiled
+        programs and pool state are kept."""
+        self.metrics = EngineMetrics()
+
+    @property
+    def now(self) -> int:
+        return self._step_idx
+
+    @property
+    def decode_fn(self):
+        """The jitted lockstep decode program (public: benchmarks time it
+        directly)."""
+        return self._decode_fn
+
+    @property
+    def logit_buffers(self):
+        """Current per-slot next-token logit (mean, var) device buffers."""
+        return self._lm_mean, self._lm_var
+
+    @property
+    def idle(self) -> bool:
+        return len(self.scheduler) == 0 and self.pool.live == 0
+
+    def run_until_idle(self, max_steps: int = 100_000) -> dict:
+        while not self.idle:
+            if self._step_idx >= max_steps:
+                raise RuntimeError(f"engine not idle after {max_steps} steps")
+            self.step()
+        return self.metrics.summary()
+
+    # -- the engine step ----------------------------------------------------
+    def step(self) -> None:
+        now = float(self._step_idx)
+        # drain deadline-expired waiters even while the pool is full, so
+        # they never hold the bounded admission queue against live traffic
+        for e in self.scheduler.drain_expired(now):
+            self.metrics.on_expire()
+            self.finished.append(e)
+        self._admit(now)
+        self._prefill()
+        self._route_and_decode(now)
+        self._step_idx += 1
+        self.metrics.on_step(self.pool.live)
+        if self.config.auto_compact and self.pool.fragmentation():
+            self.compact()
+
+    def _admit(self, now: float) -> None:
+        while self.pool.free_slots:
+            req, expired = self.scheduler.pop_ready(now)
+            for e in expired:
+                self.metrics.on_expire()
+                self.finished.append(e)
+            if req is None:
+                break
+            slot = self.pool.alloc(req.uid)
+            self._slots[slot] = _Slot(request=req, admit_seq=self._admit_seq)
+            self._admit_seq += 1
+            self.metrics.on_admit(req.uid, req.arrival, now)
+
+    def _prefill(self) -> None:
+        pending = sorted(
+            ((sl.admit_seq, slot) for slot, sl in enumerate(self._slots)
+             if sl is not None and sl.phase == "prefill"))
+        plan = self.scheduler.plan_prefill(
+            [(slot, len(self._slots[slot].request.prompt)
+              - self._slots[slot].prefill_pos) for _, slot in pending])
+        for slot, n in plan:
+            sl = self._slots[slot]
+            start = sl.prefill_pos
+            end = start + n
+            prompt = np.asarray(sl.request.prompt, np.int32)
+            if self._static_chunks:
+                # fixed-size window ending at `end`: one compiled shape.
+                # Re-fed rows rewrite identical k/v; right-pad rows (only
+                # while end < chunk) sit beyond cache_len, so they stay
+                # masked until the decode loop overwrites them in the same
+                # step their position becomes valid.
+                c = self.scheduler.config.prefill_chunk
+                lo = max(0, end - c)
+                window = prompt[lo:end]
+                tokens = np.zeros(c, np.int32)
+                tokens[:len(window)] = window
+                positions = lo + np.arange(c, dtype=np.int32)
+                out_idx = len(window) - 1
+            else:
+                tokens = prompt[start:end]
+                positions = start + np.arange(n, dtype=np.int32)
+                out_idx = n - 1
+            inputs = {
+                "tokens": jnp.asarray(tokens)[None],
+                "positions": jnp.asarray(positions)[None],
+                "cache_len": jnp.asarray([end], jnp.int32),
+            }
+            sub = self.pool.take_slot(slot)
+            (mean, var), new_sub = self._chunk_fn(
+                self.params, inputs, sub, jnp.asarray(out_idx, jnp.int32))
+            self.pool.write_slot(slot, new_sub)
+            sl.prefill_pos += n
+            self.pool.positions[slot] = sl.prefill_pos
+            self.metrics.on_prefill(n)
+            if sl.prefill_pos == len(sl.request.prompt):
+                sl.phase = "decode"
+                sl.last_input = int(sl.request.prompt[-1])
+                sl.replay = (sub, inputs, out_idx)
+                self._lm_mean = self._set_row(self._lm_mean, slot, mean[0])
+                self._lm_var = self._set_row(self._lm_var, slot, var[0])
+
+    def _route_and_decode(self, now: float) -> None:
+        decode_slots = [slot for slot, sl in enumerate(self._slots)
+                        if sl is not None and sl.phase == "decode"]
+        if not decode_slots:
+            return
+        out = self._unc(self._lm_mean[:, None], self._lm_var[:, None],
+                        jax.random.fold_in(self._key_unc, self._step_idx))
+        tok_np = np.asarray(out.token)
+        mi_np = np.asarray(out.mutual_info)
+
+        feed = np.zeros(self.config.slots, np.int32)
+        active = np.zeros(self.config.slots, bool)
+        for slot in decode_slots:
+            sl = self._slots[slot]
+            req = sl.request
+            mi = float(mi_np[slot])
+            tok = int(tok_np[slot])
+            decision = self.router.route(mi)
+            if decision is Decision.ESCALATE:
+                tok, mi, decision = self._escalate(slot, sl, mi)
+            if decision is Decision.ABSTAIN:
+                req.mi_trace.append(mi)
+                req.abstained = True
+                self._finish(slot, "abstain", now)
+                continue
+            req.generated.append(tok)
+            req.mi_trace.append(mi)
+            self.metrics.on_token()
+            if self.config.eos_id is not None and tok == self.config.eos_id:
+                self._finish(slot, "eos", now)
+            elif len(req.generated) >= req.max_new_tokens:
+                self._finish(slot, "length", now)
+            else:
+                feed[slot] = tok
+                active[slot] = True
+                sl.last_input = tok
+
+        if not active.any():
+            return
+        positions = self.pool.positions.copy()
+        self._prev_states = self.pool.states
+        self._lm_mean, self._lm_var, self.pool.states = self._decode_fn(
+            self.params,
+            jnp.asarray(feed[:, None]),
+            jnp.asarray(positions[:, None]),
+            jnp.asarray(positions + active),
+            jnp.asarray(active),
+            self.pool.states, self._lm_mean, self._lm_var)
+        self.pool.positions[active] += 1
+        for slot in np.flatnonzero(active):
+            self._slots[slot].replay = None  # replay via _prev_states now
+
+    def _replay_for(self, slot: int, sl: _Slot):
+        """(substate, inputs, out_idx) reproducing the pass that made the
+        slot's current logits: the pre-chunk snapshot + chunk inputs right
+        after prefill, else last_input against the pre-decode pool."""
+        if sl.replay is not None:
+            return sl.replay
+        pos = int(self.pool.positions[slot])
+        inputs = {
+            "tokens": jnp.asarray([[sl.last_input]], jnp.int32),
+            "positions": jnp.asarray([[pos - 1]], jnp.int32),
+            "cache_len": jnp.asarray([pos], jnp.int32),
+        }
+        sub = lm.take_decode_slots(self._prev_states,
+                                   np.asarray([slot], np.int32))
+        return sub, inputs, 0
+
+    def _escalate(self, slot: int, sl: _Slot, pfp_mi: float):
+        """SVI second opinion for one gray-zone token. Returns the final
+        (token, mi, decision): serve the SVI token, or abstain when the
+        sampled ensemble is still uncertain."""
+        self.metrics.on_escalation()
+        sl.request.escalated += 1
+        sub, inputs, out_idx = self._replay_for(slot, sl)
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._key_esc, self._step_idx), slot)
+        stok, smi = self.router.second_opinion(
+            self.params, inputs, sub, key, out_idx=out_idx)
+        mi = float(smi)
+        if mi >= self.router.svi_mi_abstain:
+            return int(stok), mi, Decision.ABSTAIN
+        return int(stok), mi, Decision.CONTINUE
+
+    def _finish(self, slot: int, reason: str, now: float) -> None:
+        sl = self._slots[slot]
+        sl.request.finish(reason)
+        self.pool.evict(slot)
+        self._slots[slot] = None
+        self.finished.append(sl.request)
+        self.metrics.on_finish(sl.request, now)
+
+    def compact(self) -> None:
+        """Pack live slots to the front; remap host-side slot records and
+        the per-slot logit rows to match."""
+        remap = self.pool.compact()
+        if not remap:
+            return
+        new_slots: List[Optional[_Slot]] = [None] * self.config.slots
+        perm = np.arange(self.config.slots)
+        for old, new in remap.items():
+            new_slots[new] = self._slots[old]
+            perm[new] = old
+        self._slots = new_slots
+        self._lm_mean = self._lm_mean[jnp.asarray(perm)]
+        self._lm_var = self._lm_var[jnp.asarray(perm)]
+        if self._prev_states is not None:
+            # keep the escalation-replay snapshot slot-aligned (free rows
+            # may duplicate — replay only ever reads live slots)
+            self._prev_states = lm.take_decode_slots(self._prev_states, perm)

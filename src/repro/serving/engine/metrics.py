@@ -1,0 +1,132 @@
+"""Serve-time telemetry for the engine.
+
+Counters + per-request records + a per-step occupancy trace, reduced to a
+serving summary: throughput, p50/p99 latency (engine steps and wall
+seconds), abstention/escalation rates and slot-pool occupancy. Pure host
+bookkeeping — one small append per event, nothing on the device path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    uid: int
+    arrival: float            # engine step of submission
+    admit_step: float
+    finish_step: float
+    wall_latency_s: float
+    tokens: int
+    escalations: int
+    finish_reason: Optional[str]
+
+    @property
+    def latency_steps(self) -> float:
+        return self.finish_step - self.arrival
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Classic nearest-rank percentile (q in [0, 100]); 0.0 on empty."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    idx = min(len(s) - 1, max(0, math.ceil(q / 100.0 * len(s)) - 1))
+    return float(s[idx])
+
+
+class EngineMetrics:
+    def __init__(self):
+        self.submitted = 0
+        self.rejected = 0
+        self.expired = 0
+        self.admitted = 0
+        self.completed = 0
+        self.abstained = 0
+        self.escalations = 0       # SVI second-opinion passes taken
+        self.tokens_generated = 0
+        self.prefill_tokens = 0
+        self.steps = 0
+        self.records: List[RequestRecord] = []
+        self.occupancy_trace: List[int] = []
+        self.peak_occupancy = 0
+        self._admit_times = {}     # uid -> (arrival_step, admit_step, wall_t0)
+        self._t0: Optional[float] = None
+
+    # -- events -------------------------------------------------------------
+    def on_submit(self, accepted: bool) -> None:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self.submitted += 1
+        if not accepted:
+            self.rejected += 1
+
+    def on_expire(self, n: int = 1) -> None:
+        self.expired += n
+
+    def on_admit(self, uid: int, arrival: float, now: float) -> None:
+        self.admitted += 1
+        self._admit_times[uid] = (arrival, now, time.perf_counter())
+
+    def on_prefill(self, tokens: int) -> None:
+        self.prefill_tokens += tokens
+
+    def on_token(self, n: int = 1) -> None:
+        self.tokens_generated += n
+
+    def on_escalation(self, n: int = 1) -> None:
+        self.escalations += n
+
+    def on_finish(self, req, now: float) -> None:
+        arrival, admit, wall_t0 = self._admit_times.pop(
+            req.uid, (now, now, time.perf_counter()))
+        if req.finish_reason == "abstain":
+            self.abstained += 1
+        else:
+            self.completed += 1
+        self.records.append(RequestRecord(
+            uid=req.uid, arrival=arrival, admit_step=admit, finish_step=now,
+            wall_latency_s=time.perf_counter() - wall_t0,
+            tokens=len(req.generated), escalations=req.escalated,
+            finish_reason=req.finish_reason))
+
+    def on_step(self, occupancy: int) -> None:
+        self.steps += 1
+        self.occupancy_trace.append(occupancy)
+        self.peak_occupancy = max(self.peak_occupancy, occupancy)
+
+    # -- reduction ----------------------------------------------------------
+    def summary(self) -> dict:
+        elapsed = (time.perf_counter() - self._t0) if self._t0 else 0.0
+        lat_steps = [r.latency_steps for r in self.records]
+        lat_wall = [r.wall_latency_s for r in self.records]
+        finished = len(self.records)
+        occ = self.occupancy_trace
+        return {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "expired": self.expired,
+            "admitted": self.admitted,
+            "finished": finished,
+            "completed": self.completed,
+            "abstained": self.abstained,
+            "abstain_rate": self.abstained / max(finished, 1),
+            "escalations": self.escalations,
+            "escalation_rate": self.escalations / max(
+                self.tokens_generated, 1),
+            "tokens_generated": self.tokens_generated,
+            "prefill_tokens": self.prefill_tokens,
+            "steps": self.steps,
+            "elapsed_s": elapsed,
+            "throughput_tok_s": self.tokens_generated / max(elapsed, 1e-9),
+            "p50_latency_steps": percentile(lat_steps, 50),
+            "p99_latency_steps": percentile(lat_steps, 99),
+            "p50_latency_s": percentile(lat_wall, 50),
+            "p99_latency_s": percentile(lat_wall, 99),
+            "peak_occupancy": self.peak_occupancy,
+            "mean_occupancy": sum(occ) / max(len(occ), 1),
+            "final_occupancy": occ[-1] if occ else 0,
+        }

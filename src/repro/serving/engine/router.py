@@ -1,0 +1,109 @@
+"""Uncertainty routing: serve, escalate, or abstain per decoded token.
+
+The PFP serve step hands the router a per-token mutual-information signal
+for free (one analytic pass -> logit means AND variances -> MI). The
+router turns it into a serving policy with two thresholds:
+
+    MI <= mi_continue                  CONTINUE  serve the PFP token
+    mi_continue < MI < mi_abstain      ESCALATE  run an N-sample SVI
+                                                  second-opinion pass
+    MI >= mi_abstain                   ABSTAIN   evict ("I don't know")
+
+Escalation is the paper's SVI-vs-PFP ablation recast as a serving policy:
+for the gray zone between "confident" and "hopeless", spend N sampled
+forward passes (what every token would cost under an SVI server) to get a
+reference MI and token. If the SVI second opinion is still uncertain
+(``svi_mi_abstain``) the request abstains; otherwise the SVI token is
+served. The fallback replays the slot's last input token against a copy
+of its decode state, so the pooled KV buffers are never perturbed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.bayes.metrics import predictive_metrics_from_samples
+from repro.configs.base import ModelConfig
+from repro.core.gaussian import is_gaussian
+from repro.core.modes import Mode
+from repro.models import lm
+from repro.nn.module import Context
+
+
+class Decision(enum.Enum):
+    CONTINUE = "continue"
+    ESCALATE = "escalate"
+    ABSTAIN = "abstain"
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    mi_continue: float = 0.5      # at or below: serve the PFP token
+    mi_abstain: float = 2.0       # at or above: abstain immediately
+    escalate_samples: int = 8     # SVI samples in the second-opinion pass
+    svi_mi_abstain: Optional[float] = None  # default: mi_abstain
+
+
+def make_svi_fallback(cfg: ModelConfig, num_samples: int, *,
+                      formulation: str = "srm", impl: Optional[str] = None):
+    """Jitted N-sample SVI second-opinion pass.
+
+    fallback(params, inputs, sub_state, key, out_idx) -> (token, mi):
+    replays the decode inputs ``num_samples`` times with reparameterized
+    weight samples (Mode.SVI draws sigma from the converted (mu, srm)
+    leaves) against a single-slot state copy, and reduces the sampled
+    logits at position ``out_idx`` (the last *real* token of the replayed
+    inputs) to a predicted token and mutual information. The replay must
+    target the state as it was BEFORE these inputs were consumed — for
+    recurrent/SSM carries a replay against the post-step state would apply
+    the recurrence twice. The state update is discarded, so the caller's
+    pooled buffers keep the PFP-written rows.
+    """
+
+    def fallback(params, inputs, sub_state, key, out_idx):
+        def one(k):
+            ctx = Context(mode=Mode.SVI, key=k, formulation=formulation,
+                          impl=impl)
+            logits, _ = lm.decode_step(params, cfg, inputs, sub_state, ctx)
+            if is_gaussian(logits):
+                logits = logits.mean
+            return jax.lax.dynamic_index_in_dim(
+                logits, out_idx, 1, keepdims=False).astype(jnp.float32)
+
+        samples = jax.vmap(one)(jax.random.split(key, num_samples))
+        m = predictive_metrics_from_samples(samples)        # (N, 1, V) in
+        return m["pred"][0], m["mi"][0]
+
+    return jax.jit(fallback)
+
+
+class UncertaintyRouter:
+    def __init__(self, cfg: ModelConfig,
+                 config: RouterConfig = RouterConfig(), *,
+                 formulation: str = "srm", impl: Optional[str] = None):
+        self.config = config
+        self.svi_mi_abstain = (config.svi_mi_abstain
+                               if config.svi_mi_abstain is not None
+                               else config.mi_abstain)
+        self._fallback = make_svi_fallback(
+            cfg, config.escalate_samples, formulation=formulation, impl=impl)
+
+    def route(self, mi: float) -> Decision:
+        if mi <= self.config.mi_continue:
+            return Decision.CONTINUE
+        if mi >= self.config.mi_abstain or self.config.escalate_samples <= 0:
+            return Decision.ABSTAIN
+        return Decision.ESCALATE
+
+    def second_opinion(self, params, inputs, sub_state, key, out_idx=None):
+        """(token, mi) from the SVI fallback — the exact jitted function,
+        so engine-served escalations are bit-for-bit reproducible.
+        ``out_idx`` defaults to the last position of ``inputs``."""
+        if out_idx is None:
+            out_idx = inputs["tokens"].shape[1] - 1
+        return self._fallback(params, inputs, sub_state, key,
+                              jnp.asarray(out_idx, jnp.int32))

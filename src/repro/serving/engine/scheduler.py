@@ -1,0 +1,153 @@
+"""Admission-controlled request scheduling for the serving engine.
+
+The scheduler owns the waiting-room side of continuous batching:
+
+  * admission control — a bounded queue (``max_queue``) plus a static
+    feasibility check (prompt + generation budget must fit the engine's
+    ``max_len``); both reject at submit time so overload never grows
+    unbounded host state;
+  * priority/deadline ordering — requests carry ``priority`` (lower = more
+    urgent) and an optional admission ``deadline`` in engine steps.
+    Selection is by *effective* priority, which ages toward urgent as a
+    request waits (one level per ``aging_steps``), so a stream of hot
+    requests cannot starve a cold one indefinitely; ties break FIFO.
+    Requests whose deadline passes before admission are dropped (expired);
+  * chunked prefill planning — ``plan_prefill`` hands the engine at most
+    ``prefill_budget`` prompt tokens per engine step, in chunks of at most
+    ``prefill_chunk``, round-robin over admitted-but-still-prefilling
+    slots. Long prompts therefore trickle into their KV slots across
+    steps instead of stalling the whole decode batch behind one giant
+    prefill pass.
+
+Pure host logic — no jax imports; the engine executes the plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.serving.batcher import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_queue: int = 64       # admission control: queue depth bound
+    aging_steps: int = 8      # waiting steps per priority-level promotion
+    prefill_chunk: int = 8    # max tokens per prefill chunk
+    prefill_budget: int = 16  # max prefill tokens executed per engine step
+
+    def __post_init__(self):
+        if min(self.max_queue, self.aging_steps, self.prefill_chunk,
+               self.prefill_budget) < 1:
+            raise ValueError("SchedulerConfig fields must all be >= 1")
+
+
+class RequestScheduler:
+    """Priority/deadline queue with aging and prefill chunk planning."""
+
+    def __init__(self, config: SchedulerConfig = SchedulerConfig(), *,
+                 max_len: Optional[int] = None):
+        self.config = config
+        self.max_len = max_len
+        self._queue: List[Tuple[int, float, Request]] = []  # (seq, enq, req)
+        self._expired_pending: List[Request] = []
+        self._seq = 0
+        self.rejected = 0
+        self.expired = 0
+        self.submitted = 0
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def _purge_expired(self, now: float) -> None:
+        kept = []
+        for item in self._queue:
+            req = item[2]
+            if req.deadline is not None and now > req.deadline:
+                req.finish("expired")
+                self._expired_pending.append(req)
+                self.expired += 1
+            else:
+                kept.append(item)
+        self._queue = kept
+
+    def drain_expired(self, now: float) -> List[Request]:
+        """Purge and return deadline-expired waiters. The engine calls this
+        every step so dead entries never hold the bounded queue — even
+        while the slot pool is full and nothing is being popped."""
+        self._purge_expired(now)
+        out = self._expired_pending
+        self._expired_pending = []
+        return out
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, req: Request, now: float) -> bool:
+        """Admit ``req`` into the waiting queue. False = rejected."""
+        self.submitted += 1
+        self._purge_expired(now)  # expired waiters must not reject live ones
+        if len(self._queue) >= self.config.max_queue:
+            self.rejected += 1
+            return False
+        if len(req.prompt) == 0:
+            # an empty prompt can never produce a prefill chunk, so the
+            # slot would sit in 'prefill' phase forever — reject upfront
+            self.rejected += 1
+            return False
+        if self.max_len is not None and \
+                len(req.prompt) + req.max_new_tokens > self.max_len:
+            self.rejected += 1
+            return False
+        self._queue.append((self._seq, now, req))
+        self._seq += 1
+        return True
+
+    # -- selection ----------------------------------------------------------
+    def _effective_priority(self, enq: float, req: Request,
+                            now: float) -> float:
+        aged = int(now - enq) // max(self.config.aging_steps, 1)
+        return req.priority - aged
+
+    def pop_ready(self, now: float) -> Tuple[Optional[Request],
+                                             List[Request]]:
+        """Pop the most urgent admissible request.
+
+        Returns (request | None, expired) — ``expired`` are requests whose
+        admission deadline passed while waiting; they are dropped here so
+        the caller can account for them.
+        """
+        expired = self.drain_expired(now)
+        if not self._queue:
+            return None, expired
+        best = min(
+            self._queue,
+            key=lambda it: (self._effective_priority(it[1], it[2], now),
+                            it[0]))
+        self._queue.remove(best)
+        return best[2], expired
+
+    # -- chunked prefill ----------------------------------------------------
+    def plan_prefill(
+        self, prefilling: Sequence[Tuple[int, int]],
+    ) -> List[Tuple[int, int]]:
+        """Plan this step's prefill work.
+
+        prefilling: admission-ordered (slot, remaining_prompt_tokens).
+        Returns [(slot, num_tokens)] consuming at most ``prefill_budget``
+        tokens total, each piece at most ``prefill_chunk``, round-robin so
+        one long prompt cannot monopolize the budget.
+        """
+        budget = self.config.prefill_budget
+        remaining = {slot: rem for slot, rem in prefilling}
+        order = [slot for slot, _ in prefilling]
+        plan: List[Tuple[int, int]] = []
+        while budget > 0 and any(remaining[s] > 0 for s in order):
+            for slot in order:
+                if budget <= 0:
+                    break
+                if remaining[slot] <= 0:
+                    continue
+                n = min(self.config.prefill_chunk, remaining[slot], budget)
+                plan.append((slot, n))
+                remaining[slot] -= n
+                budget -= n
+        return plan

@@ -1,0 +1,127 @@
+"""Slot-pooled decode-state management for the serving engine.
+
+``DecodeStatePool`` owns the per-slot decode state — the KV mean/variance
+caches (PFP's uncertainty-carrying analogue of a KV cache: ``k_mu``,
+``v_mu``, ``v_var``) plus any recurrent/SSM carries — as ONE preallocated
+device pytree of ``num_slots`` batch rows (``lm.init_decode_state``).
+Requests borrow a slot for their lifetime:
+
+  alloc   -> pop the lowest free slot, zero its state rows on device
+  evict   -> return the slot to the free list (completion or abstention);
+             stale device rows are left in place — validity is governed by
+             per-slot ``cache_len`` masks and the zero-on-alloc reset
+  compact -> permutation-gather live slots to the front of the pool when
+             eviction order fragments them (one device gather per leaf)
+
+All device transfers are whole-slot gathers/scatters issued from jitted
+functions; the pool never round-trips KV buffers through the host. Host
+state is only the free list and per-slot position counters.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+class DecodeStatePool:
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int, *,
+                 mesh=None):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.states = lm.init_decode_state(cfg, num_slots, max_len)
+        if mesh is not None:
+            from repro.launch import sharding as shlib
+
+            self.states = jax.device_put(
+                self.states,
+                shlib.state_shardings(jax.eval_shape(lambda: self.states),
+                                      mesh))
+        # Lowest-index-first allocation keeps live slots packed at the
+        # front, bounding fragmentation between compactions.
+        self._free: List[int] = list(range(num_slots))
+        self.owner: List[Optional[int]] = [None] * num_slots  # request uid
+        self.positions = np.zeros(num_slots, np.int32)  # valid cache entries
+        self._reset = jax.jit(lm.reset_decode_slot)
+        self._take = jax.jit(lm.take_decode_slots)
+        self._write = jax.jit(lm.write_decode_slot)
+
+    # -- occupancy ----------------------------------------------------------
+    @property
+    def live(self) -> int:
+        return self.num_slots - len(self._free)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def live_slot_indices(self) -> List[int]:
+        return [i for i, o in enumerate(self.owner) if o is not None]
+
+    def fragmentation(self) -> int:
+        """Number of live slots sitting past the packed prefix."""
+        live = self.live_slot_indices()
+        return sum(1 for s in live if s >= len(live))
+
+    # -- lifecycle ----------------------------------------------------------
+    def alloc(self, uid: int) -> int:
+        if not self._free:
+            raise RuntimeError("slot pool exhausted")
+        slot = min(self._free)
+        self._free.remove(slot)
+        self.owner[slot] = uid
+        self.positions[slot] = 0
+        # Zero the new occupant's rows: KV masking hides stale *attention*
+        # rows, but recurrent/SSM carries have no validity mask.
+        self.states = self._reset(self.states, slot)
+        return slot
+
+    def evict(self, slot: int) -> int:
+        """Free ``slot``; returns the evicted request's uid."""
+        uid = self.owner[slot]
+        if uid is None:
+            raise RuntimeError(f"evict of idle slot {slot}")
+        self.owner[slot] = None
+        self.positions[slot] = 0
+        self._free.append(slot)
+        return uid
+
+    def compact(self) -> Dict[int, int]:
+        """Pack live slots to the pool front (stable order).
+
+        Returns the {old_slot: new_slot} remap applied; callers holding
+        slot indices (the engine's per-slot records, logit buffers) must
+        remap with it. One permutation gather per state leaf, on device.
+        """
+        live = self.live_slot_indices()
+        remap = {old: new for new, old in enumerate(live)}
+        if all(old == new for old, new in remap.items()):
+            return {}
+        perm = live + [s for s in range(self.num_slots) if s not in remap]
+        self.states = self._take(self.states, np.asarray(perm, np.int32))
+        self.owner = [self.owner[s] for s in perm]
+        self.positions = self.positions[perm]
+        self._free = [i for i, o in enumerate(self.owner) if o is None]
+        return remap
+
+    # -- per-slot device views ----------------------------------------------
+    def take_slot(self, slot: int):
+        """Single-slot (batch=1) state view, e.g. for a prefill chunk or an
+        SVI second-opinion pass."""
+        return self._take(self.states, np.asarray([slot], np.int32))
+
+    def write_slot(self, slot: int, sub) -> None:
+        self.states = self._write(self.states, slot, sub)
+
+    def check_invariants(self) -> None:
+        assert sorted(self._free) == sorted(
+            i for i, o in enumerate(self.owner) if o is None)
+        assert len(self.owner) == self.num_slots
+        assert all(self.positions[s] == 0 for s in self._free)
+        uids = [o for o in self.owner if o is not None]
+        assert len(uids) == len(set(uids)), "duplicate owner uid"
