@@ -1,18 +1,28 @@
 """Serving-engine benchmark: continuous-batching throughput and latency.
 
-Two row families, emitted through benchmarks/common.py:
+Row families, emitted through benchmarks/common.py:
 
-  serving/decode_step/...   median wall time of one lockstep engine decode
-                            step (the whole slot batch, select-merge
-                            included) — the engine's hot path;
-  serving/loadgen/...       an end-to-end Poisson loadgen run: derived
-                            column carries throughput, p50/p99 latency and
-                            abstention/escalation rates.
+  serving/decode_step/...     median wall time of one lockstep engine
+                              decode step (the whole slot batch) — the
+                              engine's hot path, for the contiguous AND
+                              the paged Gaussian KV-cache layout;
+  serving/loadgen/...         an end-to-end Poisson loadgen run: derived
+                              column carries throughput, p50/p99 latency,
+                              abstention/escalation rates — paged runs add
+                              page-occupancy, fragmentation and preemption
+                              counts;
+  serving/occupancy/...       the paged-memory acceptance row: a static
+                              engine and a paged engine at the SAME
+                              device-memory budget (equal KV rows) under
+                              one overload trace — the paged engine
+                              sustains strictly more concurrent slots.
 
 Quick profile: 32 requests; --full: the acceptance-criteria 200-request
-run. Deterministic seeds, so rows are comparable across PRs. On the XLA
-stack these are real CPU timings; with ``run.py --impl kernel`` they run
-the Pallas interpret path (correctness-only off-TPU).
+run. ``python benchmarks/bench_serving.py --page-size 4 8 16`` sweeps
+loadgen rows over page sizes. Deterministic seeds, so rows are comparable
+across PRs. On the XLA stack these are real CPU timings; with ``run.py
+--impl kernel`` they run the Pallas interpret path (correctness-only
+off-TPU).
 """
 from __future__ import annotations
 
@@ -31,9 +41,12 @@ from repro.serving.engine import (Engine, EngineConfig, RequestScheduler,
 ARCH = "granite-8b"
 SLOTS = 4
 MAX_LEN = 48
+PAGE_SIZE = 8
 
 
-def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0):
+def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
+                  page_size=None, slots=SLOTS, page_budget=None,
+                  reserve_pages=True):
     router = UncertaintyRouter(
         cfg, RouterConfig(mi_continue=mi_continue, mi_abstain=mi_abstain,
                           escalate_samples=4))
@@ -41,35 +54,43 @@ def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0):
         SchedulerConfig(max_queue=256, prefill_chunk=8, prefill_budget=16),
         max_len=MAX_LEN)
     return Engine(cfg, params,
-                  EngineConfig(slots=SLOTS, max_len=MAX_LEN,
-                               num_uncertainty_samples=16, seed=0),
+                  EngineConfig(slots=slots, max_len=MAX_LEN,
+                               num_uncertainty_samples=16, seed=0,
+                               page_size=page_size, page_budget=page_budget,
+                               reserve_pages=reserve_pages,
+                               auto_defrag=page_size is not None),
                   router=router, scheduler=scheduler)
 
 
-def run(quick: bool = True):
-    lines = []
-    cfg = reduced_config(ARCH)
-    params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(0)))
-
-    # -- hot path: one lockstep decode step over the full slot batch -------
-    engine = _build_engine(cfg, params)
-    positions = np.full(SLOTS, 8, np.int32)
+def _decode_step_row(lines, cfg, params, *, page_size=None):
+    engine = _build_engine(cfg, params, page_size=page_size)
+    positions = np.full(engine.config.slots, 8, np.int32)
+    if page_size is not None:
+        for slot in range(engine.config.slots):
+            engine.pool.alloc(1000 + slot)
+            engine.pool.ensure_capacity(slot, 16)
     lm_mean, lm_var = engine.logit_buffers
-    args = (params,
-            jnp.zeros((SLOTS, 1), jnp.int32),
+    args = [params,
+            jnp.zeros((engine.config.slots, 1), jnp.int32),
             jnp.asarray(positions[:, None]),
             jnp.asarray(positions + 1),
-            jnp.ones((SLOTS,), bool),
-            engine.pool.states, lm_mean, lm_var)
+            jnp.ones((engine.config.slots,), bool),
+            engine.pool.states]
+    if page_size is not None:
+        args.append(engine.pool.device_table())
+    args += [lm_mean, lm_var]
     t_step = time_fn(engine.decode_fn, *args)
+    name = ("decode_step" if page_size is None
+            else f"decode_step_paged/ps{page_size}")
     lines.append(emit(
-        f"serving/decode_step/b{SLOTS}", t_step,
-        f"tok_s={SLOTS / t_step:.1f}",
+        f"serving/{name}/b{engine.config.slots}", t_step,
+        f"tok_s={engine.config.slots / t_step:.1f}",
         schedule=schedule_note(engine.decode_fn, *args)))
 
-    # -- end-to-end: Poisson loadgen through the whole engine --------------
-    n_requests = 32 if quick else 200
-    engine = _build_engine(cfg, params)
+
+def _loadgen_row(lines, cfg, params, *, n_requests, page_size=None,
+                 name=None):
+    engine = _build_engine(cfg, params, page_size=page_size)
     # warm-up drains a small trace through the SAME engine first, so the
     # measured row reports hot-path throughput, not trace/compile time
     warm = poisson_trace(4, rate=0.5, vocab_size=cfg.vocab_size, seed=9,
@@ -83,18 +104,80 @@ def run(quick: bool = True):
         r.arrival += engine.now
     s = run_load(engine, trace)
     assert s["final_occupancy"] == 0, "slot leak in loadgen run"
-    lines.append(emit(
-        f"serving/loadgen/n{n_requests}",
-        s["elapsed_s"],
+    derived = (
         f"tput={s['throughput_tok_s']:.1f}tok_s"
         f";p50_s={s['p50_latency_s']:.3f};p99_s={s['p99_latency_s']:.3f}"
         f";p50_steps={s['p50_latency_steps']:.1f}"
         f";p99_steps={s['p99_latency_steps']:.1f}"
         f";abstain={s['abstain_rate']:.3f}"
         f";escalate={s['escalation_rate']:.3f}"
-        f";occupancy={s['mean_occupancy']:.2f}"))
+        f";occupancy={s['mean_occupancy']:.2f}")
+    if page_size is not None:
+        assert s["final_live_pages"] == 0, "page leak in loadgen run"
+        derived += (
+            f";page_occ={s['mean_page_occupancy']:.3f}"
+            f";page_occ_peak={s['peak_page_occupancy']:.3f}"
+            f";page_frag={s['mean_page_fragmentation']:.2f}"
+            f";preempt={s['preemptions']};defrag={s['defrags']}")
+    lines.append(emit(
+        name or f"serving/loadgen/n{n_requests}"
+        + ("" if page_size is None else f"/ps{page_size}"),
+        s["elapsed_s"], derived))
+
+
+def _occupancy_row(lines, cfg, params, *, n_requests):
+    """Acceptance row: equal device-memory budget (same number of KV rows),
+    overload arrivals of short requests — the paged engine runs strictly
+    more of them concurrently than the static per-slot layout can."""
+    rows_budget = SLOTS * MAX_LEN          # KV rows the static layout pins
+    trace_kw = dict(rate=4.0, vocab_size=cfg.vocab_size, seed=3,
+                    prompt_len=(4, 8), max_new_tokens=(2, 4))
+    static = _build_engine(cfg, params)
+    s_static = run_load(static, poisson_trace(n_requests, **trace_kw))
+    paged = _build_engine(
+        cfg, params, page_size=PAGE_SIZE, slots=4 * SLOTS,
+        page_budget=rows_budget // PAGE_SIZE)
+    s_paged = run_load(paged, poisson_trace(n_requests, **trace_kw))
+    assert s_paged["final_live_pages"] == 0
+    lines.append(emit(
+        f"serving/occupancy/rows{rows_budget}", s_paged["elapsed_s"],
+        f"static_peak={s_static['peak_occupancy']}"
+        f";paged_peak={s_paged['peak_occupancy']}"
+        f";static_mean={s_static['mean_occupancy']:.2f}"
+        f";paged_mean={s_paged['mean_occupancy']:.2f}"
+        f";paged_page_occ={s_paged['mean_page_occupancy']:.3f}"
+        f";pages={rows_budget // PAGE_SIZE}x{PAGE_SIZE}"))
+    assert s_paged["peak_occupancy"] > s_static["peak_occupancy"], (
+        "paged engine did not exceed the static layout's concurrency at "
+        "equal memory")
+
+
+def run(quick: bool = True, page_sizes=None):
+    lines = []
+    cfg = reduced_config(ARCH)
+    params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(0)))
+    n_requests = 32 if quick else 200
+
+    # -- hot path: one lockstep decode step over the full slot batch -------
+    _decode_step_row(lines, cfg, params)
+    _decode_step_row(lines, cfg, params, page_size=PAGE_SIZE)
+
+    # -- end-to-end: Poisson loadgen through the whole engine --------------
+    _loadgen_row(lines, cfg, params, n_requests=n_requests)
+    for ps in (page_sizes or (PAGE_SIZE,)):
+        _loadgen_row(lines, cfg, params, n_requests=n_requests, page_size=ps)
+
+    # -- equal-memory concurrency: static vs paged -------------------------
+    _occupancy_row(lines, cfg, params, n_requests=n_requests)
     return lines
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--page-size", type=int, nargs="+", default=None,
+                    help="sweep loadgen rows over these page sizes")
+    args = ap.parse_args()
+    run(quick=not args.full, page_sizes=args.page_size)

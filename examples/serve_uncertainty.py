@@ -53,7 +53,7 @@ def main():
             for t, tok in enumerate(req.prompt):
                 inp = {"tokens": jnp.full((BATCH, 1), int(tok), jnp.int32),
                        "positions": jnp.full((BATCH, 1), t, jnp.int32),
-                       "cache_len": jnp.asarray(positions)}
+                       "cache_len": jnp.full((BATCH,), t + 1, jnp.int32)}
                 logits, states = lm.decode_step(params, cfg, inp, states, ctx)
             positions[slot] = len(req.prompt)
             last_logits = logits
@@ -69,7 +69,7 @@ def main():
                            bool(out.abstain[slot]))
         inp = {"tokens": out.token[:, None].astype(jnp.int32),
                "positions": jnp.asarray(positions)[:, None],
-               "cache_len": jnp.asarray(positions)}
+               "cache_len": jnp.asarray(positions + 1)}
         last_logits, states = lm.decode_step(params, cfg, inp, states, ctx)
         positions = positions + 1
         step_i += 1

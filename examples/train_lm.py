@@ -101,7 +101,7 @@ def main():
               f"abstain={np.asarray(out.abstain)}")
         dec_in = {"tokens": out.token[:, None],
                   "positions": jnp.full((2, 1), pos, jnp.int32),
-                  "cache_len": jnp.full((2,), pos, jnp.int32)}
+                  "cache_len": jnp.full((2,), pos + 1, jnp.int32)}
         last_l, states = lm.decode_step(pfp_params, cfg, dec_in, states, ctx)
         last = last_l
         pos += 1

@@ -369,6 +369,86 @@ def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float,
 
 
 # ---------------------------------------------------------------------------
+# attention_cache / attention_paged — KV-cache decode attention
+# ---------------------------------------------------------------------------
+@register("attention_cache", "xla")
+def _attention_cache_xla(q_mu, k_mu, v_mu, v_var, q_start, kv_len, scale,
+                         causal, window):
+    return _kernel_ops().pfp_attention_cache(
+        q_mu, k_mu, v_mu, v_var, q_start, kv_len, scale=scale, causal=causal,
+        window=window, impl="xla")
+
+
+@register("attention_cache", "kernel")
+def _attention_cache_kernel(q_mu, k_mu, v_mu, v_var, q_start, kv_len, scale,
+                            causal, window):
+    b, h, tq, d = q_mu.shape
+    sched = _schedule_for(
+        "attention_cache", (b, h, k_mu.shape[1], tq, k_mu.shape[2], d),
+        q_mu.dtype)
+    return _kernel_ops().pfp_attention_cache(
+        q_mu, k_mu, v_mu, v_var, q_start, kv_len, scale=scale, causal=causal,
+        window=window, impl="kernel", schedule=sched)
+
+
+def pfp_attention_cache(q_mu, k_mu, v_mu, v_var, q_start, kv_len, *,
+                        scale: float, causal: bool = True, window=None,
+                        impl: Optional[str] = None):
+    """KV-cache PFP attention with per-batch dynamic valid lengths.
+
+    q (B, H, Tq, D) x cache (B, Hkv, S, D); q_start/kv_len (B,) int32.
+    Query row i of batch b sits at absolute position ``q_start[b] + i``
+    (the cache-insert contract: cached positions are contiguous from each
+    slot's start); key j is real iff ``j < kv_len[b]``. This is the decode
+    path whose per-batch ``cache_len`` previously forced the chunked-XLA
+    fallback inside ``nn/attention.py``."""
+    dtype = q_mu.dtype
+    mu, var = get_op("attention_cache", impl)(q_mu, k_mu, v_mu, v_var,
+                                              q_start, kv_len, scale, causal,
+                                              window)
+    return mu.astype(dtype), var.astype(dtype)
+
+
+@register("attention_paged", "xla")
+def _attention_paged_xla(q_mu, k_pages, v_pages, vv_pages, page_table,
+                         q_start, kv_len, scale, causal, window):
+    return _kernel_ops().pfp_attention_paged(
+        q_mu, k_pages, v_pages, vv_pages, page_table, q_start, kv_len,
+        scale=scale, causal=causal, window=window, impl="xla")
+
+
+@register("attention_paged", "kernel")
+def _attention_paged_kernel(q_mu, k_pages, v_pages, vv_pages, page_table,
+                            q_start, kv_len, scale, causal, window):
+    b, h, tq, d = q_mu.shape
+    tk = page_table.shape[1] * k_pages.shape[2]
+    sched = _schedule_for(
+        "attention_paged", (b, h, k_pages.shape[1], tq, tk, d), q_mu.dtype)
+    return _kernel_ops().pfp_attention_paged(
+        q_mu, k_pages, v_pages, vv_pages, page_table, q_start, kv_len,
+        scale=scale, causal=causal, window=window, impl="kernel",
+        schedule=sched)
+
+
+def pfp_attention_paged(q_mu, k_pages, v_pages, vv_pages, page_table,
+                        q_start, kv_len, *, scale: float, causal: bool = True,
+                        window=None, impl: Optional[str] = None):
+    """Paged-KV PFP attention: q (B, H, Tq, D) against a global page pool
+    (NP, Hkv, page_size, D) indirected by ``page_table`` (B, P) int32.
+
+    The kernel impl DMAs each page straight from the pool via a scalar-
+    prefetched table index map (block_k == page_size, so only block_q is
+    tunable); the xla impl gathers pages into a contiguous cache first.
+    Masking semantics match :func:`pfp_attention_cache` — kv_len doubles
+    as the per-page valid-length mask."""
+    dtype = q_mu.dtype
+    mu, var = get_op("attention_paged", impl)(q_mu, k_pages, v_pages,
+                                              vv_pages, page_table, q_start,
+                                              kv_len, scale, causal, window)
+    return mu.astype(dtype), var.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # norms — delta-method RMSNorm/LayerNorm, optional fused activation epilogue
 # ---------------------------------------------------------------------------
 @register("rmsnorm", "xla")
@@ -479,7 +559,8 @@ __all__ = [
     "IMPLS", "set_default_impl", "get_default_impl", "resolve_impl",
     "register", "get_op", "registered_ops",
     "pfp_dense", "pfp_einsum", "pfp_conv2d_im2col", "pfp_activation",
-    "pfp_maxpool2d", "pfp_attention", "pfp_rmsnorm", "pfp_layernorm",
+    "pfp_maxpool2d", "pfp_attention", "pfp_attention_cache",
+    "pfp_attention_paged", "pfp_rmsnorm", "pfp_layernorm",
     "pfp_glu_product", "pfp_embedding", "pfp_residual",
     "ACTIVATION_MOMENTS", "DETERMINISTIC_ACTIVATIONS",
 ]

@@ -1,0 +1,56 @@
+"""Shared attention validity masking.
+
+One definition of "which (query, key) score positions are real" for every
+attention surface in the repo: the chunked XLA core in ``nn/attention.py``,
+the pure-jnp oracles in ``kernels/ref.py``, and the Pallas kernel bodies in
+``kernels/pfp_attention.py``. These previously each re-derived the same
+three conditions (causality, sliding window, per-row key validity) from
+index arithmetic; keeping the boolean logic HERE means a masking rule can
+never drift between the kernel and the oracle it is tested against.
+
+The helper is deliberately array-shape agnostic: it combines *already
+broadcastable* absolute-index arrays, so it works on (B, Tq, 1) x (B, 1, Tk)
+host-side grids and on (bq, bk) in-kernel iota tiles alike (Pallas kernel
+bodies are jnp programs too).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+# Large-negative score for masked positions. exp(_NEG - row_max) underflows
+# to exactly 0.0 in fp32, so masked columns contribute exact zeros to both
+# the softmax normalizer and the value accumulators — which is what makes
+# padded/stale cache rows (paged or contiguous) bit-invisible to results.
+NEG_INF = -1e30
+
+
+def attention_valid_mask(q_idx, k_idx, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         kv_len=None):
+    """Boolean mask of valid score positions from absolute indices.
+
+    q_idx / k_idx: integer arrays of absolute sequence positions,
+    broadcastable against each other (callers shape them so the trailing
+    two dims are (Tq, Tk) — e.g. ``pos[..., :, None]`` vs
+    ``arange[..., None, :]``, or two in-kernel ``broadcasted_iota`` tiles).
+    kv_len: optional per-row valid key count (key j is real iff
+    ``k_idx < kv_len``), broadcastable against the index grid — this is the
+    per-batch ``cache_len`` masking of KV-cache decode and the per-page
+    valid-length masking of the paged kernel.
+    window: sliding-window width (key must satisfy ``k_idx > q_idx - window``).
+    """
+    m = jnp.greater_equal(q_idx, k_idx) if causal else \
+        jnp.ones(jnp.broadcast_shapes(jnp.shape(q_idx), jnp.shape(k_idx)),
+                 bool)
+    if window is not None:
+        m = jnp.logical_and(m, k_idx > q_idx - window)
+    if kv_len is not None:
+        m = jnp.logical_and(m, k_idx < kv_len)
+    return m
+
+
+def mask_scores(scores, valid):
+    """Apply a validity mask to a score tile (masked -> NEG_INF)."""
+    return jnp.where(valid, scores, NEG_INF)

@@ -27,7 +27,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.pfp_activations import pfp_activation_pallas, pfp_glu_pallas
-from repro.kernels.pfp_attention import pfp_attention_pallas
+from repro.kernels.pfp_attention import (pfp_attention_cache_pallas,
+                                         pfp_attention_paged_pallas,
+                                         pfp_attention_pallas)
 from repro.kernels.pfp_dense import pfp_dense_pallas
 from repro.kernels.pfp_maxpool import pfp_maxpool2d_pallas
 from repro.kernels.pfp_norms import pfp_layernorm_pallas, pfp_rmsnorm_pallas
@@ -176,15 +178,70 @@ def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float, causal: bool = True,
     impl = impl or get_default_impl()
     if impl == "xla":
         group = q_mu.shape[1] // k_mu.shape[1]
-        if group > 1:
-            k_mu, v_mu, v_var = (jnp.repeat(a, group, axis=1)
-                                 for a in (k_mu, v_mu, v_var))
+        k_mu, v_mu, v_var = _repeat_kv(group, k_mu, v_mu, v_var)
         return ref.pfp_attention_ref(q_mu, k_mu, v_mu, v_var, scale, causal)
     bq = _block(schedule, "block_q", block_q, q_mu.shape[2], 8)
     bk = _block(schedule, "block_k", block_k, k_mu.shape[2], 8)
     return pfp_attention_pallas(
         q_mu, k_mu, v_mu, v_var, scale=scale, causal=causal,
         block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+
+
+def _repeat_kv(group, *arrs):
+    if group == 1:
+        return arrs
+    return tuple(jnp.repeat(a, group, axis=1) for a in arrs)
+
+
+def pfp_attention_cache(q_mu, k_mu, v_mu, v_var, q_start, kv_len, *,
+                        scale: float, causal: bool = True, window=None,
+                        impl: Impl | None = None, block_q: int = 128,
+                        block_k: int = 128,
+                        schedule: Optional[Schedule] = None):
+    """KV-cache PFP attention with per-batch dynamic valid lengths.
+
+    q (B, H, Tq, D) x cache (B, Hkv, S, D); q_start/kv_len (B,) int32 give
+    each batch row its own absolute query start and valid cache length
+    (continuous-batching decode: slots sit at independent positions).
+    Optional sliding ``window``. Returns (mean, var)."""
+    impl = impl or get_default_impl()
+    if impl == "xla":
+        group = q_mu.shape[1] // k_mu.shape[1]
+        k_mu, v_mu, v_var = _repeat_kv(group, k_mu, v_mu, v_var)
+        return ref.pfp_attention_cache_ref(q_mu, k_mu, v_mu, v_var, q_start,
+                                           kv_len, scale, causal=causal,
+                                           window=window)
+    bq = _block(schedule, "block_q", block_q, q_mu.shape[2], 8)
+    bk = _block(schedule, "block_k", block_k, k_mu.shape[2], 8)
+    return pfp_attention_cache_pallas(
+        q_mu, k_mu, v_mu, v_var, q_start, kv_len, scale=scale, causal=causal,
+        window=window, block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+
+
+def pfp_attention_paged(q_mu, k_pages, v_pages, vv_pages, page_table,
+                        q_start, kv_len, *, scale: float, causal: bool = True,
+                        window=None, impl: Impl | None = None,
+                        block_q: int = 128,
+                        schedule: Optional[Schedule] = None):
+    """Paged-KV PFP attention: q (B, H, Tq, D) x page pool
+    (NP, Hkv, page_size, D) indirected by ``page_table`` (B, P).
+
+    The kernel impl DMAs pages straight from the pool via a scalar-
+    prefetched table (block_k == page_size, so only block_q is tunable);
+    the xla impl gathers the pages into a contiguous cache first. Returns
+    (mean, var)."""
+    impl = impl or get_default_impl()
+    if impl == "xla":
+        return ref.pfp_attention_paged_ref(
+            q_mu, k_pages, v_pages, vv_pages, page_table, q_start, kv_len,
+            scale, causal=causal, window=window)
+    bq = _block(schedule, "block_q", block_q, q_mu.shape[2], 8)
+    return pfp_attention_paged_pallas(
+        q_mu, k_pages, v_pages, vv_pages, page_table, q_start, kv_len,
+        scale=scale, causal=causal, window=window, block_q=bq,
+        interpret=_interpret(),
     )
 
 
@@ -289,6 +346,7 @@ def _ceil_mult(x: int, base: int = 128) -> int:
 
 __all__ = [
     "pfp_dense", "pfp_activation", "pfp_maxpool2d", "pfp_attention",
+    "pfp_attention_cache", "pfp_attention_paged",
     "pfp_rmsnorm", "pfp_layernorm", "pfp_glu_product",
     "set_default_impl", "get_default_impl",
 ]

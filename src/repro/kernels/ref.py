@@ -126,3 +126,52 @@ def pfp_attention_ref(q_mu, k_mu, v_mu, v_var, scale, causal=True):
     out_mu = jnp.einsum("bhqk,bhkd->bhqd", p, v_mu.astype(f32))
     out_var = jnp.einsum("bhqk,bhkd->bhqd", jnp.square(p), v_var.astype(f32))
     return out_mu, out_var
+
+
+def pfp_attention_cache_ref(q_mu, k_mu, v_mu, v_var, q_start, kv_len, scale,
+                            causal=True, window=None):
+    """KV-cache attention oracle over (B, H, Tq, D) x (B, H, Tk, D).
+
+    q_start/kv_len: (B,) int32 — query row i of batch b sits at absolute
+    position q_start[b] + i; key j is real iff j < kv_len[b]. The masking
+    definition is shared with the Pallas kernels (core/masking.py).
+    """
+    from repro.core.masking import attention_valid_mask, mask_scores
+
+    f32 = jnp.float32
+    tq, tk = q_mu.shape[2], k_mu.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q_mu.astype(f32), k_mu.astype(f32)) * scale
+    q_idx = q_start[:, None] + jnp.arange(tq, dtype=jnp.int32)      # (B, Tq)
+    mask = attention_valid_mask(
+        q_idx[:, :, None], jnp.arange(tk, dtype=jnp.int32)[None, None, :],
+        causal=causal, window=window, kv_len=kv_len[:, None, None])
+    p = jax.nn.softmax(mask_scores(s, mask[:, None]), axis=-1)
+    out_mu = jnp.einsum("bhqk,bhkd->bhqd", p, v_mu.astype(f32))
+    out_var = jnp.einsum("bhqk,bhkd->bhqd", jnp.square(p), v_var.astype(f32))
+    return out_mu, out_var
+
+
+def gather_kv_pages(pages, page_table):
+    """(NP, Hkv, ps, D) x (B, P) -> contiguous (B, Hkv, P*ps, D)."""
+    b, p = page_table.shape
+    np_, hkv, ps, d = pages.shape
+    flat = jnp.take(pages, page_table.reshape(-1), axis=0)
+    return flat.reshape(b, p, hkv, ps, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, p * ps, d)
+
+
+def pfp_attention_paged_ref(q_mu, k_pages, v_pages, vv_pages, page_table,
+                            q_start, kv_len, scale, causal=True, window=None):
+    """Paged KV-cache attention oracle: gather pages, then the cache oracle.
+
+    q (B, H, Tq, D) x pages (NP, Hkv, ps, D) with page_table (B, P); K/V
+    heads are repeated up to H here (the Pallas kernel instead maps query
+    heads onto shared page tiles in its BlockSpec index map).
+    """
+    group = q_mu.shape[1] // k_pages.shape[1]
+    k, vm, vv = (gather_kv_pages(a, page_table)
+                 for a in (k_pages, v_pages, vv_pages))
+    if group > 1:
+        k, vm, vv = (jnp.repeat(a, group, axis=1) for a in (k, vm, vv))
+    return pfp_attention_cache_ref(q_mu, k, vm, vv, q_start, kv_len, scale,
+                                   causal=causal, window=window)

@@ -48,6 +48,11 @@ _SUMMARY_KEYS = (
     "escalation_rate", "peak_occupancy", "final_occupancy",
 )
 
+_PAGED_KEYS = (
+    "preemptions", "defrags", "peak_page_occupancy", "mean_page_occupancy",
+    "mean_page_fragmentation", "final_live_pages",
+)
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -73,6 +78,19 @@ def main():
                          "lockstep demo loop was removed)")
     ap.add_argument("--impl", default=None, choices=["xla", "kernel"],
                     help="PFP operator implementation (core/dispatch.py)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged Gaussian KV-cache page size (rows per "
+                         "page); default: contiguous per-slot layout")
+    ap.add_argument("--page-budget", type=int, default=None,
+                    help="usable pages in the pool (default: "
+                         "slots * ceil(max_len / page_size))")
+    ap.add_argument("--optimistic-pages", action="store_true",
+                    help="admit on prompt pages only and claim decode "
+                         "pages on demand (may preempt) instead of "
+                         "reserving the full prompt+generation need")
+    ap.add_argument("--expect-defrag", action="store_true",
+                    help="exit nonzero unless the run performed at least "
+                         "one page defrag (CI: prove multi-page churn)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--mi-continue", type=float, default=0.5)
     ap.add_argument("--mi-abstain", type=float, default=3.0)
@@ -113,20 +131,37 @@ def main():
             # bf16 activations, mirroring the decode_* dry-run programs
             # (serving/decode.py) whose executed version this driver is
             EngineConfig(slots=args.batch, max_len=max_len, impl=args.impl,
-                         compute_dtype=jnp.bfloat16, seed=args.seed),
+                         compute_dtype=jnp.bfloat16, seed=args.seed,
+                         page_size=args.page_size,
+                         page_budget=args.page_budget,
+                         reserve_pages=not args.optimistic_pages,
+                         auto_defrag=args.page_size is not None),
             router=router, scheduler=scheduler, mesh=mesh)
         summary = run_load(engine, trace)
 
+    layout = (f"paged/ps={args.page_size}" if args.page_size else "contiguous")
     print(f"== engine summary ({cfg.name}, mesh={dims}, "
-          f"impl={args.impl or 'default'}) ==")
-    for k in _SUMMARY_KEYS:
+          f"impl={args.impl or 'default'}, kv={layout}) ==")
+    keys = _SUMMARY_KEYS + (_PAGED_KEYS if args.page_size else ())
+    for k in keys:
         v = summary[k]
-        print(f"  {k:20s} {v:.4g}" if isinstance(v, float)
-              else f"  {k:20s} {v}")
+        print(f"  {k:22s} {v:.4g}" if isinstance(v, float)
+              else f"  {k:22s} {v}")
     engine.pool.check_invariants()
     if summary["final_occupancy"] != 0:
         print("ERROR: slot pool leaked "
               f"{summary['final_occupancy']} slots", file=sys.stderr)
+        return 1
+    if args.page_size is not None and summary["final_live_pages"] != 0:
+        # the paged analogue of the slot-leak check: every page must have
+        # drained back to the free list once the loadgen run finished
+        print("ERROR: page pool leaked "
+              f"{summary['final_live_pages']} pages", file=sys.stderr)
+        return 1
+    if args.expect_defrag and summary["defrags"] == 0:
+        print("ERROR: --expect-defrag but the run never defragged "
+              "(page churn too low to exercise the paged pool)",
+              file=sys.stderr)
         return 1
     print(f"served {summary['completed']} requests "
           f"({summary['tokens_generated']} tokens) — one PFP pass per decode "

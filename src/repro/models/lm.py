@@ -25,8 +25,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.gaussian import GaussianTensor, VAR, is_gaussian
 from repro.core.modes import Mode
-from repro.nn.attention import (KVCache, attention_apply, attention_init,
-                                init_kv_cache)
+from repro.nn.attention import (KVCache, PagedKVCache, attention_apply,
+                                attention_init, init_kv_cache,
+                                init_paged_kv_cache)
 from repro.nn.layers import (NORMS, dense_apply, dense_init, embedding_apply,
                              embedding_init, residual_add,
                              sinusoidal_embedding)
@@ -88,7 +89,7 @@ def _block_init(kind: str, cfg: ModelConfig, key):
 
 def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
                  positions, image_emb=None, state=None, cache_len=None,
-                 standard_positions=False):
+                 page_table=None, standard_positions=False):
     """Returns (x, new_state, aux_loss)."""
     norm_apply = NORMS[cfg.norm][1]
     aux = jnp.zeros((), jnp.float32)
@@ -107,6 +108,7 @@ def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
             cross_kv=image_emb if kind == "cross" else None,
             cache=state if kind != "cross" else None,
             cache_len=cache_len,
+            page_table=page_table if kind != "cross" else None,
             standard_positions=standard_positions,
         )
         x = residual_add(x, attn_out)
@@ -225,6 +227,10 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
     image_emb = inputs.get("image_embeddings")
     if image_emb is not None and ctx.mode == Mode.PFP:
         image_emb = GaussianTensor.deterministic(image_emb)
+    # Decode-state validity/indirection, shared by every layer: per-batch
+    # valid cache length, and (paged decode) the slot -> page-pool table.
+    cache_len = inputs.get("cache_len")
+    page_table = inputs.get("page_table")
 
     lpg, num_groups, tail = _group_counts(cfg)
     aux_total = jnp.zeros((), jnp.float32)
@@ -234,6 +240,8 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
         x, new_st, aux = _block_apply("attn", params[f"head{i}"], x,
                                       ctx.with_layer(1000 + i), cfg,
                                       positions=positions, state=st,
+                                      cache_len=cache_len,
+                                      page_table=page_table,
                                       standard_positions=standard_positions)
         aux_total = aux_total + aux
         if collect_states and states is not None:
@@ -260,6 +268,7 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                     return _block_apply(
                         _kind, gp_i, x_, lctx, cfg,
                         positions=positions, image_emb=image_emb, state=st_,
+                        cache_len=cache_len, page_table=page_table,
                         standard_positions=standard_positions)
 
                 # Nested remat: per-layer checkpoints inside the remat'd
@@ -290,6 +299,8 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                                       ctx.with_layer(2000 + i), cfg,
                                       positions=positions,
                                       image_emb=image_emb, state=st,
+                                      cache_len=cache_len,
+                                      page_table=page_table,
                                       standard_positions=standard_positions)
         aux_total = aux_total + aux
         if collect_states and states is not None:
@@ -344,6 +355,45 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
         st = _state_for_kind(cfg.pattern[i % lpg], cfg, batch, max_len)
         if st is not None:
             states[f"tail{i}"] = st
+    return states
+
+
+def init_paged_decode_state(cfg: ModelConfig, num_pages: int,
+                            page_size: int) -> dict:
+    """Paged decode state: every attention layer's KV cache is a global
+    pool of ``num_pages`` fixed-size pages (page 0 reserved as the trash
+    page) instead of per-slot (B, Hkv, max_len, Dh) buffers. Which pages
+    belong to which slot lives in the engine's page tables, passed through
+    decode inputs — so the pytree has NO slot axis, and per-slot
+    take/write/select helpers do not apply to it.
+
+    Only attention-family architectures are supported: recurrent/SSM
+    carries have no positional validity mask, so they cannot share a
+    lockstep-written global pool (the engine keeps those models on the
+    contiguous slot-pooled layout).
+    """
+    bad = [k for k in cfg.pattern if k not in ("attn", "moe", "cross")]
+    if bad:
+        raise ValueError(
+            f"paged decode state supports attention-family models only; "
+            f"{cfg.name} has block kinds {sorted(set(bad))}")
+
+    def paged():
+        return init_paged_kv_cache(num_pages, cfg.num_kv_heads, page_size,
+                                   cfg.head_dim)
+
+    lpg, num_groups, tail = _group_counts(cfg)
+    states: dict[str, Any] = {}
+    for i in range(cfg.first_dense_layers):
+        states[f"head{i}"] = paged()
+    if num_groups:
+        proto = {f"b{i}": paged() for i in range(lpg)
+                 if cfg.pattern[i] != "cross"}
+        states["stack"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (num_groups,) + a.shape), proto)
+    for i in range(tail):
+        if cfg.pattern[i % lpg] != "cross":
+            states[f"tail{i}"] = paged()
     return states
 
 
@@ -422,7 +472,12 @@ def select_decode_slots(new_states, old_states, keep_new):
 def decode_step(params, cfg: ModelConfig, inputs, states, ctx: Context):
     """One-token decode. inputs: {'tokens': (B,1)} or {'frame_embeddings':
     (B,1,D)}, plus 'positions': (B,1) absolute position, optional
-    'cache_len': (B,) valid cache entries, optional 'image_embeddings'.
+    'cache_len': (B,) valid cache entries INCLUDING the tokens fed this
+    step (feeding position p means cache_len >= p+1 — entries at or past
+    cache_len are masked out of attention, and the paged insert redirects
+    their writes to the trash page), optional 'page_table': (B, P)
+    page-pool indirection (when ``states`` came from
+    ``init_paged_decode_state``), optional 'image_embeddings'.
     Returns (logits, new_states).
     """
     logits, _, new_states = forward(

@@ -7,6 +7,16 @@ Execution modes:
       var out = A^2 @ var_v. The KV cache stores (mu_k, mu_v, var_v) so
       value uncertainty survives across decode steps.
 
+Two KV-cache layouts share one decode math:
+
+  KVCache      contiguous per-sequence buffers (B, Hkv, S, Dh) — training,
+               prefill and non-engine decode; also the degenerate
+               one-page-per-slot case of the paged layout.
+  PagedKVCache a global pool of fixed-size pages (NP, Hkv, page_size, Dh)
+               shared by every sequence; a per-batch ``page_table`` (B, P)
+               maps logical page j of batch b to a pool row. The serving
+               engine's page-pool state manager owns the table.
+
 Grouped-query attention keeps K/V at ``num_kv_heads`` and groups queries;
 all einsums are grouped (no materialized KV repetition).
 """
@@ -19,16 +29,32 @@ import jax.numpy as jnp
 
 from repro.core import dispatch, pfp_math
 from repro.core.gaussian import GaussianTensor, VAR, is_gaussian
+from repro.core.masking import NEG_INF, attention_valid_mask, mask_scores
 from repro.nn.layers import dense_apply, dense_init, rope_angles, rope_apply
 from repro.nn.module import Context
-
-_NEG = -1e30
 
 
 class KVCache(NamedTuple):
     k_mu: jax.Array   # (B, Hkv, S, Dh)
     v_mu: jax.Array   # (B, Hkv, S, Dh)
     v_var: jax.Array  # (B, Hkv, S, Dh) — zeros outside PFP mode
+
+
+class PagedKVCache(NamedTuple):
+    """Paged Gaussian KV cache: page-pool decode layout.
+
+    Leaves are GLOBAL page pools of shape (num_pages, Hkv, page_size, Dh)
+    shared by all sequences; which pages belong to which sequence lives
+    outside the pytree in an int32 ``page_table`` (B, P) threaded through
+    decode inputs (all layers share one table; each layer owns its own
+    pool buffers). Contract: page 0 is reserved as the trash page — cache
+    inserts at positions >= ``cache_len`` (a prefill window's right
+    padding, a parked lockstep slot) are redirected there, so they can
+    never alias a live sequence's pages.
+    """
+    k_mu: jax.Array   # (NP, Hkv, page_size, Dh)
+    v_mu: jax.Array   # (NP, Hkv, page_size, Dh)
+    v_var: jax.Array  # (NP, Hkv, page_size, Dh)
 
 
 def attention_init(key, d_model: int, num_heads: int, num_kv_heads: int,
@@ -64,19 +90,14 @@ def _merge_heads(x):
     return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
 
 
-def _build_mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
-                k_valid: Optional[jax.Array] = None):
-    """(..., Tq, Tk) boolean mask from absolute positions."""
-    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
-    q = q_pos[..., :, None]
-    k = k_pos[..., None, :]
-    if causal:
-        m = jnp.logical_and(m, q >= k)
-    if window is not None:
-        m = jnp.logical_and(m, k > q - window)
-    if k_valid is not None:
-        m = jnp.logical_and(m, k_valid[..., None, :])
-    return m
+def _gather_pages(pages, page_table):
+    """(NP, Hkv, ps, D) x (B, P) -> contiguous (B, Hkv, P*ps, D) view of a
+    paged pool — the gather-based path; the Pallas kernel instead DMAs
+    pages in place via its scalar-prefetched index map."""
+    from repro.kernels.ref import gather_kv_pages  # lazy: keep nn importable
+    #                                                without the kernels pkg
+
+    return gather_kv_pages(pages, page_table)
 
 
 def attention_apply(
@@ -92,8 +113,10 @@ def attention_apply(
     window: Optional[int] = None,
     rope_theta: Optional[float] = 1e4, # None = no rotary (e.g. cross attn)
     cross_kv=None,                     # (B, S, d_model) overrides self K/V
-    cache: Optional[KVCache] = None,   # decode: append at `positions`
+    cache=None,                        # KVCache | PagedKVCache: append at
+    #                                    `positions`
     cache_len: Optional[jax.Array] = None,  # valid entries in cache
+    page_table: Optional[jax.Array] = None,  # (B, P) int32, PagedKVCache only
     standard_positions: bool = False,  # static: positions are 0..Tq-1 arange
 ):
     """Returns (output, new_cache|None). x: (B, Tq, d_model) or Gaussian."""
@@ -118,7 +141,36 @@ def attention_apply(
     v_var = v.var if pfp else jnp.zeros_like(v_mu)
 
     new_cache = None
-    if cache is not None:
+    paged = isinstance(cache, PagedKVCache)
+    kv_len = None  # (B,) per-batch valid cache length (cache paths only)
+    if paged:
+        if page_table is None or cache_len is None:
+            raise ValueError("PagedKVCache requires page_table and cache_len")
+        ps = cache.k_mu.shape[2]
+        kv_len = cache_len
+        # Insert new K/V rows at each token's (page, row) destination:
+        # page_table[b, pos // ps] row pos % ps. Rows at positions >=
+        # cache_len — a static prefill window's right padding, a parked
+        # lockstep slot — are redirected to the reserved trash page 0, so
+        # a lockstep pass over the shared pool can never write another
+        # sequence's pages (the paged analogue of select-merge).
+        dest_page = jnp.where(
+            positions < cache_len[:, None],
+            jnp.take_along_axis(page_table, positions // ps, axis=1), 0)
+        dest_row = positions % ps
+
+        def _insert_pages(buf, new):
+            # new (B, Hkv, Tq, Dh) -> rows (B, Tq, Hkv, Dh) scattered to
+            # buf[(B, Tq) pages, :, (B, Tq) rows].
+            vals = new.astype(buf.dtype).transpose(0, 2, 1, 3)
+            return buf.at[dest_page, :, dest_row].set(vals)
+
+        cache = PagedKVCache(_insert_pages(cache.k_mu, k_mu),
+                             _insert_pages(cache.v_mu, v_mu),
+                             _insert_pages(cache.v_var, v_var))
+        new_cache = cache
+        k_pos = k_valid = None  # derived after the gather (XLA path only)
+    elif cache is not None:
         # Insert the new K/V rows at each batch element's own offset
         # (positions[b, 0] — continuous-batching slots sit at independent
         # positions; lockstep callers simply pass equal offsets).
@@ -144,11 +196,10 @@ def attention_apply(
         new_cache = cache
         k_mu, v_mu, v_var = cache.k_mu, cache.v_mu, cache.v_var
         s = k_mu.shape[2]
-        k_pos = jnp.broadcast_to(jnp.arange(s), (x.shape[0] if not pfp else q.shape[0], s))
-        k_valid = k_pos < (
-            cache_len[:, None] if cache_len is not None
-            else (positions[:, -1:] + 1)
-        )
+        kv_len = (cache_len if cache_len is not None
+                  else positions[:, -1] + 1)
+        k_pos = jnp.broadcast_to(jnp.arange(s), (positions.shape[0], s))
+        k_valid = k_pos < kv_len[:, None]
     else:
         s = k_mu.shape[2]
         if cross_kv is not None:
@@ -168,22 +219,43 @@ def attention_apply(
     q_var = _group(q.var) if (pfp and ctx.attention_mode ==
                               "variance_corrected") else None
 
-    # Registry fast path: mean-field PFP attention with plain (right-aligned)
-    # causal or full masking lowers to the flash-style Pallas kernel via the
-    # impl-dispatch registry. Cases the kernel's index-based mask cannot
-    # express keep the chunked XLA core below (which is also the registered
-    # 'xla' implementation's production analogue): sliding windows, per-batch
-    # cache validity, probit-corrected scores — and causal masking under
-    # caller-supplied position ids (packed sequences remap positions, and the
-    # kernel masks by index, not position; `standard_positions` is the
-    # caller's static promise that positions are the default arange).
-    if (pfp and dispatch.resolve_impl(ctx.impl) == "kernel"
-            and q_var is None and window is None and k_valid is None
-            and (standard_positions or not causal)):
+    # Registry fast paths: mean-field PFP attention lowers to the
+    # flash-style Pallas kernels via the impl-dispatch registry.
+    #   * cache paths (contiguous or paged) always qualify: per-batch
+    #     query starts + valid lengths (and sliding windows) are native to
+    #     the cache/paged kernels' scalar-prefetch masking, and the cache
+    #     insert contract guarantees positions are contiguous from each
+    #     batch row's start — no `standard_positions` promise needed;
+    #   * the cache-free path keeps the original conditions: cases the
+    #     index-based mask cannot express stay on the chunked XLA core
+    #     below (probit-corrected scores, windows, and causal masking
+    #     under caller-remapped position ids).
+    use_kernel = (pfp and dispatch.resolve_impl(ctx.impl) == "kernel"
+                  and q_var is None)
+    if use_kernel and cache is not None:
+        q_start = positions[:, 0]
+        if paged:
+            out_mu, out_var = _attention_paged_registry(
+                q_mu, cache, page_table, q_start, kv_len, group=group,
+                scale=scale, causal=causal, window=window, impl=ctx.impl)
+        else:
+            out_mu, out_var = _attention_cache_registry(
+                q_mu, k_mu, v_mu, v_var, q_start, kv_len, group=group,
+                scale=scale, causal=causal, window=window, impl=ctx.impl)
+    elif (use_kernel and cache is None and window is None
+          and k_valid is None and (standard_positions or not causal)):
         out_mu, out_var = _attention_registry(
             q_mu, k_mu, v_mu, v_var, group=group, scale=scale, causal=causal,
             impl=ctx.impl)
     else:
+        if paged:
+            # Gather the pool pages into the contiguous layout, then run
+            # the exact same chunked core as the contiguous cache path —
+            # paged XLA decode is bit-for-bit the contiguous decode.
+            k_mu, v_mu, v_var = (_gather_pages(a, page_table) for a in cache)
+            s = k_mu.shape[2]
+            k_pos = jnp.broadcast_to(jnp.arange(s), (positions.shape[0], s))
+            k_valid = k_pos < kv_len[:, None]
         out_mu, out_var = _attention_core(
             q_mu, q_var, k_mu, v_mu, v_var if pfp else None,
             q_pos=positions, k_pos=k_pos, k_valid=k_valid,
@@ -225,6 +297,33 @@ def _attention_registry(q_mu, k_mu, v_mu, v_var, *, group, scale, causal,
             out_var.reshape(b, hkv, g, tq, dh))
 
 
+def _attention_cache_registry(q_mu, k_mu, v_mu, v_var, q_start, kv_len, *,
+                              group, scale, causal, window, impl):
+    """Contiguous KV-cache decode through the registry 'attention_cache'
+    op: per-batch query starts and valid lengths ride scalar prefetch, so
+    the previous chunked-XLA `tk_valid` fallback is gone."""
+    b, hkv, g, tq, dh = q_mu.shape
+    qf = q_mu.reshape(b, hkv * g, tq, dh)
+    out_mu, out_var = dispatch.pfp_attention_cache(
+        qf, k_mu, v_mu, v_var, q_start, kv_len, scale=scale, causal=causal,
+        window=window, impl=impl)
+    return (out_mu.reshape(b, hkv, g, tq, dh),
+            out_var.reshape(b, hkv, g, tq, dh))
+
+
+def _attention_paged_registry(q_mu, cache, page_table, q_start, kv_len, *,
+                              group, scale, causal, window, impl):
+    """Paged KV-cache decode through the registry 'attention_paged' op:
+    the page table drives the kernel's KV DMA, no contiguous gather."""
+    b, hkv, g, tq, dh = q_mu.shape
+    qf = q_mu.reshape(b, hkv * g, tq, dh)
+    out_mu, out_var = dispatch.pfp_attention_paged(
+        qf, cache.k_mu, cache.v_mu, cache.v_var, page_table, q_start, kv_len,
+        scale=scale, causal=causal, window=window, impl=impl)
+    return (out_mu.reshape(b, hkv, g, tq, dh),
+            out_var.reshape(b, hkv, g, tq, dh))
+
+
 def _attention_core(q_mu, q_var, k_mu, v_mu, v_var, *, q_pos, k_pos,
                     k_valid, causal, window, scale, chunk_size):
     """Grouped masked softmax attention with joint mean/var outputs.
@@ -246,16 +345,12 @@ def _attention_core(q_mu, q_var, k_mu, v_mu, v_var, *, q_pos, k_pos,
                 jnp.einsum("bhgqd,bhkd->bhgqk", qb_var, jnp.square(k_mu))
             ) * (scale * scale)
             scores = pfp_math.probit_corrected_logits(scores, score_var)
-        mask = jnp.ones(qb_pos.shape + (k_pos.shape[-1],), bool)
-        qp = qb_pos[..., :, None]
-        kp = k_pos[..., None, :]
-        if causal:
-            mask = jnp.logical_and(mask, qp >= kp)
-        if window:
-            mask = jnp.logical_and(mask, kp > qp - window)
+        mask = attention_valid_mask(qb_pos[..., :, None], k_pos[..., None, :],
+                                    causal=causal,
+                                    window=window if window else None)
         if k_valid is not None:
             mask = jnp.logical_and(mask, k_valid[..., None, :])
-        scores = jnp.where(mask[:, None, None], scores, _NEG)
+        scores = mask_scores(scores, mask[:, None, None])
         probs = jax.nn.softmax(scores, axis=-1)
         o_mu = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v_mu)
         o_var = (jnp.einsum("bhgqk,bhkd->bhgqd", jnp.square(probs), v_var)
@@ -299,5 +394,16 @@ def init_kv_cache(batch: int, num_kv_heads: int, max_len: int, head_dim: int,
                   dtype=jnp.float32) -> KVCache:
     shape = (batch, num_kv_heads, max_len, head_dim)
     return KVCache(
+        jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+    )
+
+
+def init_paged_kv_cache(num_pages: int, num_kv_heads: int, page_size: int,
+                        head_dim: int, dtype=jnp.float32) -> PagedKVCache:
+    """Zeroed page pool. ``num_pages`` INCLUDES the reserved trash page 0;
+    a contiguous (B, Hkv, S, D) cache is the degenerate layout with one
+    page per sequence of page_size == S and an identity page table."""
+    shape = (num_pages, num_kv_heads, page_size, head_dim)
+    return PagedKVCache(
         jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
     )

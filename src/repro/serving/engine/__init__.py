@@ -10,13 +10,14 @@ from repro.serving.engine.metrics import EngineMetrics, percentile
 from repro.serving.engine.router import (Decision, RouterConfig,
                                          UncertaintyRouter,
                                          make_svi_fallback)
-from repro.serving.engine.scheduler import RequestScheduler, SchedulerConfig
-from repro.serving.engine.state import DecodeStatePool
+from repro.serving.engine.scheduler import (RequestScheduler, SchedulerConfig,
+                                            pages_for)
+from repro.serving.engine.state import DecodeStatePool, PagedDecodeStatePool
 
 __all__ = [
     "Engine", "EngineConfig", "Request",
-    "RequestScheduler", "SchedulerConfig",
-    "DecodeStatePool",
+    "RequestScheduler", "SchedulerConfig", "pages_for",
+    "DecodeStatePool", "PagedDecodeStatePool",
     "UncertaintyRouter", "RouterConfig", "Decision", "make_svi_fallback",
     "EngineMetrics", "percentile",
     "poisson_trace", "run_load",

@@ -3,21 +3,29 @@
 One ``Engine`` owns a fixed decode batch of ``slots`` sequences over a
 single parameter pytree:
 
-  submit -> scheduler (admission control, priority/deadline + aging)
-         -> slot pool (zeroed per-slot KV mean/variance rows)
-         -> chunked prefill (budgeted prompt tokens per engine step)
+  submit -> scheduler (admission control, priority/deadline + aging;
+            paged engines admit on PAGE budget, not slot count)
+         -> state pool (contiguous: zeroed per-slot KV mean/variance rows;
+            paged: a page-table row over the shared Gaussian page pool)
+         -> chunked prefill (budgeted prompt tokens per engine step;
+            paged engines batch each round's chunks into ONE multi-slot
+            pass)
          -> lockstep PFP decode (ONE probabilistic pass per step for the
             whole batch: logit means + variances)
          -> uncertainty router (continue / escalate to SVI / abstain)
-         -> eviction on completion or abstention (slot returns to pool)
+         -> eviction on completion or abstention (slot + pages return to
+            the pool; optimistic page admission may PREEMPT the youngest
+            slot when the pool runs dry — its request is requeued and
+            later re-prefilled from prompt + generated, bit-identically)
 
 Per-slot decode state stays on device for a request's whole lifetime; the
 host only sees (B,)-sized tokens and mutual-information values each step.
 Slots advance independently — each sits at its own position, admissions
-and evictions happen mid-flight — which is exactly what the per-slot cache
-insert in ``nn/attention.py`` and the select-merge in ``models/lm.py``
-exist for: parked and mid-prefill slots keep their state bit-identical
-through every lockstep step.
+and evictions happen mid-flight. The contiguous layout protects parked and
+mid-prefill slots with the select-merge in ``models/lm.py``; the paged
+layout needs no merge at all — writes from slots that must not advance are
+redirected to the pool's trash page by the paged cache insert in
+``nn/attention.py``.
 """
 from __future__ import annotations
 
@@ -40,7 +48,7 @@ from repro.serving.engine.metrics import EngineMetrics
 from repro.serving.engine.router import (Decision, RouterConfig,
                                          UncertaintyRouter)
 from repro.serving.engine.scheduler import RequestScheduler, SchedulerConfig
-from repro.serving.engine.state import DecodeStatePool
+from repro.serving.engine.state import DecodeStatePool, PagedDecodeStatePool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +62,18 @@ class EngineConfig:
     impl: Optional[str] = None     # 'xla' | 'kernel' | None = process default
     compute_dtype: Any = None      # None = f32 (CPU tests); serve uses bf16
     seed: int = 0
-    auto_compact: bool = False     # compact the pool whenever fragmented
+    auto_compact: bool = False     # contiguous: compact whenever fragmented
+    # -- paged Gaussian KV-cache (attention-family models only) -------------
+    page_size: Optional[int] = None  # None = contiguous per-slot layout
+    page_budget: Optional[int] = None  # usable pages; None = slots *
+    #                                    ceil(max_len / page_size) (the
+    #                                    contiguous layout's capacity)
+    reserve_pages: bool = True     # True: admission reserves the full
+    #                                prompt+generation page need (never
+    #                                preempts). False: optimistic — pages
+    #                                are claimed on demand; exhaustion
+    #                                preempts the youngest slot.
+    auto_defrag: bool = False      # paged: defrag whenever fragmented
 
 
 @dataclasses.dataclass
@@ -70,6 +89,11 @@ class _Slot:
     # decode step ran — the engine then replays last_input against the
     # pre-decode pool snapshot instead.
     replay: Optional[tuple] = None
+    # Tokens this slot prefills: the prompt, plus — after a preemption —
+    # the tokens already generated (PFP K/V rows are deterministic per
+    # (token, position), so re-prefilling prompt+generated reproduces the
+    # evicted pages bit-for-bit and decode continues where it left off).
+    prefill_tokens: Optional[np.ndarray] = None
 
 
 class Engine:
@@ -100,8 +124,20 @@ class Engine:
         # they keep exact-length chunks (one trace per distinct length).
         self._static_chunks = all(k in ("attn", "moe", "cross")
                                   for k in cfg.pattern)
-        self.pool = DecodeStatePool(cfg, config.slots, config.max_len,
-                                    mesh=mesh)
+        self.paged = config.page_size is not None
+        if self.paged:
+            if not self._static_chunks:
+                raise ValueError(
+                    "paged KV-cache serving supports attention-family "
+                    "models only (recurrent/SSM carries have no positional "
+                    "validity mask); use the contiguous layout for "
+                    f"{cfg.name}")
+            self.pool = PagedDecodeStatePool(
+                cfg, config.slots, config.max_len, config.page_size,
+                num_pages=config.page_budget, mesh=mesh)
+        else:
+            self.pool = DecodeStatePool(cfg, config.slots, config.max_len,
+                                        mesh=mesh)
         self.metrics = EngineMetrics()
         self.finished: List[Request] = []
         self._slots: List[Optional[_Slot]] = [None] * config.slots
@@ -118,7 +154,9 @@ class Engine:
         self._lm_mean = jnp.zeros((config.slots, v), jnp.float32)
         self._lm_var = jnp.zeros((config.slots, v), jnp.float32)
         self._chunk_fn = jax.jit(self._chunk_step)
-        self._decode_fn = jax.jit(self._decode_step)
+        self._batch_chunk_fn = jax.jit(self._batch_chunk_step)
+        self._decode_fn = jax.jit(self._decode_step_paged if self.paged
+                                  else self._decode_step)
         self._set_row = jax.jit(lambda buf, slot, row: buf.at[slot].set(row))
         self._unc = jax.jit(functools.partial(
             uncertainty_decode,
@@ -162,6 +200,38 @@ class Engine:
         merged = lm.select_decode_slots(new_states, states, active)
         return (jnp.where(active[:, None], mean, lm_mean),
                 jnp.where(active[:, None], var, lm_var), merged)
+
+    def _decode_step_paged(self, params, tokens, positions, cache_len,
+                           active, states, page_table, lm_mean, lm_var):
+        """Lockstep decode over the shared page pool. No select-merge: an
+        inactive slot's cache_len sits at its position, so the paged
+        insert redirects its write to the trash page — the pool is only
+        ever touched on ``active`` slots' own pages."""
+        inputs = {"tokens": tokens, "positions": positions,
+                  "cache_len": cache_len, "page_table": page_table}
+        logits, new_states = lm.decode_step(params, self.cfg, inputs, states,
+                                            self._ctx())
+        mean, var = self._split_logits(logits)
+        mean = mean[:, -1].astype(jnp.float32)
+        var = var[:, -1].astype(jnp.float32)
+        return (jnp.where(active[:, None], mean, lm_mean),
+                jnp.where(active[:, None], var, lm_var), new_states)
+
+    def _batch_chunk_step(self, params, inputs, states, out_idx, done,
+                          lm_mean, lm_var):
+        """One batched multi-slot prefill round over the page pool:
+        (B, C) window tokens in, per-slot logit (mean, var) rows gathered
+        at each slot's own last-real-token index, merged into the logit
+        buffers only where ``done`` (prefill completed this round)."""
+        logits, new_states = lm.decode_step(params, self.cfg, inputs, states,
+                                            self._ctx())
+        mean, var = self._split_logits(logits)
+        mean = jnp.take_along_axis(
+            mean.astype(jnp.float32), out_idx[:, None, None], axis=1)[:, 0]
+        var = jnp.take_along_axis(
+            var.astype(jnp.float32), out_idx[:, None, None], axis=1)[:, 0]
+        return (jnp.where(done[:, None], mean, lm_mean),
+                jnp.where(done[:, None], var, lm_var), new_states)
 
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -213,35 +283,65 @@ class Engine:
         self._prefill()
         self._route_and_decode(now)
         self._step_idx += 1
-        self.metrics.on_step(self.pool.live)
-        if self.config.auto_compact and self.pool.fragmentation():
-            self.compact()
+        if self.paged:
+            self.metrics.on_step(
+                self.pool.live,
+                pages=(self.pool.live_pages, self.pool.total_pages,
+                       self.pool.page_fragmentation()))
+            if self.config.auto_defrag and self.pool.page_fragmentation():
+                self.defrag()
+        else:
+            self.metrics.on_step(self.pool.live)
+            if self.config.auto_compact and self.pool.fragmentation():
+                self.compact()
 
     def _admit(self, now: float) -> None:
         while self.pool.free_slots:
-            req, expired = self.scheduler.pop_ready(now)
+            if self.paged:
+                req, expired = self.scheduler.pop_ready(
+                    now, free_pages=self.pool.free_pages,
+                    page_size=self.pool.page_size,
+                    reserve_pages=self.config.reserve_pages)
+            else:
+                req, expired = self.scheduler.pop_ready(now)
             for e in expired:
                 self.metrics.on_expire()
                 self.finished.append(e)
             if req is None:
                 break
             slot = self.pool.alloc(req.uid)
-            self._slots[slot] = _Slot(request=req, admit_seq=self._admit_seq)
+            tokens = np.asarray(req.prompt, np.int32)
+            if req.generated:  # re-admission after a preemption
+                tokens = np.concatenate(
+                    [tokens, np.asarray(req.generated, np.int32)])
+            self._slots[slot] = _Slot(request=req, admit_seq=self._admit_seq,
+                                      prefill_tokens=tokens)
+            if self.paged and self.config.reserve_pages:
+                # pop_ready admitted against the free-page count, so the
+                # full prompt+generation reservation cannot fail.
+                ok = self.pool.ensure_capacity(
+                    slot, len(req.prompt) + req.max_new_tokens)
+                assert ok, "page reservation failed after admission check"
             self._admit_seq += 1
             self.metrics.on_admit(req.uid, req.arrival, now)
 
-    def _prefill(self) -> None:
+    def _prefill_pending(self):
         pending = sorted(
             ((sl.admit_seq, slot) for slot, sl in enumerate(self._slots)
              if sl is not None and sl.phase == "prefill"))
-        plan = self.scheduler.plan_prefill(
-            [(slot, len(self._slots[slot].request.prompt)
-              - self._slots[slot].prefill_pos) for _, slot in pending])
+        return [(slot, len(self._slots[slot].prefill_tokens)
+                 - self._slots[slot].prefill_pos) for _, slot in pending]
+
+    def _prefill(self) -> None:
+        if self.paged:
+            self._prefill_paged()
+            return
+        plan = self.scheduler.plan_prefill(self._prefill_pending())
         for slot, n in plan:
             sl = self._slots[slot]
             start = sl.prefill_pos
             end = start + n
-            prompt = np.asarray(sl.request.prompt, np.int32)
+            prompt = sl.prefill_tokens
             if self._static_chunks:
                 # fixed-size window ending at `end`: one compiled shape.
                 # Re-fed rows rewrite identical k/v; right-pad rows (only
@@ -271,12 +371,87 @@ class Engine:
             sl.prefill_pos += n
             self.pool.positions[slot] = sl.prefill_pos
             self.metrics.on_prefill(n)
-            if sl.prefill_pos == len(sl.request.prompt):
+            if sl.prefill_pos == len(prompt):
                 sl.phase = "decode"
-                sl.last_input = int(sl.request.prompt[-1])
+                sl.last_input = int(prompt[-1])
                 sl.replay = (sub, inputs, out_idx)
                 self._lm_mean = self._set_row(self._lm_mean, slot, mean[0])
                 self._lm_var = self._set_row(self._lm_var, slot, var[0])
+
+    def _prefill_paged(self) -> None:
+        """Batched multi-slot prefill over the shared page pool: every
+        round of the scheduler's plan (at most one chunk per slot) runs as
+        ONE lockstep pass at the full slot-batch width — a single compiled
+        shape regardless of how many slots are prefilling. Unplanned rows
+        carry cache_len 0, so their writes land on the trash page and
+        their outputs are discarded."""
+        b = self.config.slots
+        c = self.scheduler.config.prefill_chunk
+        for rnd in self.scheduler.plan_prefill_rounds(self._prefill_pending()):
+            tokens = np.zeros((b, c), np.int32)
+            positions = np.tile(np.arange(c, dtype=np.int32), (b, 1))
+            cache_len = np.zeros(b, np.int32)
+            out_idx = np.zeros(b, np.int32)
+            done = np.zeros(b, bool)
+            planned = []
+            for slot, n in rnd:
+                sl = self._slots[slot]
+                if sl is None or sl.phase != "prefill":
+                    continue  # preempted as a page victim in this step
+                end = sl.prefill_pos + n
+                if not self.pool.ensure_capacity(slot, end) and \
+                        not self._make_room(slot, end):
+                    # pool exhausted and nothing to preempt: bounce this
+                    # request back to the queue (it keeps its progress)
+                    self._preempt(slot)
+                    continue
+                lo = max(0, end - c)
+                window = sl.prefill_tokens[lo:end]
+                tokens[slot, :len(window)] = window
+                positions[slot] = lo + np.arange(c, dtype=np.int32)
+                cache_len[slot] = end
+                out_idx[slot] = len(window) - 1
+                done[slot] = end == len(sl.prefill_tokens)
+                planned.append((slot, n, end))
+            # A planned slot may have been preempted by a LATER slot's
+            # _make_room in the same round: drop it (its table row is
+            # already zeroed, so even its staged write would only reach
+            # the trash page) and keep its logit rows untouched.
+            dropped = [p for p in planned if self._slots[p[0]] is None]
+            for slot, _, _ in dropped:
+                cache_len[slot] = 0
+                done[slot] = False
+            planned = [p for p in planned if self._slots[p[0]] is not None]
+            if not planned:
+                continue
+            pre_states = self.pool.states  # escalation-replay snapshot
+            table = self.pool.device_table()
+            inputs = {
+                "tokens": jnp.asarray(tokens),
+                "positions": jnp.asarray(positions),
+                "cache_len": jnp.asarray(cache_len),
+                "page_table": table,
+            }
+            self._lm_mean, self._lm_var, self.pool.states = \
+                self._batch_chunk_fn(self.params, inputs, self.pool.states,
+                                     jnp.asarray(out_idx),
+                                     jnp.asarray(done),
+                                     self._lm_mean, self._lm_var)
+            for slot, n, end in planned:
+                sl = self._slots[slot]
+                sl.prefill_pos = end
+                self.pool.positions[slot] = end
+                self.metrics.on_prefill(n)
+                if done[slot]:
+                    sl.phase = "decode"
+                    sl.last_input = int(sl.prefill_tokens[-1])
+                    row = {
+                        "tokens": inputs["tokens"][slot:slot + 1],
+                        "positions": inputs["positions"][slot:slot + 1],
+                        "cache_len": inputs["cache_len"][slot:slot + 1],
+                        "page_table": table[slot:slot + 1],
+                    }
+                    sl.replay = (pre_states, row, int(out_idx[slot]))
 
     def _route_and_decode(self, now: float) -> None:
         decode_slots = [slot for slot, sl in enumerate(self._slots)
@@ -317,15 +492,35 @@ class Engine:
 
         if not active.any():
             return
+        if self.paged:
+            # Each active slot writes one KV row at its position this
+            # step: make sure the covering page exists. Under optimistic
+            # admission the pool can run dry — preempt the youngest slot
+            # (vLLM-style) until it fits, or bounce the requester itself.
+            for slot in np.flatnonzero(active):
+                if self._slots[slot] is None:
+                    continue  # preempted as a victim earlier in this loop
+                pos = int(self.pool.positions[slot])
+                if not self.pool.ensure_capacity(slot, pos + 1) and \
+                        not self._make_room(slot, pos + 1):
+                    self._preempt(slot)
+            active &= np.asarray([sl is not None for sl in self._slots])
+            if not active.any():
+                return
         positions = self.pool.positions.copy()
         self._prev_states = self.pool.states
-        self._lm_mean, self._lm_var, self.pool.states = self._decode_fn(
-            self.params,
-            jnp.asarray(feed[:, None]),
-            jnp.asarray(positions[:, None]),
-            jnp.asarray(positions + active),
-            jnp.asarray(active),
-            self.pool.states, self._lm_mean, self._lm_var)
+        args = (self.params,
+                jnp.asarray(feed[:, None]),
+                jnp.asarray(positions[:, None]),
+                jnp.asarray(positions + active),
+                jnp.asarray(active),
+                self.pool.states)
+        if self.paged:
+            self._lm_mean, self._lm_var, self.pool.states = self._decode_fn(
+                *args, self.pool.device_table(), self._lm_mean, self._lm_var)
+        else:
+            self._lm_mean, self._lm_var, self.pool.states = self._decode_fn(
+                *args, self._lm_mean, self._lm_var)
         self.pool.positions[active] += 1
         for slot in np.flatnonzero(active):
             self._slots[slot].replay = None  # replay via _prev_states now
@@ -333,7 +528,10 @@ class Engine:
     def _replay_for(self, slot: int, sl: _Slot):
         """(substate, inputs, out_idx) reproducing the pass that made the
         slot's current logits: the pre-chunk snapshot + chunk inputs right
-        after prefill, else last_input against the pre-decode pool."""
+        after prefill, else last_input against the pre-decode pool. Paged
+        engines replay against the WHOLE pre-step page pool (there is no
+        per-slot state to extract) with the slot's page-table row doing
+        the selection."""
         if sl.replay is not None:
             return sl.replay
         pos = int(self.pool.positions[slot])
@@ -342,6 +540,10 @@ class Engine:
             "positions": jnp.asarray([[pos - 1]], jnp.int32),
             "cache_len": jnp.asarray([pos], jnp.int32),
         }
+        if self.paged:
+            inputs["page_table"] = self.pool.device_table(
+                np.asarray([slot], np.int32))
+            return self._prev_states, inputs, 0
         sub = lm.take_decode_slots(self._prev_states,
                                    np.asarray([slot], np.int32))
         return sub, inputs, 0
@@ -370,9 +572,54 @@ class Engine:
         self.finished.append(sl.request)
         self.metrics.on_finish(sl.request, now)
 
+    # -- paged page-pressure handling ---------------------------------------
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` mid-flight and requeue its request (with its
+        generated tokens — re-prefilling prompt+generated reproduces the
+        freed pages bit-for-bit, so decode resumes where it stopped)."""
+        sl = self._slots[slot]
+        self.pool.evict(slot)
+        self._slots[slot] = None
+        self.metrics.on_preemption()
+        self.scheduler.requeue(sl.request, float(self._step_idx))
+
+    def _make_room(self, for_slot: int, upto_len: int) -> bool:
+        """Free pages for ``for_slot`` by preempting JUNIOR live slots
+        (admitted after it), youngest first, until the capacity fits.
+        Youngest-first preserves the scheduler's seniority order under
+        page pressure — the same rule vLLM's recompute preemption uses —
+        so when ``for_slot`` is itself the youngest there is nobody it
+        may evict: return False and let the caller bounce the requester
+        instead of inverting seniority."""
+        my_seq = self._slots[for_slot].admit_seq
+        while not self.pool.ensure_capacity(for_slot, upto_len):
+            victims = [s for s, sl in enumerate(self._slots)
+                       if sl is not None and sl.admit_seq > my_seq]
+            if not victims:
+                return False
+            self._preempt(max(victims,
+                              key=lambda s: self._slots[s].admit_seq))
+        return True
+
+    def defrag(self) -> None:
+        """Pack live pages to the pool front; keep the escalation-replay
+        snapshot page-aligned with the rewritten tables."""
+        if not self.paged:
+            raise ValueError("defrag() applies to the paged engine; the "
+                             "contiguous engine compacts slots instead")
+        perm = self.pool.defrag()
+        if perm is None:
+            return
+        self.metrics.on_defrag()
+        if self._prev_states is not None:
+            self._prev_states = lm.take_decode_slots(self._prev_states, perm)
+
     def compact(self) -> None:
         """Pack live slots to the front; remap host-side slot records and
         the per-slot logit rows to match."""
+        if self.paged:
+            raise ValueError("the paged engine has no slot compaction "
+                             "(slots are just batch rows); use defrag()")
         remap = self.pool.compact()
         if not remap:
             return

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -53,6 +53,11 @@ class EngineMetrics:
         self.records: List[RequestRecord] = []
         self.occupancy_trace: List[int] = []
         self.peak_occupancy = 0
+        # Paged-pool telemetry (stays zero on the contiguous layout).
+        self.preemptions = 0
+        self.defrags = 0
+        self.page_trace: List[Tuple[int, int, int]] = []  # (live, total, frag)
+        self.peak_live_pages = 0
         self._admit_times = {}     # uid -> (arrival_step, admit_step, wall_t0)
         self._t0: Optional[float] = None
 
@@ -93,10 +98,22 @@ class EngineMetrics:
             tokens=len(req.generated), escalations=req.escalated,
             finish_reason=req.finish_reason))
 
-    def on_step(self, occupancy: int) -> None:
+    def on_preemption(self, n: int = 1) -> None:
+        self.preemptions += n
+
+    def on_defrag(self, n: int = 1) -> None:
+        self.defrags += n
+
+    def on_step(self, occupancy: int,
+                pages: Optional[Tuple[int, int, int]] = None) -> None:
+        """``pages``: (live_pages, total_pages, fragmented_pages) from a
+        paged pool; omitted by the contiguous engine."""
         self.steps += 1
         self.occupancy_trace.append(occupancy)
         self.peak_occupancy = max(self.peak_occupancy, occupancy)
+        if pages is not None:
+            self.page_trace.append(pages)
+            self.peak_live_pages = max(self.peak_live_pages, pages[0])
 
     # -- reduction ----------------------------------------------------------
     def summary(self) -> dict:
@@ -129,4 +146,19 @@ class EngineMetrics:
             "peak_occupancy": self.peak_occupancy,
             "mean_occupancy": sum(occ) / max(len(occ), 1),
             "final_occupancy": occ[-1] if occ else 0,
+            # paged-pool gauges (all zero on the contiguous layout)
+            "preemptions": self.preemptions,
+            "defrags": self.defrags,
+            "peak_page_occupancy": (
+                self.peak_live_pages / self.page_trace[0][1]
+                if self.page_trace else 0.0),
+            "mean_page_occupancy": (
+                sum(t[0] for t in self.page_trace)
+                / max(len(self.page_trace), 1)
+                / self.page_trace[0][1] if self.page_trace else 0.0),
+            "mean_page_fragmentation": (
+                sum(t[2] for t in self.page_trace)
+                / max(len(self.page_trace), 1) if self.page_trace else 0.0),
+            "final_live_pages": self.page_trace[-1][0] if self.page_trace
+            else 0,
         }

@@ -17,16 +17,45 @@ The scheduler owns the waiting-room side of continuous batching:
     ``prefill_chunk``, round-robin over admitted-but-still-prefilling
     slots. Long prompts therefore trickle into their KV slots across
     steps instead of stalling the whole decode batch behind one giant
-    prefill pass.
+    prefill pass. ``plan_prefill_rounds`` regroups the same plan into
+    rounds of at most one chunk per slot — the paged engine executes each
+    round as ONE batched multi-slot prefill pass over the shared page
+    pool;
+  * page-budget admission — with a paged decode pool the binding resource
+    is pages, not slots: ``pop_ready`` also checks the candidate's page
+    need (:func:`pages_for`) against the pool's free pages, and blocks
+    the queue head rather than skipping it, so page pressure can never
+    invert priority order. ``requeue`` re-inserts a PREEMPTED request
+    (pages reclaimed mid-flight by a more senior slot) without admission
+    checks — preemption must not lose requests.
 
 Pure host logic — no jax imports; the engine executes the plans.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence, Tuple
 
 from repro.serving.batcher import Request
+
+
+def pages_for(req: Request, page_size: int, *, reserve: bool = True) -> int:
+    """Pages a request needs before it can make progress.
+
+    reserve=True (conservative): the full prompt + generation budget —
+    admission reserves everything up front, so a request can never be
+    preempted for pages. reserve=False (optimistic): the rows it must
+    write before producing its next token — prompt, tokens already
+    generated (re-prefilled after a preemption), and one decode row;
+    later pages are claimed on demand, which packs more live slots per
+    page but can preempt.
+    """
+    if reserve:
+        tokens = len(req.prompt) + req.max_new_tokens
+    else:
+        tokens = len(req.prompt) + len(req.generated) + 1
+    return math.ceil(tokens / page_size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,9 +136,17 @@ class RequestScheduler:
         aged = int(now - enq) // max(self.config.aging_steps, 1)
         return req.priority - aged
 
-    def pop_ready(self, now: float) -> Tuple[Optional[Request],
-                                             List[Request]]:
+    def pop_ready(self, now: float, *, free_pages: Optional[int] = None,
+                  page_size: Optional[int] = None,
+                  reserve_pages: bool = True) -> Tuple[Optional[Request],
+                                                       List[Request]]:
         """Pop the most urgent admissible request.
+
+        With ``free_pages``/``page_size`` set (paged engine), admission is
+        by page budget: if the most urgent request's page need does not
+        fit, NOTHING is popped — blocking the head instead of skipping to
+        a smaller request keeps page pressure from inverting priority
+        order (the head is admitted as soon as evictions free its pages).
 
         Returns (request | None, expired) — ``expired`` are requests whose
         admission deadline passed while waiting; they are dropped here so
@@ -122,8 +159,26 @@ class RequestScheduler:
             self._queue,
             key=lambda it: (self._effective_priority(it[1], it[2], now),
                             it[0]))
+        if free_pages is not None and page_size is not None and \
+                pages_for(best[2], page_size,
+                          reserve=reserve_pages) > free_pages:
+            return None, expired
         self._queue.remove(best)
         return best[2], expired
+
+    def requeue(self, req: Request, now: float) -> None:
+        """Re-insert a preempted request. Admission control is skipped —
+        the request was already admitted once and its pages were taken
+        back mid-flight; dropping it here would turn preemption into
+        silent request loss. The deadline is cleared for the same reason:
+        it bounds ADMISSION (batcher.Request), which this request already
+        passed on time — leaving it set would let the next expiry purge
+        finish a mid-generation request as 'expired'. FIFO seq is fresh,
+        so among equals it waits behind current waiters (aging still
+        promotes it)."""
+        req.deadline = None
+        self._queue.append((self._seq, now, req))
+        self._seq += 1
 
     # -- chunked prefill ----------------------------------------------------
     def plan_prefill(
@@ -151,3 +206,22 @@ class RequestScheduler:
                 remaining[slot] -= n
                 budget -= n
         return plan
+
+    def plan_prefill_rounds(
+        self, prefilling: Sequence[Tuple[int, int]],
+    ) -> List[List[Tuple[int, int]]]:
+        """The same plan as :meth:`plan_prefill`, regrouped into rounds
+        with at most one chunk per slot each. The paged engine runs every
+        round as ONE batched multi-slot prefill pass (all planned slots'
+        chunks in a single lockstep forward over the shared page pool),
+        so the number of device dispatches per step is the number of
+        rounds, not the number of chunks."""
+        rounds: List[List[Tuple[int, int]]] = []
+        counts: dict = {}
+        for slot, n in self.plan_prefill(prefilling):
+            r = counts.get(slot, 0)
+            counts[slot] = r + 1
+            if len(rounds) <= r:
+                rounds.append([])
+            rounds[r].append((slot, n))
+        return rounds

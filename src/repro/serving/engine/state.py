@@ -1,10 +1,10 @@
-"""Slot-pooled decode-state management for the serving engine.
+"""Decode-state management for the serving engine: slot pool + page pool.
 
-``DecodeStatePool`` owns the per-slot decode state — the KV mean/variance
-caches (PFP's uncertainty-carrying analogue of a KV cache: ``k_mu``,
-``v_mu``, ``v_var``) plus any recurrent/SSM carries — as ONE preallocated
-device pytree of ``num_slots`` batch rows (``lm.init_decode_state``).
-Requests borrow a slot for their lifetime:
+``DecodeStatePool`` (the contiguous layout) owns the per-slot decode state
+— the KV mean/variance caches (PFP's uncertainty-carrying analogue of a KV
+cache: ``k_mu``, ``v_mu``, ``v_var``) plus any recurrent/SSM carries — as
+ONE preallocated device pytree of ``num_slots`` batch rows
+(``lm.init_decode_state``). Requests borrow a slot for their lifetime:
 
   alloc   -> pop the lowest free slot, zero its state rows on device
   evict   -> return the slot to the free list (completion or abstention);
@@ -13,12 +13,36 @@ Requests borrow a slot for their lifetime:
   compact -> permutation-gather live slots to the front of the pool when
              eviction order fragments them (one device gather per leaf)
 
-All device transfers are whole-slot gathers/scatters issued from jitted
-functions; the pool never round-trips KV buffers through the host. Host
-state is only the free list and per-slot position counters.
+``PagedDecodeStatePool`` replaces the static per-slot ``max_len`` KV rows
+with a global pool of fixed-size pages (``lm.init_paged_decode_state``):
+slot identity lives entirely in host-side page tables, so device memory
+scales with the TOKENS actually cached, not ``slots * max_len``. Requests
+borrow a slot (a batch row + a page-table row) and pages grow with their
+position:
+
+  alloc            -> pop the lowest free slot (no pages yet)
+  ensure_capacity  -> extend a slot's page list to cover its positions
+                      (the engine calls it before each prefill chunk and
+                      decode write; False = pool exhausted -> preempt)
+  evict            -> free the slot AND all its pages (stale page contents
+                      stay — per-batch ``cache_len`` masking plus the
+                      trash-page write redirect make them invisible)
+  defrag           -> permutation-gather live pages to the pool front
+                      (page-granular analogue of slot compaction)
+
+Page 0 is reserved as the TRASH page: the paged cache insert in
+``nn/attention.py`` redirects writes at positions >= ``cache_len`` there,
+which is what lets one lockstep pass over the shared pool serve slots at
+different lifecycle phases without select-merge.
+
+All device transfers are whole-axis gathers issued from jitted functions;
+neither pool ever round-trips KV buffers through the host. Host state is
+only free lists, page tables and per-slot position counters.
 """
 from __future__ import annotations
 
+import heapq
+import math
 from typing import Dict, List, Optional
 
 import jax
@@ -125,3 +149,221 @@ class DecodeStatePool:
         assert all(self.positions[s] == 0 for s in self._free)
         uids = [o for o in self.owner if o is not None]
         assert len(uids) == len(set(uids)), "duplicate owner uid"
+
+
+class PagedDecodeStatePool:
+    """Page-pool decode-state manager (see module docstring).
+
+    ``num_pages`` is the USABLE page budget (page 0, the trash page, is
+    allocated on top of it); the default budget ``num_slots *
+    ceil(max_len / page_size)`` matches the contiguous layout's capacity
+    exactly, so the paged engine admits whenever the static one would —
+    a smaller budget trades admission headroom for device memory, which
+    is the whole point of paging: slots only hold pages for tokens they
+    actually cached.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 page_size: int, *, num_pages: Optional[int] = None,
+                 mesh=None):
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = math.ceil(max_len / page_size)
+        usable = (num_pages if num_pages is not None
+                  else num_slots * self.pages_per_slot)
+        if usable < self.pages_per_slot:
+            raise ValueError(
+                f"page budget {usable} cannot hold one max_len={max_len} "
+                f"request ({self.pages_per_slot} pages of {page_size})")
+        self.num_pages = 1 + usable              # + the reserved trash page
+        self.states = lm.init_paged_decode_state(cfg, self.num_pages,
+                                                 page_size)
+        if mesh is not None:
+            from repro.launch import sharding as shlib
+
+            self.states = jax.device_put(
+                self.states,
+                shlib.state_shardings(jax.eval_shape(lambda: self.states),
+                                      mesh))
+        # Host-side identity: slots are batch rows; pages are pool rows.
+        self._free: List[int] = list(range(num_slots))
+        self.owner: List[Optional[int]] = [None] * num_slots   # request uid
+        self.positions = np.zeros(num_slots, np.int32)
+        self.page_table = np.zeros((num_slots, self.pages_per_slot), np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(num_slots)]
+        # Lowest-index-first page allocation (a min-heap: a large pool
+        # hands out hundreds of pages per reservation) keeps live pages
+        # packed low, bounding fragmentation between defrags.
+        self._free_pages: List[int] = list(range(1, self.num_pages))
+        self.page_owner: List[Optional[int]] = [None] * self.num_pages
+        self.page_owner[0] = -1                  # trash page sentinel
+        self._device_table = None                # cache; tables change rarely
+        self._take = jax.jit(lm.take_decode_slots)
+
+    # -- occupancy ----------------------------------------------------------
+    @property
+    def live(self) -> int:
+        return self.num_slots - len(self._free)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def total_pages(self) -> int:
+        """Usable pages (the trash page is not part of the budget)."""
+        return self.num_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def live_pages(self) -> int:
+        return self.total_pages - len(self._free_pages)
+
+    def live_slot_indices(self) -> List[int]:
+        return [i for i, o in enumerate(self.owner) if o is not None]
+
+    def pages_needed(self, tokens: int) -> int:
+        return math.ceil(tokens / self.page_size)
+
+    def page_fragmentation(self) -> int:
+        """Live pages sitting past the packed prefix [1 .. live_pages]."""
+        live = self.live_pages
+        return sum(1 for p, o in enumerate(self.page_owner)
+                   if o is not None and o != -1 and p > live)
+
+    # -- lifecycle ----------------------------------------------------------
+    def alloc(self, uid: int) -> int:
+        """Borrow a slot (batch row + page-table row). Pages come later via
+        :meth:`ensure_capacity` — a fresh slot holds none."""
+        if not self._free:
+            raise RuntimeError("slot pool exhausted")
+        slot = min(self._free)
+        self._free.remove(slot)
+        self.owner[slot] = uid
+        self.positions[slot] = 0
+        assert not self.slot_pages[slot]
+        return slot
+
+    def ensure_capacity(self, slot: int, upto_len: int) -> bool:
+        """Grow ``slot``'s page list to cover positions [0, upto_len).
+
+        Allocation is atomic: if the pool cannot supply every missing page
+        the pool is left unchanged and False is returned (the engine then
+        preempts or requeues). No device work — pages are zero-initialized
+        at pool construction and stale contents are masked.
+        """
+        if self.owner[slot] is None:
+            raise RuntimeError(f"ensure_capacity on idle slot {slot}")
+        if upto_len > self.max_len:
+            raise ValueError(f"slot {slot}: {upto_len} exceeds max_len")
+        need = self.pages_needed(upto_len) - len(self.slot_pages[slot])
+        if need <= 0:
+            return True
+        if need > len(self._free_pages):
+            return False
+        for _ in range(need):
+            page = heapq.heappop(self._free_pages)
+            self.page_owner[page] = slot
+            self.page_table[slot, len(self.slot_pages[slot])] = page
+            self.slot_pages[slot].append(page)
+        self._device_table = None
+        return True
+
+    def evict(self, slot: int) -> int:
+        """Free ``slot`` and every page it holds; returns the evicted
+        request's uid. Stale page contents stay in place — the trash-page
+        write redirect plus ``cache_len`` masking keep them invisible."""
+        uid = self.owner[slot]
+        if uid is None:
+            raise RuntimeError(f"evict of idle slot {slot}")
+        for page in self.slot_pages[slot]:
+            self.page_owner[page] = None
+            heapq.heappush(self._free_pages, page)
+        if self.slot_pages[slot]:
+            self._device_table = None
+        self.slot_pages[slot] = []
+        self.page_table[slot] = 0
+        self.owner[slot] = None
+        self.positions[slot] = 0
+        self._free.append(slot)
+        return uid
+
+    def defrag(self) -> Optional[np.ndarray]:
+        """Pack live pages to the pool front (stable order, trash page
+        pinned at 0). One permutation gather per attention leaf, on
+        device; page tables are rewritten in place. Returns the applied
+        page permutation (``perm[new] = old``) so callers holding page-
+        indexed snapshots can remap, or None when already packed."""
+        live = [p for p, o in enumerate(self.page_owner)
+                if o is not None and o != -1]
+        dest = {old: new for new, old in enumerate(live, start=1)}
+        if all(old == new for old, new in dest.items()):
+            return None
+        perm = np.asarray(
+            [0] + live + [p for p in range(1, self.num_pages)
+                          if p not in dest], np.int32)
+        self.states = self._take(self.states, perm)
+        new_owner: List[Optional[int]] = [None] * self.num_pages
+        new_owner[0] = -1
+        for old, new in dest.items():
+            new_owner[new] = self.page_owner[old]
+        self.page_owner = new_owner
+        for slot in self.live_slot_indices():
+            self.slot_pages[slot] = [dest[p] for p in self.slot_pages[slot]]
+            self.page_table[slot, :len(self.slot_pages[slot])] = \
+                self.slot_pages[slot]
+        self._free_pages = [p for p, o in enumerate(self.page_owner)
+                            if o is None and p != 0]
+        heapq.heapify(self._free_pages)
+        self._device_table = None
+        return perm
+
+    # -- device views -------------------------------------------------------
+    def device_table(self, slots: Optional[np.ndarray] = None):
+        """The page table as a device int32 array — (num_slots, P), or the
+        selected rows when ``slots`` is given (e.g. a replay's batch).
+        The full table is cached between mutations (alloc/evict/defrag),
+        so steady-state decode pays no per-step host-to-device upload."""
+        import jax.numpy as jnp
+
+        if slots is not None:
+            return jnp.asarray(self.page_table[slots], jnp.int32)
+        if self._device_table is None:
+            self._device_table = jnp.asarray(self.page_table, jnp.int32)
+        return self._device_table
+
+    def check_invariants(self) -> None:
+        assert sorted(self._free) == sorted(
+            i for i, o in enumerate(self.owner) if o is None)
+        uids = [o for o in self.owner if o is not None]
+        assert len(uids) == len(set(uids)), "duplicate owner uid"
+        assert self.page_owner[0] == -1 and 0 not in self._free_pages
+        seen: Dict[int, int] = {}
+        for slot in range(self.num_slots):
+            pages = self.slot_pages[slot]
+            if self.owner[slot] is None:
+                assert not pages
+                assert not self.page_table[slot].any()
+                assert self.positions[slot] == 0
+                continue
+            assert len(set(pages)) == len(pages), "slot holds duplicate page"
+            for j, page in enumerate(pages):
+                assert 0 < page < self.num_pages
+                assert self.page_owner[page] == slot, \
+                    f"page {page} owner mismatch"
+                assert self.page_table[slot, j] == page
+                assert page not in seen, \
+                    f"page {page} aliased by slots {seen[page]} and {slot}"
+                seen[page] = slot
+            assert not self.page_table[slot, len(pages):].any()
+            assert self.positions[slot] <= len(pages) * self.page_size
+        assert sorted(self._free_pages) == sorted(
+            p for p in range(1, self.num_pages) if self.page_owner[p] is None)
+        assert self.live_pages == len(seen)

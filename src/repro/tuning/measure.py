@@ -88,6 +88,37 @@ def make_runner(op: str, shape_key: ShapeKey,
         return lambda s: ops.pfp_attention(q, kk, vm, vv, scale=scale,
                                            causal=True, impl="kernel",
                                            schedule=s)
+    if op in ("attention_cache", "attention_paged"):
+        b, h, hkv, tq, tk, d = shape_key
+        q = arr(b, h, tq, d)
+        kk = arr(b, hkv, tk, d)
+        vm = arr(b, hkv, tk, d)
+        vv = arr(b, hkv, tk, d, positive=True)
+        scale = float(d) ** -0.5
+        kv_len = jnp.asarray(rng.integers(1, tk + 1, b), jnp.int32)
+        q_start = jnp.maximum(kv_len - tq, 0)
+        if op == "attention_cache":
+            return lambda s: ops.pfp_attention_cache(
+                q, kk, vm, vv, q_start, kv_len, scale=scale, causal=True,
+                impl="kernel", schedule=s)
+        # paged: slice the contiguous cache into shuffled pool pages
+        ps = next(p for p in (16, 8, 4, 2, 1) if tk % p == 0)
+        npages = tk // ps
+        perm = rng.permutation(np.arange(1, b * npages + 1))
+        table = jnp.asarray(perm.reshape(b, npages), jnp.int32)
+        pool_shape = (b * npages + 1, hkv, ps, d)
+
+        def paginate(a):
+            pool = np.zeros(pool_shape, np.float32)
+            pool[np.asarray(perm)] = np.asarray(a).reshape(
+                b, hkv, npages, ps, d).transpose(0, 2, 1, 3, 4).reshape(
+                    b * npages, hkv, ps, d)
+            return jnp.asarray(pool, dtype=dtype)
+
+        kp, vmp, vvp = paginate(kk), paginate(vm), paginate(vv)
+        return lambda s: ops.pfp_attention_paged(
+            q, kp, vmp, vvp, table, q_start, kv_len, scale=scale,
+            causal=True, impl="kernel", schedule=s)
     if op == "activation":
         rows, cols = shape_key
         mu, var = arr(rows, cols), arr(rows, cols, positive=True)

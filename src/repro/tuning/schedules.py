@@ -11,7 +11,8 @@ Shape keys are the *logical* shapes the dispatch layer sees, before any
 flattening or padding the wrappers perform:
 
     dense       (m, k, n)               m = flattened leading dims
-    attention   (b, h, hkv, tq, tk, d)
+    attention   (b, h, hkv, tq, tk, d)  also attention_cache / _paged
+                                        (tk = logical cache / P*page_size)
     activation  (rows, cols)            rows = flattened leading dims
     glu_product (rows, cols)
     rmsnorm     (rows, d)
@@ -34,6 +35,12 @@ OP_BLOCK_NAMES: Dict[str, Tuple[str, ...]] = {
     "dense": ("block_m", "block_n", "block_k"),
     "dense_first": ("block_m", "block_n", "block_k"),
     "attention": ("block_q", "block_k"),
+    # KV-cache decode attention (per-batch q_start/kv_len scalars) and its
+    # paged variant. Both share the "attention" shape key layout; the paged
+    # kernel's K block IS the page size (fixed by the pool layout), so only
+    # block_q is tunable there.
+    "attention_cache": ("block_q", "block_k"),
+    "attention_paged": ("block_q",),
     "activation": ("block_rows", "block_cols"),
     "glu_product": ("block_rows", "block_cols"),
     "maxpool2d": ("block_rows", "block_cols"),
@@ -110,6 +117,9 @@ DEFAULT_SCHEDULES: Dict[str, Schedule] = {
     "dense_first": Schedule.make("dense_first", block_m=128, block_n=128,
                                  block_k=512),
     "attention": Schedule.make("attention", block_q=128, block_k=128),
+    "attention_cache": Schedule.make("attention_cache", block_q=128,
+                                     block_k=128),
+    "attention_paged": Schedule.make("attention_paged", block_q=128),
     "activation": Schedule.make("activation", block_rows=256, block_cols=512),
     "glu_product": Schedule.make("glu_product", block_rows=256,
                                  block_cols=512),

@@ -80,7 +80,11 @@ def cost_summary(op: str, shape_key: ShapeKey, schedule: Schedule) -> CostSummar
               + 2 * m * n) * 4
         steps = _steps(m, bm) * _steps(n, bn) * _steps(k, bk)
         aligned = bm % _SUBLANE == 0 and bn % _LANE == 0 and bk % _LANE == 0
-    elif op == "attention":
+    elif op in ("attention", "attention_cache", "attention_paged"):
+        # The cache/paged variants run the same online-softmax core over
+        # the same (b, h, hkv, tq, tk, d) shape key; attention_paged has no
+        # block_k axis (its K block is the pool's page size), so the
+        # default stands in for the footprint estimate.
         b, h, hkv, tq, tk, d = shape_key
         bq = min(get("block_q", 128), _round_up(tq, _SUBLANE))
         bk = min(get("block_k", 128), _round_up(tk, _SUBLANE))
@@ -146,6 +150,9 @@ _AXIS_MENU: Dict[str, Dict[str, Sequence[int]]] = {
     "dense_first": _DENSE_MENU,
     "attention": {"block_q": (16, 32, 64, 128, 256),
                   "block_k": (32, 64, 128, 256, 512)},
+    "attention_cache": {"block_q": (16, 32, 64, 128, 256),
+                        "block_k": (32, 64, 128, 256, 512)},
+    "attention_paged": {"block_q": (8, 16, 32, 64, 128, 256)},
     "activation": {"block_rows": (8, 64, 128, 256, 512),
                    "block_cols": (128, 256, 512)},
     "glu_product": {"block_rows": (8, 64, 128, 256, 512),
@@ -165,6 +172,8 @@ _AXIS_DIM = {
     "dense": _DENSE_DIM,
     "dense_first": _DENSE_DIM,
     "attention": {"block_q": (3, _SUBLANE), "block_k": (4, _SUBLANE)},
+    "attention_cache": {"block_q": (3, _SUBLANE), "block_k": (4, _SUBLANE)},
+    "attention_paged": {"block_q": (3, _SUBLANE)},
     "rmsnorm": {"block_rows": (0, _SUBLANE)},
     "layernorm": {"block_rows": (0, _SUBLANE)},
 }

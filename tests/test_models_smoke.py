@@ -111,7 +111,10 @@ def test_prefill_then_decode_consistent(models, arch):
     dec_in = {
         "tokens": toks[:, T:],
         "positions": jnp.full((B, 1), T, jnp.int32),
-        "cache_len": jnp.full((B,), T, jnp.int32),
+        # valid entries INCLUDING the token fed this step (the decode-input
+        # contract enforced now that forward() threads cache_len into the
+        # attention mask)
+        "cache_len": jnp.full((B,), T + 1, jnp.int32),
     }
     dec, _ = lm.decode_step(params_pfp, cfg, dec_in, states, ctx)
     np.testing.assert_allclose(

@@ -235,13 +235,19 @@ def _engine(cfg, params, *, slots=2, max_len=24, router_cfg=None,
                   router=router, scheduler=scheduler)
 
 
-def test_engine_router_noop_parity_vs_reference_decode(lm_setup):
+@pytest.mark.parametrize("impl,page_size", [
+    (None, None),          # contiguous, xla
+    (None, 4),             # paged Gaussian KV-cache, xla
+    ("kernel", 4),         # paged, Pallas kernels (interpret off-TPU)
+])
+def test_engine_router_noop_parity_vs_reference_decode(lm_setup, impl,
+                                                       page_size):
     """With the router wide open (everything CONTINUEs) the engine must
     reproduce a straight greedy PFP decode: chunked prefill over a slot
     view + lockstep per-slot steps == one full-prompt pass + 1-token
-    steps."""
+    steps — for the contiguous AND the paged KV layout, on both impls."""
     cfg, params = lm_setup
-    eng = _engine(cfg, params)
+    eng = _engine(cfg, params, impl=impl, page_size=page_size)
     prompt = np.asarray([3, 1, 4, 1, 5, 9, 2], np.int32)
     eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
     eng.run_until_idle(100)
@@ -249,7 +255,7 @@ def test_engine_router_noop_parity_vs_reference_decode(lm_setup):
     assert eng.finished[0].finish_reason == "length"
 
     # reference: single-sequence decode, full prompt in one pass
-    ctx = Context(mode=Mode.PFP)
+    ctx = Context(mode=Mode.PFP, impl=impl)
     states = lm.init_decode_state(cfg, 1, 24)
     inp = {"tokens": jnp.asarray(prompt)[None],
            "positions": jnp.arange(len(prompt), dtype=jnp.int32)[None],

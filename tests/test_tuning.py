@@ -388,6 +388,8 @@ _VARIANTS = [
     {"dense": dict(block_m=8, block_n=128, block_k=128),
      "dense_first": dict(block_m=8, block_n=128, block_k=128),
      "attention": dict(block_q=16, block_k=32),
+     "attention_cache": dict(block_q=16, block_k=32),
+     "attention_paged": dict(block_q=16),
      "activation": dict(block_rows=8, block_cols=128),
      "glu_product": dict(block_rows=8, block_cols=128),
      "maxpool2d": dict(block_rows=8, block_cols=256),
@@ -396,6 +398,8 @@ _VARIANTS = [
     {"dense": dict(block_m=32, block_n=256, block_k=256),
      "dense_first": dict(block_m=32, block_n=256, block_k=256),
      "attention": dict(block_q=32, block_k=64),
+     "attention_cache": dict(block_q=32, block_k=64),
+     "attention_paged": dict(block_q=32),
      "activation": dict(block_rows=64, block_cols=256),
      "glu_product": dict(block_rows=64, block_cols=256),
      "maxpool2d": dict(block_rows=64, block_cols=64),
@@ -404,6 +408,8 @@ _VARIANTS = [
     {"dense": dict(block_m=256, block_n=512, block_k=1024),
      "dense_first": dict(block_m=256, block_n=512, block_k=1024),
      "attention": dict(block_q=256, block_k=512),
+     "attention_cache": dict(block_q=256, block_k=512),
+     "attention_paged": dict(block_q=256),
      "activation": dict(block_rows=512, block_cols=512),
      "glu_product": dict(block_rows=512, block_cols=512),
      "maxpool2d": dict(block_rows=512, block_cols=128),
