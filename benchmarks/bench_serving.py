@@ -15,7 +15,16 @@ Row families, emitted through benchmarks/common.py:
                               engine and a paged engine at the SAME
                               device-memory budget (equal KV rows) under
                               one overload trace — the paged engine
-                              sustains strictly more concurrent slots.
+                              sustains strictly more concurrent slots;
+  serving/prefix_reuse/...    the prefix-sharing acceptance row: M
+                              requests with a common system prompt
+                              through a paged engine WITH and WITHOUT the
+                              refcounted copy-on-write prefix index —
+                              decode bit-for-bit identical, prefill
+                              tokens computed drop by >= the shared
+                              fraction, and at an equal tight page budget
+                              the sharing engine runs strictly more
+                              requests concurrently.
 
 Quick profile: 32 requests; --full: the acceptance-criteria 200-request
 run. ``python benchmarks/bench_serving.py --page-size 4 8 16`` sweeps
@@ -34,9 +43,10 @@ from benchmarks.common import emit, schedule_note, time_fn
 from repro.bayes.convert import svi_to_pfp
 from repro.configs import reduced_config
 from repro.models import lm
-from repro.serving.engine import (Engine, EngineConfig, RequestScheduler,
-                                  RouterConfig, SchedulerConfig,
-                                  UncertaintyRouter, poisson_trace, run_load)
+from repro.serving.engine import (Engine, EngineConfig, Request,
+                                  RequestScheduler, RouterConfig,
+                                  SchedulerConfig, UncertaintyRouter,
+                                  poisson_trace, run_load)
 
 ARCH = "granite-8b"
 SLOTS = 4
@@ -46,7 +56,7 @@ PAGE_SIZE = 8
 
 def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
                   page_size=None, slots=SLOTS, page_budget=None,
-                  reserve_pages=True):
+                  reserve_pages=True, prefix_sharing=False):
     router = UncertaintyRouter(
         cfg, RouterConfig(mi_continue=mi_continue, mi_abstain=mi_abstain,
                           escalate_samples=4))
@@ -58,7 +68,8 @@ def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
                                num_uncertainty_samples=16, seed=0,
                                page_size=page_size, page_budget=page_budget,
                                reserve_pages=reserve_pages,
-                               auto_defrag=page_size is not None),
+                               auto_defrag=page_size is not None,
+                               prefix_sharing=prefix_sharing),
                   router=router, scheduler=scheduler)
 
 
@@ -152,6 +163,86 @@ def _occupancy_row(lines, cfg, params, *, n_requests):
         "equal memory")
 
 
+def _system_prompt_trace(cfg, *, m, prefix_len, tail_len, max_new):
+    """A warm-up donor plus ``m`` concurrent requests, all opening with
+    one fixed system prompt. The donor arrives alone (step 0) and the
+    sharers at step 1000 — far past its completion — so every sharer can
+    map the donor's indexed prefix pages."""
+    system = np.arange(1, prefix_len + 1, dtype=np.int32) % cfg.vocab_size
+    reqs = [Request(uid=0,
+                    prompt=np.concatenate(
+                        [system, np.full(tail_len, 900, np.int32)]),
+                    max_new_tokens=max_new, arrival=0.0)]
+    for i in range(m):
+        reqs.append(Request(
+            uid=1 + i,
+            prompt=np.concatenate(
+                [system, np.full(tail_len, 901 + i, np.int32)]),
+            max_new_tokens=max_new, arrival=1000.0))
+    return reqs
+
+
+def _prefix_reuse_row(lines, cfg, params, *, m=6):
+    """Acceptance row: M requests with a common system prompt, with vs
+    without the refcounted copy-on-write prefix index. Pinned here: (1)
+    decode is bit-for-bit identical (tokens AND MI traces); (2) prefill
+    tokens computed drop by at least the shared fraction; (3) at an equal
+    TIGHT page budget the sharing engine runs strictly more requests
+    concurrently (a shared page costs its budget once)."""
+    ps = 8
+    # Deliberately NOT page-aligned: the last shared page is partial, so
+    # every sharer's first write copy-on-writes it (cow >= 1 below).
+    prefix_len, tail_len, max_new = 3 * ps - 2, 6, 4
+    tight = 12           # pages; each request alone needs 4 (32 tokens)
+
+    def run_one(prefix_sharing, budget):
+        eng = _build_engine(cfg, params, page_size=ps, slots=2 * SLOTS,
+                            page_budget=budget,
+                            prefix_sharing=prefix_sharing)
+        s = run_load(eng, _system_prompt_trace(
+            cfg, m=m, prefix_len=prefix_len, tail_len=tail_len,
+            max_new=max_new))
+        outs = {r.uid: (list(r.generated), [float(x) for x in r.mi_trace])
+                for r in eng.finished}
+        return s, outs
+
+    # Reuse claim, roomy budget (no retention churn): every sharer maps
+    # the full cached prefix, so prefill tokens computed drop by exactly
+    # the shared fraction and decode stays bit-for-bit.
+    s_cold, out_cold = run_one(False, None)
+    s_share, out_share = run_one(True, None)
+    assert out_share == out_cold, (
+        "prefix-shared decode diverged from cold-prefill decode")
+    saved = s_share["prefill_tokens_saved"]
+    shared_frac = m * prefix_len / max(s_cold["prefill_tokens"], 1)
+    drop = 1 - s_share["prefill_tokens"] / max(s_cold["prefill_tokens"], 1)
+    assert drop >= shared_frac - 1e-9, (
+        f"prefill tokens dropped {drop:.3f} < shared fraction "
+        f"{shared_frac:.3f}")
+    assert s_share["cow_copies"] >= 1, (
+        "non-aligned shared prefix must trigger copy-on-write")
+    # Concurrency claim, TIGHT equal budget: a shared page costs the
+    # budget once, so the sharing engine admits strictly more requests
+    # concurrently — and stays bit-for-bit even while its index reclaims
+    # pages under pressure.
+    t_cold, tout_cold = run_one(False, tight)
+    t_share, tout_share = run_one(True, tight)
+    assert tout_share == tout_cold, (
+        "prefix sharing under page pressure diverged from cold decode")
+    assert t_share["peak_occupancy"] > t_cold["peak_occupancy"], (
+        "prefix sharing did not raise concurrency at equal page budget")
+    lines.append(emit(
+        f"serving/prefix_reuse/m{m}/ps{ps}", s_share["elapsed_s"],
+        f"bitforbit=1;saved_tokens={saved}"
+        f";frac_saved={s_share['prefill_frac_saved']:.3f}"
+        f";hits={s_share['prefix_hits']}"
+        f";shared_pages={s_share['prefix_shared_pages']}"
+        f";cow={s_share['cow_copies']}"
+        f";peak_cold={t_cold['peak_occupancy']}"
+        f";peak_shared={t_share['peak_occupancy']}"
+        f";pages={tight}x{ps}"))
+
+
 def run(quick: bool = True, page_sizes=None):
     lines = []
     cfg = reduced_config(ARCH)
@@ -169,6 +260,9 @@ def run(quick: bool = True, page_sizes=None):
 
     # -- equal-memory concurrency: static vs paged -------------------------
     _occupancy_row(lines, cfg, params, n_requests=n_requests)
+
+    # -- prefix reuse: refcounted COW sharing vs cold prefill --------------
+    _prefix_reuse_row(lines, cfg, params, m=6 if quick else 16)
     return lines
 
 

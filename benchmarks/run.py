@@ -9,7 +9,10 @@ by bench_output.txt.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
 
 
@@ -97,15 +100,53 @@ def main() -> None:
     selected = (args.only.split(",") if args.only else list(benches))
     print(CSV_HEADER)
     failures = []
+    rows = {}
     for name in selected:
         try:
-            benches[name].run(quick=not args.full)
+            rows[name] = benches[name].run(quick=not args.full) or []
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
             traceback.print_exc()
+    if "serving" in rows:
+        _write_serving_summary(rows["serving"], full=args.full,
+                               impl=args.impl)
     if failures:
         print(f"FAILURES: {[n for n, _ in failures]}", file=sys.stderr)
         sys.exit(1)
+
+
+def _write_serving_summary(lines, *, full: bool, impl) -> None:
+    """Persist the serving rows as results/BENCH_serving.json — a
+    machine-readable artifact (uploaded by CI) so the serving perf
+    trajectory is trackable across PRs instead of living only in logs."""
+    from repro.core.dispatch import resolve_impl
+
+    def parse(line: str) -> dict:
+        name, us, impl_col, schedule, derived = line.split(",", 4)
+        row = {"name": name, "us_per_call": float(us), "impl": impl_col,
+               "schedule": schedule}
+        for item in filter(None, derived.split(";")):
+            k, _, v = item.partition("=")
+            try:
+                row[k] = float(v) if "." in v or "e" in v else int(v)
+            except ValueError:
+                row[k] = v
+        return row
+
+    payload = {
+        "generated_by": "benchmarks/run.py",
+        "unix_time": time.time(),
+        "profile": "full" if full else "quick",
+        "impl": resolve_impl(impl),
+        "rows": [parse(line) for line in lines],
+    }
+    out = os.path.join("results", "BENCH_serving.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# serving summary -> {out} ({len(payload['rows'])} rows)",
+          flush=True)
 
 
 if __name__ == "__main__":

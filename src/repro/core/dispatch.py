@@ -143,9 +143,7 @@ def _dense_xla(x, w, formulation):
 
 @register("dense", "kernel")
 def _dense_kernel(x, w, formulation):
-    if formulation != "srm":
-        # The Pallas dense kernel is the production Eq. 12 schedule; the
-        # Eq. 7 'var' formulation exists only for the Fig. 5 ablation.
+    if formulation not in ("srm", "var"):
         return _dense_xla(x, w, formulation)
     ops = _kernel_ops()
     dtype = _out_dtype(x, w)
@@ -153,10 +151,18 @@ def _dense_kernel(x, w, formulation):
     if not is_gaussian(x):
         # First-layer simplification (Eq. 13): deterministic inputs run a
         # two-matmul kernel — tuned under its own 'dense_first' op so its
-        # schedules never collide with three-matmul entries.
+        # schedules never collide with three-matmul entries. Shared by
+        # both formulations (Eq. 13 is formulation-free).
         sched = _schedule_for("dense_first", shape_key, dtype)
         mu, var = ops.pfp_dense(x, x, w.mean, w.var, impl="kernel",
                                 first_layer=True, schedule=sched)
+    elif formulation == "var":
+        # Eq. 7 'var' formulation: a four-matmul joint kernel consuming
+        # (mu, var) operands natively — tuned under its own 'dense_var'
+        # op (different matmul count and VMEM footprint than Eq. 12).
+        sched = _schedule_for("dense_var", shape_key, dtype)
+        mu, var = ops.pfp_dense_var(x.mean, x.var, w.mean, w.var,
+                                    impl="kernel", schedule=sched)
     else:
         sched = _schedule_for("dense", shape_key, dtype)
         mu, var = ops.pfp_dense(x.mean, x.srm, w.mean, w.srm, impl="kernel",
@@ -224,11 +230,14 @@ def _parse_batched_mm(subscripts: str):
 
 @register("einsum", "kernel")
 def _einsum_kernel(subscripts, x, w, formulation):
+    spec = subscripts.replace(" ", "")
+    if spec in ("...k,kn->...n", "bk,kn->bn", "btk,kn->btn") and \
+            formulation in ("srm", "var"):
+        # Dense-shaped contraction: both formulations have a blocked
+        # kernel ('dense' / 'dense_var' schedules).
+        return _dense_kernel(x, w, formulation)
     if formulation != "srm":
         return _einsum_xla(subscripts, x, w, formulation)
-    spec = subscripts.replace(" ", "")
-    if spec in ("...k,kn->...n", "bk,kn->bn", "btk,kn->btn"):
-        return _dense_kernel(x, w, "srm")
     if _parse_batched_mm(spec):
         # Batched per-expert contraction: vmap the blocked dense kernel over
         # the shared leading axis (Pallas batches by extending the grid).

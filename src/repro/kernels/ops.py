@@ -30,7 +30,7 @@ from repro.kernels.pfp_activations import pfp_activation_pallas, pfp_glu_pallas
 from repro.kernels.pfp_attention import (pfp_attention_cache_pallas,
                                          pfp_attention_paged_pallas,
                                          pfp_attention_pallas)
-from repro.kernels.pfp_dense import pfp_dense_pallas
+from repro.kernels.pfp_dense import pfp_dense_pallas, pfp_dense_var_pallas
 from repro.kernels.pfp_maxpool import pfp_maxpool2d_pallas
 from repro.kernels.pfp_norms import pfp_layernorm_pallas, pfp_rmsnorm_pallas
 from repro.tuning.schedules import Schedule
@@ -113,6 +113,44 @@ def pfp_dense(
             mu2p, srm2p, mwp, swp,
             block_m=bm, block_n=bn, block_k=bk,
             interpret=_interpret(), first_layer=first_layer,
+        )
+        mu, var = mu[:m, :n], var[:m, :n]
+    return mu.reshape(*lead, n), var.reshape(*lead, n)
+
+
+def pfp_dense_var(
+    mu_x, var_x, mu_w, var_w,
+    *, impl: Impl | None = None,
+    block_m: int = 128, block_n: int = 128, block_k: int = 512,
+    schedule: Optional[Schedule] = None,
+):
+    """Joint PFP dense, Eq. 7 'var' formulation, for (..., K) x (K, N).
+
+    Consumes (mu, var) operands directly — the ablation's native
+    representation (Fig. 5 fairness: no SRM conversion charged). Returns
+    (mean, var)."""
+    impl = impl or get_default_impl()
+    lead = mu_x.shape[:-1]
+    kdim = mu_x.shape[-1]
+    n = mu_w.shape[-1]
+    mu2 = mu_x.reshape(-1, kdim)
+    var2 = var_x.reshape(-1, kdim)
+
+    if impl == "xla":
+        mu, var = ref.pfp_dense_var_ref(mu2, var2, mu_w, var_w)
+    else:
+        m = mu2.shape[0]
+        bm = _block(schedule, "block_m", min(block_m, _ceil_mult(m)), m, 8)
+        bn = _block(schedule, "block_n", min(block_n, _ceil_mult(n)), n, 128)
+        bk = _block(schedule, "block_k", min(block_k, _ceil_mult(kdim)),
+                    kdim, 128)
+        mu2p = _pad_to(_pad_to(mu2, bm, 0), bk, 1)
+        var2p = _pad_to(_pad_to(var2, bm, 0), bk, 1)
+        mwp = _pad_to(_pad_to(mu_w, bk, 0), bn, 1)
+        vwp = _pad_to(_pad_to(var_w, bk, 0), bn, 1)
+        mu, var = pfp_dense_var_pallas(
+            mu2p, var2p, mwp, vwp,
+            block_m=bm, block_n=bn, block_k=bk, interpret=_interpret(),
         )
         mu, var = mu[:m, :n], var[:m, :n]
     return mu.reshape(*lead, n), var.reshape(*lead, n)
@@ -345,7 +383,8 @@ def _ceil_mult(x: int, base: int = 128) -> int:
 
 
 __all__ = [
-    "pfp_dense", "pfp_activation", "pfp_maxpool2d", "pfp_attention",
+    "pfp_dense", "pfp_dense_var", "pfp_activation", "pfp_maxpool2d",
+    "pfp_attention",
     "pfp_attention_cache", "pfp_attention_paged",
     "pfp_rmsnorm", "pfp_layernorm", "pfp_glu_product",
     "set_default_impl", "get_default_impl",

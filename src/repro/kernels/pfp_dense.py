@@ -81,6 +81,34 @@ def _first_layer_kernel(x_ref, mu_w_ref, var_w_ref,
     )
 
 
+def _var_formulation_kernel(mu_x_ref, var_x_ref, mu_w_ref, var_w_ref,
+                            mu_out_ref, var_out_ref, *, nk: int):
+    """Eq. 7 ('var' formulation) grid step: mu = mu_x.mu_w and
+    sigma^2 = var_x.mu_w^2 + mu_x^2.var_w + var_x.var_w — four MXU
+    matmuls per tile (vs Eq. 12's three), every term non-negative so the
+    variance accumulator needs no finalize correction. The joint-operator
+    property is the same as the SRM kernel's: all four matmuls consume
+    the (bm, bk) / (bk, bn) tiles already resident in VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        mu_out_ref[...] = jnp.zeros_like(mu_out_ref)
+        var_out_ref[...] = jnp.zeros_like(var_out_ref)
+
+    mu_x = mu_x_ref[...]
+    var_x = var_x_ref[...]
+    mu_w = mu_w_ref[...]
+    var_w = var_w_ref[...]
+    mu_out_ref[...] += jnp.dot(mu_x, mu_w, preferred_element_type=jnp.float32)
+    var_out_ref[...] += jnp.dot(
+        var_x, jnp.square(mu_w), preferred_element_type=jnp.float32)
+    var_out_ref[...] += jnp.dot(
+        jnp.square(mu_x), var_w, preferred_element_type=jnp.float32)
+    var_out_ref[...] += jnp.dot(
+        var_x, var_w, preferred_element_type=jnp.float32)
+
+
 def _compiler_params(nk_parallel: bool = False):
     if pltpu is None:
         return None
@@ -160,6 +188,57 @@ def pfp_dense_pallas(
     )
     mu, var = fn(mu_x, srm_x, mu_w, srm_w)
     return mu, var
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def pfp_dense_var_pallas(
+    mu_x,
+    var_x,
+    mu_w,
+    var_w,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """Joint PFP dense, Eq. 7 'var' formulation: (M,K)x(K,N) -> (mean,
+    variance) in fp32 from (mu, var) operands. Four matmuls per tile (the
+    Fig. 5 ablation's native representation — no SRM conversion charged).
+
+    Shapes must be multiples of the block sizes — `ops.pfp_dense_var`
+    pads.
+    """
+    m, kdim = mu_x.shape
+    _, n = mu_w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, \
+        (m, n, kdim, bm, bn, bk)
+    nk = kdim // bk
+    grid = (m // bm, n // bn, nk)
+
+    in_specs_x = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    in_specs_w = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    common = dict(
+        grid=grid,
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    params = _compiler_params()
+    if params is not None and not interpret:
+        common["compiler_params"] = params
+    fn = pl.pallas_call(
+        functools.partial(_var_formulation_kernel, nk=nk),
+        in_specs=[in_specs_x, in_specs_x, in_specs_w, in_specs_w],
+        **common,
+    )
+    return fn(mu_x, var_x, mu_w, var_w)
 
 
 def _scratch(shape):

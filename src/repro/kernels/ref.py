@@ -33,6 +33,18 @@ def pfp_dense_first_layer_ref(x, mu_w, var_w):
     return mu, var
 
 
+def pfp_dense_var_ref(mu_x, var_x, mu_w, var_w):
+    """Joint PFP dense, Eq. 7 'var' formulation: four contractions over
+    (mu, var) operands. fp32 accumulate."""
+    f32 = jnp.float32
+    mx, vx = mu_x.astype(f32), var_x.astype(f32)
+    mw, vw = mu_w.astype(f32), var_w.astype(f32)
+    mu = jnp.dot(mx, mw)
+    var = (jnp.dot(vx, jnp.square(mw)) + jnp.dot(jnp.square(mx), vw)
+           + jnp.dot(vx, vw))
+    return mu, var
+
+
 # -- pfp_activations ---------------------------------------------------------
 def pfp_relu_ref(mu, var):
     return pfp_math.relu_moments(mu.astype(jnp.float32), var.astype(jnp.float32))

@@ -53,6 +53,12 @@ _PAGED_KEYS = (
     "mean_page_fragmentation", "final_live_pages",
 )
 
+_PREFIX_KEYS = (
+    "prefix_hits", "prefix_hit_rate", "prefix_shared_pages",
+    "prefill_tokens_saved", "prefill_frac_saved", "cow_copies",
+    "mean_shared_pages", "final_prefix_held_pages",
+)
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -91,6 +97,20 @@ def main():
     ap.add_argument("--expect-defrag", action="store_true",
                     help="exit nonzero unless the run performed at least "
                          "one page defrag (CI: prove multi-page churn)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="refcounted copy-on-write prefix sharing: index "
+                         "finished lineages' pages and map them into new "
+                         "requests sharing a prompt prefix (paged only)")
+    ap.add_argument("--prefix-retention", type=int, default=None,
+                    help="max pages the prefix index may hold for finished "
+                         "lineages (default: the whole page budget)")
+    ap.add_argument("--common-prefix", type=int, default=0,
+                    help="overwrite the first N tokens of every generated "
+                         "prompt with one fixed system prefix, so the "
+                         "trace exercises prefix sharing")
+    ap.add_argument("--expect-prefix-hits", action="store_true",
+                    help="exit nonzero unless at least one admission "
+                         "mapped shared prefix pages (CI smoke)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--mi-continue", type=float, default=0.5)
     ap.add_argument("--mi-abstain", type=float, default=3.0)
@@ -124,6 +144,15 @@ def main():
         args.requests, args.rate, vocab_size=cfg.vocab_size, seed=args.seed,
         prompt_len=(max(2, args.prompt_len // 2), args.prompt_len),
         max_new_tokens=(max(1, args.tokens // 2), args.tokens))
+    if args.common_prefix:
+        # one fixed system prefix across the whole trace (deterministic),
+        # so requests share their leading pages once a donor finishes
+        import numpy as np
+        system = (np.arange(args.common_prefix, dtype=np.int32)
+                  % cfg.vocab_size)
+        for r in trace:
+            n = min(args.common_prefix, len(r.prompt) - 1)
+            r.prompt[:n] = system[:n]
 
     with mesh:
         engine = Engine(
@@ -135,33 +164,66 @@ def main():
                          page_size=args.page_size,
                          page_budget=args.page_budget,
                          reserve_pages=not args.optimistic_pages,
-                         auto_defrag=args.page_size is not None),
+                         auto_defrag=args.page_size is not None,
+                         prefix_sharing=args.prefix_sharing,
+                         prefix_retention_pages=args.prefix_retention),
             router=router, scheduler=scheduler, mesh=mesh)
         summary = run_load(engine, trace)
 
     layout = (f"paged/ps={args.page_size}" if args.page_size else "contiguous")
+    if args.prefix_sharing:
+        layout += "/prefix"
     print(f"== engine summary ({cfg.name}, mesh={dims}, "
           f"impl={args.impl or 'default'}, kv={layout}) ==")
-    keys = _SUMMARY_KEYS + (_PAGED_KEYS if args.page_size else ())
+    keys = _SUMMARY_KEYS + (_PAGED_KEYS if args.page_size else ()) + \
+        (_PREFIX_KEYS if args.prefix_sharing else ())
     for k in keys:
         v = summary[k]
         print(f"  {k:22s} {v:.4g}" if isinstance(v, float)
               else f"  {k:22s} {v}")
+    # Diagnostics before the assertion-style invariant checks, so a CI
+    # failure prints the readable ERROR line instead of a bare traceback.
+    if engine.prefix is not None and \
+            engine.prefix.pages_held > engine.prefix.retention_pages:
+        print(f"ERROR: prefix index holds {engine.prefix.pages_held} pages "
+              f"for finished lineages, beyond its retention of "
+              f"{engine.prefix.retention_pages}", file=sys.stderr)
+        return 1
     engine.pool.check_invariants()
+    if engine.prefix is not None:
+        engine.prefix.check_invariants(engine.pool)
     if summary["final_occupancy"] != 0:
         print("ERROR: slot pool leaked "
               f"{summary['final_occupancy']} slots", file=sys.stderr)
         return 1
-    if args.page_size is not None and summary["final_live_pages"] != 0:
-        # the paged analogue of the slot-leak check: every page must have
-        # drained back to the free list once the loadgen run finished
-        print("ERROR: page pool leaked "
-              f"{summary['final_live_pages']} pages", file=sys.stderr)
-        return 1
+    if args.page_size is not None:
+        pool = engine.pool
+        held = engine.prefix.pages_held if engine.prefix is not None else 0
+        # Refcount-leak check, the paged analogue of the slot-leak check:
+        # with every slot drained, the only legitimate references left
+        # are the prefix index's holds — any page whose refcount is not
+        # exactly its external-hold count leaked a reference (or was
+        # freed with one outstanding).
+        leaked = [p for p in range(1, pool.num_pages)
+                  if pool.page_ref[p] != pool.external_holds[p]]
+        if leaked:
+            print(f"ERROR: page refcount leak on pages {leaked[:8]} "
+                  f"({len(leaked)} total) after drain", file=sys.stderr)
+            return 1
+        if summary["final_live_pages"] != held:
+            print("ERROR: page pool leaked "
+                  f"{summary['final_live_pages'] - held} pages beyond the "
+                  f"{held} prefix-index holds", file=sys.stderr)
+            return 1
     if args.expect_defrag and summary["defrags"] == 0:
         print("ERROR: --expect-defrag but the run never defragged "
               "(page churn too low to exercise the paged pool)",
               file=sys.stderr)
+        return 1
+    if args.expect_prefix_hits and summary["prefix_hits"] == 0:
+        print("ERROR: --expect-prefix-hits but no admission mapped shared "
+              "prefix pages (trace lacks a common prefix, or donors never "
+              "finished before sharers arrived)", file=sys.stderr)
         return 1
     print(f"served {summary['completed']} requests "
           f"({summary['tokens_generated']} tokens) — one PFP pass per decode "

@@ -89,7 +89,8 @@ def _block_init(kind: str, cfg: ModelConfig, key):
 
 def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
                  positions, image_emb=None, state=None, cache_len=None,
-                 page_table=None, standard_positions=False):
+                 page_table=None, write_start=None,
+                 standard_positions=False):
     """Returns (x, new_state, aux_loss)."""
     norm_apply = NORMS[cfg.norm][1]
     aux = jnp.zeros((), jnp.float32)
@@ -109,6 +110,7 @@ def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
             cache=state if kind != "cross" else None,
             cache_len=cache_len,
             page_table=page_table if kind != "cross" else None,
+            write_start=write_start if kind != "cross" else None,
             standard_positions=standard_positions,
         )
         x = residual_add(x, attn_out)
@@ -228,9 +230,12 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
     if image_emb is not None and ctx.mode == Mode.PFP:
         image_emb = GaussianTensor.deterministic(image_emb)
     # Decode-state validity/indirection, shared by every layer: per-batch
-    # valid cache length, and (paged decode) the slot -> page-pool table.
+    # valid cache length, (paged decode) the slot -> page-pool table, and
+    # (prefix-shared paged decode) the first position a slot may write —
+    # positions below it live in copy-on-write-shared prefix pages.
     cache_len = inputs.get("cache_len")
     page_table = inputs.get("page_table")
+    write_start = inputs.get("write_start")
 
     lpg, num_groups, tail = _group_counts(cfg)
     aux_total = jnp.zeros((), jnp.float32)
@@ -242,6 +247,7 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                                       positions=positions, state=st,
                                       cache_len=cache_len,
                                       page_table=page_table,
+                                      write_start=write_start,
                                       standard_positions=standard_positions)
         aux_total = aux_total + aux
         if collect_states and states is not None:
@@ -269,6 +275,7 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                         _kind, gp_i, x_, lctx, cfg,
                         positions=positions, image_emb=image_emb, state=st_,
                         cache_len=cache_len, page_table=page_table,
+                        write_start=write_start,
                         standard_positions=standard_positions)
 
                 # Nested remat: per-layer checkpoints inside the remat'd
@@ -301,6 +308,7 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                                       image_emb=image_emb, state=st,
                                       cache_len=cache_len,
                                       page_table=page_table,
+                                      write_start=write_start,
                                       standard_positions=standard_positions)
         aux_total = aux_total + aux
         if collect_states and states is not None:
@@ -450,6 +458,26 @@ def reset_decode_slot(states, slot):
     return jax.tree_util.tree_map_with_path(rz, states)
 
 
+def copy_decode_pages(states, src, dst):
+    """Copy page-pool rows ``src`` onto rows ``dst`` (both int arrays of
+    equal length) in a paged decode-state pytree — the device half of a
+    copy-on-write: a slot about to write into a page shared with other
+    sequences first duplicates it onto a private page. One gather + one
+    scatter per leaf, entirely on device (the Gaussian KV triple never
+    visits the host)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(path, leaf):
+        ax = _state_batch_axis(path)
+        rows = jnp.take(leaf, src, axis=ax)
+        if ax == 0:
+            return leaf.at[dst].set(rows)
+        return leaf.at[:, dst].set(rows)
+
+    return jax.tree_util.tree_map_with_path(cp, states)
+
+
 def select_decode_slots(new_states, old_states, keep_new):
     """Per-slot merge of two state pytrees: ``keep_new`` (B,) bool takes the
     freshly updated slot state where True and the old one where False.
@@ -477,7 +505,10 @@ def decode_step(params, cfg: ModelConfig, inputs, states, ctx: Context):
     cache_len are masked out of attention, and the paged insert redirects
     their writes to the trash page), optional 'page_table': (B, P)
     page-pool indirection (when ``states`` came from
-    ``init_paged_decode_state``), optional 'image_embeddings'.
+    ``init_paged_decode_state``), optional 'write_start': (B,) first
+    position each row may write (paged prefix sharing — rows below it are
+    re-fed tokens whose k/v already live in copy-on-write-shared prefix
+    pages), optional 'image_embeddings'.
     Returns (logits, new_states).
     """
     logits, _, new_states = forward(

@@ -117,6 +117,10 @@ def attention_apply(
     #                                    `positions`
     cache_len: Optional[jax.Array] = None,  # valid entries in cache
     page_table: Optional[jax.Array] = None,  # (B, P) int32, PagedKVCache only
+    write_start: Optional[jax.Array] = None,  # (B,) int32: first position this
+    #                                  pass may WRITE (PagedKVCache only) —
+    #                                  rows below it are prefix pages shared
+    #                                  copy-on-write with other sequences
     standard_positions: bool = False,  # static: positions are 0..Tq-1 arange
 ):
     """Returns (output, new_cache|None). x: (B, Tq, d_model) or Gaussian."""
@@ -153,9 +157,17 @@ def attention_apply(
         # cache_len — a static prefill window's right padding, a parked
         # lockstep slot — are redirected to the reserved trash page 0, so
         # a lockstep pass over the shared pool can never write another
-        # sequence's pages (the paged analogue of select-merge).
+        # sequence's pages (the paged analogue of select-merge). Rows
+        # BELOW ``write_start`` are redirected the same way: they are a
+        # re-fed window's overlap with a copy-on-write-shared prompt
+        # prefix — the shared pages already hold the identical k/v rows,
+        # and writing through would force a pointless private copy.
+        writable = positions < cache_len[:, None]
+        if write_start is not None:
+            writable = jnp.logical_and(writable,
+                                       positions >= write_start[:, None])
         dest_page = jnp.where(
-            positions < cache_len[:, None],
+            writable,
             jnp.take_along_axis(page_table, positions // ps, axis=1), 0)
         dest_row = positions % ps
 

@@ -7,6 +7,7 @@ from repro.serving.batcher import Request
 from repro.serving.engine.engine import Engine, EngineConfig
 from repro.serving.engine.loadgen import poisson_trace, run_load
 from repro.serving.engine.metrics import EngineMetrics, percentile
+from repro.serving.engine.prefix import PrefixIndex, PrefixNode
 from repro.serving.engine.router import (Decision, RouterConfig,
                                          UncertaintyRouter,
                                          make_svi_fallback)
@@ -18,6 +19,7 @@ __all__ = [
     "Engine", "EngineConfig", "Request",
     "RequestScheduler", "SchedulerConfig", "pages_for",
     "DecodeStatePool", "PagedDecodeStatePool",
+    "PrefixIndex", "PrefixNode",
     "UncertaintyRouter", "RouterConfig", "Decision", "make_svi_fallback",
     "EngineMetrics", "percentile",
     "poisson_trace", "run_load",

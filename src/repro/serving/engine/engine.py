@@ -4,12 +4,16 @@ One ``Engine`` owns a fixed decode batch of ``slots`` sequences over a
 single parameter pytree:
 
   submit -> scheduler (admission control, priority/deadline + aging;
-            paged engines admit on PAGE budget, not slot count)
+            paged engines admit on PAGE budget, not slot count — with
+            prefix sharing, a shared page costs the budget once)
          -> state pool (contiguous: zeroed per-slot KV mean/variance rows;
-            paged: a page-table row over the shared Gaussian page pool)
+            paged: a page-table row over the shared refcounted Gaussian
+            page pool; prefix sharing maps a cached prompt prefix's pages
+            into the table at refcount+1 and copies-on-write the
+            partially-shared boundary page)
          -> chunked prefill (budgeted prompt tokens per engine step;
             paged engines batch each round's chunks into ONE multi-slot
-            pass)
+            pass; prefix-shared slots prefill only the non-shared suffix)
          -> lockstep PFP decode (ONE probabilistic pass per step for the
             whole batch: logit means + variances)
          -> uncertainty router (continue / escalate to SVI / abstain)
@@ -45,9 +49,11 @@ from repro.nn.module import Context
 from repro.serving.batcher import Request
 from repro.serving.decode import uncertainty_decode
 from repro.serving.engine.metrics import EngineMetrics
+from repro.serving.engine.prefix import PrefixIndex
 from repro.serving.engine.router import (Decision, RouterConfig,
                                          UncertaintyRouter)
-from repro.serving.engine.scheduler import RequestScheduler, SchedulerConfig
+from repro.serving.engine.scheduler import (RequestScheduler, SchedulerConfig,
+                                            pages_for)
 from repro.serving.engine.state import DecodeStatePool, PagedDecodeStatePool
 
 
@@ -74,6 +80,15 @@ class EngineConfig:
     #                                are claimed on demand; exhaustion
     #                                preempts the youngest slot.
     auto_defrag: bool = False      # paged: defrag whenever fragmented
+    # -- refcounted prefix sharing (paged engines only) ---------------------
+    prefix_sharing: bool = False   # index finished lineages' pages and map
+    #                                them copy-on-write into new requests
+    #                                sharing a prompt prefix
+    prefix_retention_pages: Optional[int] = None  # max pages the prefix
+    #                                index may hold after their writers
+    #                                finished; None = the whole page budget
+    #                                (the index yields pages to admissions
+    #                                on demand either way)
 
 
 @dataclasses.dataclass
@@ -94,6 +109,11 @@ class _Slot:
     # (token, position), so re-prefilling prompt+generated reproduces the
     # evicted pages bit-for-bit and decode continues where it left off).
     prefill_tokens: Optional[np.ndarray] = None
+    # First position this slot may WRITE: 0 for a cold slot; the matched
+    # prefix length when admission mapped shared pages (rows below it are
+    # already cached — the paged insert redirects re-fed writes there to
+    # the trash page, and prefill starts here).
+    write_start: int = 0
 
 
 class Engine:
@@ -138,6 +158,21 @@ class Engine:
         else:
             self.pool = DecodeStatePool(cfg, config.slots, config.max_len,
                                         mesh=mesh)
+        self.prefix: Optional[PrefixIndex] = None
+        if config.prefix_sharing:
+            if not self.paged:
+                raise ValueError("prefix_sharing requires the paged "
+                                 "Gaussian KV-cache (set page_size)")
+            retention = (config.prefix_retention_pages
+                         if config.prefix_retention_pages is not None
+                         else self.pool.total_pages)
+            self.prefix = PrefixIndex(config.page_size, retention)
+            # defrag moves a shared page once; the index's page ids must
+            # follow the rewritten tables
+            self.pool.add_remap_listener(self.prefix.remap_pages)
+        # (uid, pages, matched) of _page_need's latest index walk, reused
+        # by the admission it gated
+        self._prefix_match = None
         self.metrics = EngineMetrics()
         self.finished: List[Request] = []
         self._slots: List[Optional[_Slot]] = [None] * config.slots
@@ -158,11 +193,25 @@ class Engine:
         self._decode_fn = jax.jit(self._decode_step_paged if self.paged
                                   else self._decode_step)
         self._set_row = jax.jit(lambda buf, slot, row: buf.at[slot].set(row))
-        self._unc = jax.jit(functools.partial(
-            uncertainty_decode,
-            num_uncertainty_samples=config.num_uncertainty_samples,
-            mi_threshold=self.router.config.mi_abstain,
-            greedy=config.greedy))
+
+        # Uncertainty sampling is keyed per (request uid, token index), NOT
+        # per engine step: a request's MI trace (and sampled tokens, when
+        # not greedy) is then invariant to WHEN its tokens decode — so
+        # admission order, preemption/resume and prefix sharing (which all
+        # shift schedules) cannot perturb routing decisions.
+        def _unc_batch(lm_mean, lm_var, base_key, uids, tok_idx):
+            def row(mean, var, uid, t):
+                key = jax.random.fold_in(jax.random.fold_in(base_key, uid), t)
+                out = uncertainty_decode(
+                    mean[None, None], var[None, None], key,
+                    num_uncertainty_samples=config.num_uncertainty_samples,
+                    mi_threshold=self.router.config.mi_abstain,
+                    greedy=config.greedy)
+                return out.token[0], out.mutual_info[0]
+
+            return jax.vmap(row)(lm_mean, lm_var, uids, tok_idx)
+
+        self._unc = jax.jit(_unc_batch)
 
     # -- jitted device programs ---------------------------------------------
     def _ctx(self) -> Context:
@@ -284,10 +333,11 @@ class Engine:
         self._route_and_decode(now)
         self._step_idx += 1
         if self.paged:
-            self.metrics.on_step(
-                self.pool.live,
-                pages=(self.pool.live_pages, self.pool.total_pages,
-                       self.pool.page_fragmentation()))
+            pages = (self.pool.live_pages, self.pool.total_pages,
+                     self.pool.page_fragmentation())
+            if self.prefix is not None:
+                pages += (self.pool.shared_pages, self.prefix.pages_held)
+            self.metrics.on_step(self.pool.live, pages=pages)
             if self.config.auto_defrag and self.pool.page_fragmentation():
                 self.defrag()
         else:
@@ -295,31 +345,82 @@ class Engine:
             if self.config.auto_compact and self.pool.fragmentation():
                 self.compact()
 
+    def _request_tokens(self, req: Request) -> np.ndarray:
+        tokens = np.asarray(req.prompt, np.int32)
+        if req.generated:  # re-admission after a preemption
+            tokens = np.concatenate(
+                [tokens, np.asarray(req.generated, np.int32)])
+        return tokens
+
+    def _page_need(self, req: Request) -> int:
+        """Pages an admission would actually take from the free list: the
+        plain :func:`pages_for` budget minus the FULLY-shared prefix pages
+        the index would map at refcount+1 (a shared page is already paid
+        for once in the pool). A partially-matched boundary page still
+        costs one page — its copy-on-write duplicate. The match is cached
+        per uid so the admission that follows a successful pop reuses it
+        instead of walking the radix tree a second time."""
+        total = pages_for(req, self.pool.page_size,
+                          reserve=self.config.reserve_pages)
+        tokens = self._request_tokens(req)
+        pages, matched = self.prefix.match(tokens, limit=len(tokens) - 1)
+        self._prefix_match = (req.uid, pages, matched)
+        return total - matched // self.pool.page_size
+
     def _admit(self, now: float) -> None:
         while self.pool.free_slots:
             if self.paged:
                 req, expired = self.scheduler.pop_ready(
                     now, free_pages=self.pool.free_pages,
                     page_size=self.pool.page_size,
-                    reserve_pages=self.config.reserve_pages)
+                    reserve_pages=self.config.reserve_pages,
+                    page_need=(self._page_need if self.prefix is not None
+                               else None))
             else:
                 req, expired = self.scheduler.pop_ready(now)
             for e in expired:
                 self.metrics.on_expire()
                 self.finished.append(e)
             if req is None:
+                # The head may be blocked only by pages the prefix index
+                # is holding for FINISHED lineages — reclaim LRU leaves
+                # (skipping pages live slots still share) and retry.
+                if (self.paged and self.prefix is not None
+                        and len(self.scheduler)
+                        and self.prefix.reclaim(self.pool, 1)):
+                    continue
                 break
             slot = self.pool.alloc(req.uid)
-            tokens = np.asarray(req.prompt, np.int32)
-            if req.generated:  # re-admission after a preemption
-                tokens = np.concatenate(
-                    [tokens, np.asarray(req.generated, np.int32)])
-            self._slots[slot] = _Slot(request=req, admit_seq=self._admit_seq,
-                                      prefill_tokens=tokens)
+            tokens = self._request_tokens(req)
+            sl = _Slot(request=req, admit_seq=self._admit_seq,
+                       prefill_tokens=tokens)
+            self._slots[slot] = sl
+            if self.prefix is not None:
+                # Map the cached prefix into this slot's table and prefill
+                # only the non-shared suffix: paged attention reads through
+                # the table indirection, so the logits are bit-for-bit a
+                # cold prefill's. The limit keeps >= 1 token to prefill
+                # (next-token logits come from feeding the last token).
+                # pop_ready's _page_need already walked the index for this
+                # request; reuse its match (nothing mutates in between).
+                if self._prefix_match is not None and \
+                        self._prefix_match[0] == req.uid:
+                    _, pages, matched = self._prefix_match
+                else:
+                    pages, matched = self.prefix.match(
+                        tokens, limit=len(tokens) - 1)
+                self._prefix_match = None
+                self.pool.share(slot, pages)
+                self.pool.positions[slot] = matched
+                sl.prefill_pos = matched
+                sl.write_start = matched
+                self.metrics.on_prefix(matched, len(pages))
             if self.paged and self.config.reserve_pages:
-                # pop_ready admitted against the free-page count, so the
-                # full prompt+generation reservation cannot fail.
-                ok = self.pool.ensure_capacity(
+                # pop_ready admitted against the free-page count (prefix
+                # pages discounted), so reserving the full prompt +
+                # generation need — including the eager copy-on-write of a
+                # partially-shared boundary page — cannot fail.
+                ok = self._ensure_pages(
                     slot, len(req.prompt) + req.max_new_tokens)
                 assert ok, "page reservation failed after admission check"
             self._admit_seq += 1
@@ -391,6 +492,7 @@ class Engine:
             tokens = np.zeros((b, c), np.int32)
             positions = np.tile(np.arange(c, dtype=np.int32), (b, 1))
             cache_len = np.zeros(b, np.int32)
+            write_start = np.zeros(b, np.int32)
             out_idx = np.zeros(b, np.int32)
             done = np.zeros(b, bool)
             planned = []
@@ -399,7 +501,7 @@ class Engine:
                 if sl is None or sl.phase != "prefill":
                     continue  # preempted as a page victim in this step
                 end = sl.prefill_pos + n
-                if not self.pool.ensure_capacity(slot, end) and \
+                if not self._ensure_pages(slot, end) and \
                         not self._make_room(slot, end):
                     # pool exhausted and nothing to preempt: bounce this
                     # request back to the queue (it keeps its progress)
@@ -410,6 +512,10 @@ class Engine:
                 tokens[slot, :len(window)] = window
                 positions[slot] = lo + np.arange(c, dtype=np.int32)
                 cache_len[slot] = end
+                # The window may re-feed tokens below the shared-prefix
+                # boundary — their writes are redirected to the trash page
+                # (the shared pages already hold the identical rows).
+                write_start[slot] = sl.write_start
                 out_idx[slot] = len(window) - 1
                 done[slot] = end == len(sl.prefill_tokens)
                 planned.append((slot, n, end))
@@ -425,11 +531,14 @@ class Engine:
             if not planned:
                 continue
             pre_states = self.pool.states  # escalation-replay snapshot
+            #            (copy-on-write duplicates are already in it: every
+            #            _ensure_pages above ran before this reference)
             table = self.pool.device_table()
             inputs = {
                 "tokens": jnp.asarray(tokens),
                 "positions": jnp.asarray(positions),
                 "cache_len": jnp.asarray(cache_len),
+                "write_start": jnp.asarray(write_start),
                 "page_table": table,
             }
             self._lm_mean, self._lm_var, self.pool.states = \
@@ -449,6 +558,7 @@ class Engine:
                         "tokens": inputs["tokens"][slot:slot + 1],
                         "positions": inputs["positions"][slot:slot + 1],
                         "cache_len": inputs["cache_len"][slot:slot + 1],
+                        "write_start": inputs["write_start"][slot:slot + 1],
                         "page_table": table[slot:slot + 1],
                     }
                     sl.replay = (pre_states, row, int(out_idx[slot]))
@@ -458,10 +568,16 @@ class Engine:
                         if sl is not None and sl.phase == "decode"]
         if not decode_slots:
             return
-        out = self._unc(self._lm_mean[:, None], self._lm_var[:, None],
-                        jax.random.fold_in(self._key_unc, self._step_idx))
-        tok_np = np.asarray(out.token)
-        mi_np = np.asarray(out.mutual_info)
+        uids = np.zeros(self.config.slots, np.int32)
+        tok_idx = np.zeros(self.config.slots, np.int32)
+        for slot in decode_slots:
+            req = self._slots[slot].request
+            uids[slot] = req.uid & 0x7FFFFFFF
+            tok_idx[slot] = len(req.generated)
+        toks, mis = self._unc(self._lm_mean, self._lm_var, self._key_unc,
+                              jnp.asarray(uids), jnp.asarray(tok_idx))
+        tok_np = np.asarray(toks)
+        mi_np = np.asarray(mis)
 
         feed = np.zeros(self.config.slots, np.int32)
         active = np.zeros(self.config.slots, bool)
@@ -501,7 +617,7 @@ class Engine:
                 if self._slots[slot] is None:
                     continue  # preempted as a victim earlier in this loop
                 pos = int(self.pool.positions[slot])
-                if not self.pool.ensure_capacity(slot, pos + 1) and \
+                if not self._ensure_pages(slot, pos + 1) and \
                         not self._make_room(slot, pos + 1):
                     self._preempt(slot)
             active &= np.asarray([sl is not None for sl in self._slots])
@@ -555,8 +671,11 @@ class Engine:
         self.metrics.on_escalation()
         sl.request.escalated += 1
         sub, inputs, out_idx = self._replay_for(slot, sl)
+        # keyed per (request, token), like the PFP uncertainty sampling:
+        # escalated second opinions are schedule-invariant too
         key = jax.random.fold_in(
-            jax.random.fold_in(self._key_esc, self._step_idx), slot)
+            jax.random.fold_in(self._key_esc, sl.request.uid & 0x7FFFFFFF),
+            len(sl.request.generated))
         stok, smi = self.router.second_opinion(
             self.params, inputs, sub, key, out_idx=out_idx)
         mi = float(smi)
@@ -567,16 +686,43 @@ class Engine:
     def _finish(self, slot: int, reason: str, now: float) -> None:
         sl = self._slots[slot]
         sl.request.finish(reason)
+        if self.prefix is not None:
+            # Register the finished lineage: the index takes refcount
+            # holds on the pages covering the rows actually written
+            # (prompt + generated, minus the final token, which was never
+            # fed), so future requests sharing the prefix map them instead
+            # of recomputing. Retention is enforced inside insert.
+            valid = int(self.pool.positions[slot])
+            tokens = self._request_tokens(sl.request)[:valid]
+            self.prefix.insert(tokens, self.pool.slot_pages[slot], self.pool)
         self.pool.evict(slot)
         self._slots[slot] = None
         self.finished.append(sl.request)
         self.metrics.on_finish(sl.request, now)
 
     # -- paged page-pressure handling ---------------------------------------
+    def _ensure_pages(self, slot: int, upto_len: int) -> bool:
+        """Cover positions [0, upto_len) with pages the slot may WRITE:
+        capacity (allocate missing pages) plus, under prefix sharing,
+        copy-on-write of any still-shared page at or past the slot's
+        write_start. False = the free list cannot supply the pages."""
+        if not self.pool.ensure_capacity(slot, upto_len):
+            return False
+        if self.prefix is None:
+            return True
+        sl = self._slots[slot]
+        before = self.pool.cow_copies
+        if not self.pool.ensure_writable(slot, sl.write_start, upto_len):
+            return False
+        self.metrics.on_cow(self.pool.cow_copies - before)
+        return True
+
     def _preempt(self, slot: int) -> None:
         """Evict ``slot`` mid-flight and requeue its request (with its
         generated tokens — re-prefilling prompt+generated reproduces the
-        freed pages bit-for-bit, so decode resumes where it stopped)."""
+        freed pages bit-for-bit, so decode resumes where it stopped).
+        Pages other slots share (or the index holds) survive the evict —
+        only this slot's references are released."""
         sl = self._slots[slot]
         self.pool.evict(slot)
         self._slots[slot] = None
@@ -584,7 +730,9 @@ class Engine:
         self.scheduler.requeue(sl.request, float(self._step_idx))
 
     def _make_room(self, for_slot: int, upto_len: int) -> bool:
-        """Free pages for ``for_slot`` by preempting JUNIOR live slots
+        """Free pages for ``for_slot``: first reclaim prefix-index holds
+        on finished lineages (cache eviction beats preemption — nobody is
+        computing on those pages), then preempt JUNIOR live slots
         (admitted after it), youngest first, until the capacity fits.
         Youngest-first preserves the scheduler's seniority order under
         page pressure — the same rule vLLM's recompute preemption uses —
@@ -592,7 +740,9 @@ class Engine:
         may evict: return False and let the caller bounce the requester
         instead of inverting seniority."""
         my_seq = self._slots[for_slot].admit_seq
-        while not self.pool.ensure_capacity(for_slot, upto_len):
+        while not self._ensure_pages(for_slot, upto_len):
+            if self.prefix is not None and self.prefix.reclaim(self.pool, 1):
+                continue
             victims = [s for s, sl in enumerate(self._slots)
                        if sl is not None and sl.admit_seq > my_seq]
             if not victims:

@@ -56,8 +56,16 @@ class EngineMetrics:
         # Paged-pool telemetry (stays zero on the contiguous layout).
         self.preemptions = 0
         self.defrags = 0
-        self.page_trace: List[Tuple[int, int, int]] = []  # (live, total, frag)
+        # (live, total, frag[, shared, held]) per step; the last two ride
+        # along when the engine runs prefix sharing.
+        self.page_trace: List[Tuple[int, ...]] = []
         self.peak_live_pages = 0
+        # Prefix-sharing telemetry (stays zero without a prefix index).
+        self.prefix_hits = 0           # admissions that mapped shared pages
+        self.prefix_misses = 0         # admissions that found no prefix
+        self.prefix_shared_pages = 0   # pages mapped shared at admission
+        self.prefill_tokens_saved = 0  # prompt tokens NOT prefilled (shared)
+        self.cow_copies = 0            # copy-on-write page duplications
         self._admit_times = {}     # uid -> (arrival_step, admit_step, wall_t0)
         self._t0: Optional[float] = None
 
@@ -104,9 +112,24 @@ class EngineMetrics:
     def on_defrag(self, n: int = 1) -> None:
         self.defrags += n
 
+    def on_prefix(self, tokens_saved: int, pages_shared: int) -> None:
+        """One admission's prefix-index outcome: ``tokens_saved`` prompt
+        tokens whose prefill is skipped (their k/v rows arrived via shared
+        pages), over ``pages_shared`` mapped pages. (0, 0) is a miss."""
+        if pages_shared > 0:
+            self.prefix_hits += 1
+            self.prefix_shared_pages += pages_shared
+            self.prefill_tokens_saved += tokens_saved
+        else:
+            self.prefix_misses += 1
+
+    def on_cow(self, n: int = 1) -> None:
+        self.cow_copies += n
+
     def on_step(self, occupancy: int,
-                pages: Optional[Tuple[int, int, int]] = None) -> None:
-        """``pages``: (live_pages, total_pages, fragmented_pages) from a
+                pages: Optional[Tuple[int, ...]] = None) -> None:
+        """``pages``: (live_pages, total_pages, fragmented_pages) — plus
+        (shared_pages, prefix_held_pages) under prefix sharing — from a
         paged pool; omitted by the contiguous engine."""
         self.steps += 1
         self.occupancy_trace.append(occupancy)
@@ -161,4 +184,22 @@ class EngineMetrics:
                 / max(len(self.page_trace), 1) if self.page_trace else 0.0),
             "final_live_pages": self.page_trace[-1][0] if self.page_trace
             else 0,
+            # prefix-sharing gauges (all zero without a prefix index)
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": self.prefix_hits / max(
+                self.prefix_hits + self.prefix_misses, 1),
+            "prefix_shared_pages": self.prefix_shared_pages,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            # fraction of prefill FLOPs the prefix index saved: PFP
+            # prefill cost is linear in prompt tokens fed, so the token
+            # ratio is the FLOP ratio
+            "prefill_frac_saved": self.prefill_tokens_saved / max(
+                self.prefill_tokens_saved + self.prefill_tokens, 1),
+            "cow_copies": self.cow_copies,
+            "mean_shared_pages": (
+                sum(t[3] for t in self.page_trace if len(t) > 3)
+                / max(len(self.page_trace), 1)),
+            "final_prefix_held_pages": (
+                self.page_trace[-1][4]
+                if self.page_trace and len(self.page_trace[-1]) > 4 else 0),
         }

@@ -23,11 +23,13 @@ The scheduler owns the waiting-room side of continuous batching:
     pool;
   * page-budget admission — with a paged decode pool the binding resource
     is pages, not slots: ``pop_ready`` also checks the candidate's page
-    need (:func:`pages_for`) against the pool's free pages, and blocks
-    the queue head rather than skipping it, so page pressure can never
-    invert priority order. ``requeue`` re-inserts a PREEMPTED request
-    (pages reclaimed mid-flight by a more senior slot) without admission
-    checks — preemption must not lose requests.
+    need (:func:`pages_for`, or the caller's ``page_need`` override — a
+    prefix-sharing engine discounts pages the request would map SHARED,
+    since a shared page costs the pool budget once) against the pool's
+    free pages, and blocks the queue head rather than skipping it, so
+    page pressure can never invert priority order. ``requeue`` re-inserts
+    a PREEMPTED request (pages reclaimed mid-flight by a more senior
+    slot) without admission checks — preemption must not lose requests.
 
 Pure host logic — no jax imports; the engine executes the plans.
 """
@@ -35,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.serving.batcher import Request
 
@@ -138,8 +140,9 @@ class RequestScheduler:
 
     def pop_ready(self, now: float, *, free_pages: Optional[int] = None,
                   page_size: Optional[int] = None,
-                  reserve_pages: bool = True) -> Tuple[Optional[Request],
-                                                       List[Request]]:
+                  reserve_pages: bool = True,
+                  page_need: Optional[Callable[[Request], int]] = None,
+                  ) -> Tuple[Optional[Request], List[Request]]:
         """Pop the most urgent admissible request.
 
         With ``free_pages``/``page_size`` set (paged engine), admission is
@@ -147,6 +150,13 @@ class RequestScheduler:
         fit, NOTHING is popped — blocking the head instead of skipping to
         a smaller request keeps page pressure from inverting priority
         order (the head is admitted as soon as evictions free its pages).
+
+        ``page_need`` overrides the default :func:`pages_for` math: a
+        prefix-sharing engine passes a callable that discounts pages the
+        request would map SHARED from the prefix index — a shared page is
+        already paid for in the pool budget, so it must cost the admission
+        check nothing (only the non-shared suffix, plus one page for the
+        copy-on-write of a partially-shared boundary page, counts).
 
         Returns (request | None, expired) — ``expired`` are requests whose
         admission deadline passed while waiting; they are dropped here so
@@ -159,10 +169,11 @@ class RequestScheduler:
             self._queue,
             key=lambda it: (self._effective_priority(it[1], it[2], now),
                             it[0]))
-        if free_pages is not None and page_size is not None and \
-                pages_for(best[2], page_size,
-                          reserve=reserve_pages) > free_pages:
-            return None, expired
+        if free_pages is not None and page_size is not None:
+            need = (page_need(best[2]) if page_need is not None
+                    else pages_for(best[2], page_size, reserve=reserve_pages))
+            if need > free_pages:
+                return None, expired
         self._queue.remove(best)
         return best[2], expired
 

@@ -16,24 +16,40 @@ ONE preallocated device pytree of ``num_slots`` batch rows
 ``PagedDecodeStatePool`` replaces the static per-slot ``max_len`` KV rows
 with a global pool of fixed-size pages (``lm.init_paged_decode_state``):
 slot identity lives entirely in host-side page tables, so device memory
-scales with the TOKENS actually cached, not ``slots * max_len``. Requests
-borrow a slot (a batch row + a page-table row) and pages grow with their
-position:
+scales with the TOKENS actually cached, not ``slots * max_len``. Pages
+are REFCOUNTED, not slot-owned: a page may appear in several slots'
+tables at once (requests sharing a prompt prefix) and be held by the
+prefix index after its writer finished. Requests borrow a slot (a batch
+row + a page-table row) and pages grow with their position:
 
   alloc            -> pop the lowest free slot (no pages yet)
+  share            -> map already-cached prefix pages into a fresh slot's
+                      table at refcount+1 (no device work, no copies —
+                      paged attention reads through the table indirection)
   ensure_capacity  -> extend a slot's page list to cover its positions
                       (the engine calls it before each prefill chunk and
                       decode write; False = pool exhausted -> preempt)
-  evict            -> free the slot AND all its pages (stale page contents
-                      stay — per-batch ``cache_len`` masking plus the
-                      trash-page write redirect make them invisible)
-  defrag           -> permutation-gather live pages to the pool front
-                      (page-granular analogue of slot compaction)
+  ensure_writable  -> copy-on-write: any page the slot is about to WRITE
+                      that is still shared (refcount > 1) is first
+                      duplicated onto a private page — ONE device gather +
+                      scatter per leaf for all copies of the call — and
+                      the slot's table rewritten to the copy
+  hold / release   -> external references (the prefix index) on a page;
+                      a page is freed only when its refcount drops to 0
+  evict            -> release the slot's reference on every page it maps
+                      (pages survive while shared or held); stale page
+                      contents stay — per-batch ``cache_len`` masking plus
+                      the trash-page write redirect make them invisible
+  defrag           -> permutation-gather live pages to the pool front: a
+                      shared page moves ONCE and every referencing table
+                      (and, via remap listeners, the prefix index) is
+                      rewritten to its new position
 
 Page 0 is reserved as the TRASH page: the paged cache insert in
-``nn/attention.py`` redirects writes at positions >= ``cache_len`` there,
-which is what lets one lockstep pass over the shared pool serve slots at
-different lifecycle phases without select-merge.
+``nn/attention.py`` redirects writes at positions >= ``cache_len`` (and,
+under prefix sharing, below ``write_start``) there, which is what lets
+one lockstep pass over the shared pool serve slots at different
+lifecycle phases without select-merge.
 
 All device transfers are whole-axis gathers issued from jitted functions;
 neither pool ever round-trips KV buffers through the host. Host state is
@@ -43,7 +59,7 @@ from __future__ import annotations
 
 import heapq
 import math
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -199,10 +215,23 @@ class PagedDecodeStatePool:
         # hands out hundreds of pages per reservation) keeps live pages
         # packed low, bounding fragmentation between defrags.
         self._free_pages: List[int] = list(range(1, self.num_pages))
-        self.page_owner: List[Optional[int]] = [None] * self.num_pages
-        self.page_owner[0] = -1                  # trash page sentinel
+        # Refcounted ownership: page_ref[p] counts every reference on page
+        # p — one per slot table mapping it plus one per external hold
+        # (the prefix index). external_holds is the hold subset, so the
+        # invariant page_ref == table_refs + external_holds is checkable.
+        # The trash page carries a -1 sentinel: never allocated, never
+        # freed, never counted.
+        self.page_ref: List[int] = [0] * self.num_pages
+        self.page_ref[0] = -1
+        self.external_holds: List[int] = [0] * self.num_pages
+        self.cow_copies = 0                      # lifetime COW page copies
+        # Listeners notified with the {old_page: new_page} map after every
+        # defrag, so page-indexed structures outside the tables (the
+        # prefix index) stay aligned with the moved pool rows.
+        self._remap_listeners: List[Callable[[Dict[int, int]], None]] = []
         self._device_table = None                # cache; tables change rarely
         self._take = jax.jit(lm.take_decode_slots)
+        self._copy = jax.jit(lm.copy_decode_pages)
 
     # -- occupancy ----------------------------------------------------------
     @property
@@ -232,11 +261,21 @@ class PagedDecodeStatePool:
     def pages_needed(self, tokens: int) -> int:
         return math.ceil(tokens / self.page_size)
 
+    @property
+    def shared_pages(self) -> int:
+        """Pages referenced more than once (table mappings + holds)."""
+        return sum(1 for r in self.page_ref[1:] if r > 1)
+
+    @property
+    def held_pages(self) -> int:
+        """Pages carrying at least one external (prefix-index) hold."""
+        return sum(1 for h in self.external_holds[1:] if h > 0)
+
     def page_fragmentation(self) -> int:
         """Live pages sitting past the packed prefix [1 .. live_pages]."""
         live = self.live_pages
-        return sum(1 for p, o in enumerate(self.page_owner)
-                   if o is not None and o != -1 and p > live)
+        return sum(1 for p, r in enumerate(self.page_ref)
+                   if p > 0 and r > 0 and p > live)
 
     # -- lifecycle ----------------------------------------------------------
     def alloc(self, uid: int) -> int:
@@ -270,22 +309,110 @@ class PagedDecodeStatePool:
             return False
         for _ in range(need):
             page = heapq.heappop(self._free_pages)
-            self.page_owner[page] = slot
+            self.page_ref[page] = 1
             self.page_table[slot, len(self.slot_pages[slot])] = page
             self.slot_pages[slot].append(page)
         self._device_table = None
         return True
 
+    # -- prefix sharing: refcounts, holds, copy-on-write --------------------
+    def share(self, slot: int, pages: Sequence[int]) -> None:
+        """Map already-cached prefix ``pages`` (in logical order, page 0 of
+        the sequence first) into a FRESH slot's table at refcount+1. No
+        device work: paged attention reads through the table indirection,
+        so the mapped rows are immediately visible to the new slot."""
+        if self.owner[slot] is None:
+            raise RuntimeError(f"share into idle slot {slot}")
+        if self.slot_pages[slot]:
+            raise RuntimeError(f"share into non-empty slot {slot}")
+        for j, page in enumerate(pages):
+            if not 0 < page < self.num_pages or self.page_ref[page] < 1:
+                raise RuntimeError(f"share of dead page {page}")
+            self.page_ref[page] += 1
+            self.page_table[slot, j] = page
+            self.slot_pages[slot].append(page)
+        if pages:
+            self._device_table = None
+
+    def hold(self, page: int) -> None:
+        """Take an external (prefix-index) reference on a live page."""
+        if not 0 < page < self.num_pages or self.page_ref[page] < 1:
+            raise RuntimeError(f"hold of dead page {page}")
+        self.page_ref[page] += 1
+        self.external_holds[page] += 1
+
+    def release_hold(self, page: int) -> None:
+        """Drop an external reference; frees the page at refcount 0."""
+        if self.external_holds[page] < 1:
+            raise RuntimeError(f"release of unheld page {page}")
+        self.external_holds[page] -= 1
+        self._unref(page)
+
+    def _unref(self, page: int) -> None:
+        self.page_ref[page] -= 1
+        if self.page_ref[page] == 0:
+            heapq.heappush(self._free_pages, page)
+
+    def writable(self, slot: int, start: int, upto: int) -> bool:
+        """True iff every page of ``slot`` covering positions
+        [start, upto) is private (refcount 1) — i.e. ensure_writable
+        would be a no-op."""
+        lo, hi = start // self.page_size, self.pages_needed(upto)
+        return all(self.page_ref[p] == 1
+                   for p in self.slot_pages[slot][lo:hi])
+
+    def ensure_writable(self, slot: int, start: int, upto: int) -> bool:
+        """Copy-on-write for the pages ``slot`` is about to write.
+
+        Positions [start, upto) must already be covered by the slot's
+        table (ensure_capacity first). Any covering page still shared
+        (refcount > 1) is duplicated onto a private page — ALL copies of
+        the call ride one device gather + scatter per leaf — and the
+        slot's table entry is swapped to the copy; the shared original
+        keeps its remaining references. Atomic: returns False (pool
+        unchanged) when the free list cannot supply every copy target.
+        """
+        if self.owner[slot] is None:
+            raise RuntimeError(f"ensure_writable on idle slot {slot}")
+        lo, hi = start // self.page_size, self.pages_needed(upto)
+        pages = self.slot_pages[slot]
+        if hi > len(pages):
+            raise ValueError(
+                f"slot {slot}: ensure_writable upto {upto} exceeds the "
+                f"{len(pages)} mapped pages (ensure_capacity first)")
+        cow = [j for j in range(lo, hi) if self.page_ref[pages[j]] > 1]
+        if not cow:
+            return True
+        if len(cow) > len(self._free_pages):
+            return False
+        src, dst = [], []
+        for j in cow:
+            page = pages[j]
+            copy = heapq.heappop(self._free_pages)
+            self.page_ref[copy] = 1
+            self._unref(page)       # shared before, so never frees here
+            pages[j] = copy
+            self.page_table[slot, j] = copy
+            src.append(page)
+            dst.append(copy)
+        self.states = self._copy(self.states, np.asarray(src, np.int32),
+                                 np.asarray(dst, np.int32))
+        self.cow_copies += len(cow)
+        self._device_table = None
+        return True
+
     def evict(self, slot: int) -> int:
-        """Free ``slot`` and every page it holds; returns the evicted
-        request's uid. Stale page contents stay in place — the trash-page
-        write redirect plus ``cache_len`` masking keep them invisible."""
+        """Release ``slot`` and its reference on every page it maps;
+        returns the evicted request's uid. A page is freed only when its
+        refcount drops to 0 — pages shared with other slots or held by
+        the prefix index survive. Stale page contents stay in place — the
+        trash-page write redirect plus ``cache_len`` masking keep them
+        invisible."""
         uid = self.owner[slot]
         if uid is None:
             raise RuntimeError(f"evict of idle slot {slot}")
         for page in self.slot_pages[slot]:
-            self.page_owner[page] = None
-            heapq.heappush(self._free_pages, page)
+            self._unref(page)
         if self.slot_pages[slot]:
             self._device_table = None
         self.slot_pages[slot] = []
@@ -295,14 +422,22 @@ class PagedDecodeStatePool:
         self._free.append(slot)
         return uid
 
+    def add_remap_listener(self,
+                           fn: Callable[[Dict[int, int]], None]) -> None:
+        """Register a callback receiving the {old: new} page map applied
+        by every defrag (page-indexed structures outside the tables —
+        the prefix index — must follow the moved rows)."""
+        self._remap_listeners.append(fn)
+
     def defrag(self) -> Optional[np.ndarray]:
         """Pack live pages to the pool front (stable order, trash page
         pinned at 0). One permutation gather per attention leaf, on
-        device; page tables are rewritten in place. Returns the applied
-        page permutation (``perm[new] = old``) so callers holding page-
-        indexed snapshots can remap, or None when already packed."""
-        live = [p for p, o in enumerate(self.page_owner)
-                if o is not None and o != -1]
+        device; a SHARED page moves once and every slot table referencing
+        it is rewritten (plus any registered remap listeners — the prefix
+        index). Returns the applied page permutation (``perm[new] =
+        old``) so callers holding page-indexed snapshots can remap, or
+        None when already packed."""
+        live = [p for p in range(1, self.num_pages) if self.page_ref[p] > 0]
         dest = {old: new for new, old in enumerate(live, start=1)}
         if all(old == new for old, new in dest.items()):
             return None
@@ -310,19 +445,24 @@ class PagedDecodeStatePool:
             [0] + live + [p for p in range(1, self.num_pages)
                           if p not in dest], np.int32)
         self.states = self._take(self.states, perm)
-        new_owner: List[Optional[int]] = [None] * self.num_pages
-        new_owner[0] = -1
+        new_ref = [0] * self.num_pages
+        new_ext = [0] * self.num_pages
+        new_ref[0] = -1
         for old, new in dest.items():
-            new_owner[new] = self.page_owner[old]
-        self.page_owner = new_owner
+            new_ref[new] = self.page_ref[old]
+            new_ext[new] = self.external_holds[old]
+        self.page_ref = new_ref
+        self.external_holds = new_ext
         for slot in self.live_slot_indices():
             self.slot_pages[slot] = [dest[p] for p in self.slot_pages[slot]]
             self.page_table[slot, :len(self.slot_pages[slot])] = \
                 self.slot_pages[slot]
-        self._free_pages = [p for p, o in enumerate(self.page_owner)
-                            if o is None and p != 0]
+        self._free_pages = [p for p in range(1, self.num_pages)
+                            if self.page_ref[p] == 0]
         heapq.heapify(self._free_pages)
         self._device_table = None
+        for listener in self._remap_listeners:
+            listener(dest)
         return perm
 
     # -- device views -------------------------------------------------------
@@ -344,8 +484,9 @@ class PagedDecodeStatePool:
             i for i, o in enumerate(self.owner) if o is None)
         uids = [o for o in self.owner if o is not None]
         assert len(uids) == len(set(uids)), "duplicate owner uid"
-        assert self.page_owner[0] == -1 and 0 not in self._free_pages
-        seen: Dict[int, int] = {}
+        assert self.page_ref[0] == -1 and 0 not in self._free_pages
+        assert self.external_holds[0] == 0
+        table_refs = [0] * self.num_pages
         for slot in range(self.num_slots):
             pages = self.slot_pages[slot]
             if self.owner[slot] is None:
@@ -356,14 +497,17 @@ class PagedDecodeStatePool:
             assert len(set(pages)) == len(pages), "slot holds duplicate page"
             for j, page in enumerate(pages):
                 assert 0 < page < self.num_pages
-                assert self.page_owner[page] == slot, \
-                    f"page {page} owner mismatch"
+                assert self.page_ref[page] > 0, \
+                    f"slot {slot} maps freed page {page}"
                 assert self.page_table[slot, j] == page
-                assert page not in seen, \
-                    f"page {page} aliased by slots {seen[page]} and {slot}"
-                seen[page] = slot
+                table_refs[page] += 1
             assert not self.page_table[slot, len(pages):].any()
             assert self.positions[slot] <= len(pages) * self.page_size
+        for p in range(1, self.num_pages):
+            assert self.external_holds[p] >= 0
+            assert self.page_ref[p] == table_refs[p] + self.external_holds[p], \
+                (f"page {p}: refcount {self.page_ref[p]} != "
+                 f"{table_refs[p]} table refs + "
+                 f"{self.external_holds[p]} holds")
         assert sorted(self._free_pages) == sorted(
-            p for p in range(1, self.num_pages) if self.page_owner[p] is None)
-        assert self.live_pages == len(seen)
+            p for p in range(1, self.num_pages) if self.page_ref[p] == 0)

@@ -78,6 +78,12 @@ def make_runner(op: str, shape_key: ShapeKey,
         mu_w, var_w = arr(k, n, scale=0.1), arr(k, n, positive=True, scale=0.1)
         return lambda s: ops.pfp_dense(x, x, mu_w, var_w, impl="kernel",
                                        first_layer=True, schedule=s)
+    if op == "dense_var":
+        m, k, n = shape_key
+        mu_x, var_x = arr(m, k), arr(m, k, positive=True)
+        mu_w, var_w = arr(k, n, scale=0.1), arr(k, n, positive=True, scale=0.1)
+        return lambda s: ops.pfp_dense_var(mu_x, var_x, mu_w, var_w,
+                                           impl="kernel", schedule=s)
     if op == "attention":
         b, h, hkv, tq, tk, d = shape_key
         q = arr(b, h, tq, d)

@@ -27,13 +27,15 @@ from typing import Dict, Mapping, Optional, Tuple
 # Block-parameter names per op, in canonical order. conv2d_im2col and the
 # batched-expert einsum route through the dense kernel and share its
 # "dense" schedules (keyed on their im2col / per-expert shapes).
-# "dense_first" is the Eq. 13 two-matmul variant (deterministic inputs):
-# same block axes, but a distinct op so its schedules are tuned against
+# "dense_first" is the Eq. 13 two-matmul variant (deterministic inputs)
+# and "dense_var" the Eq. 7 four-matmul 'var' formulation: same block
+# axes, but distinct ops so each variant's schedules are tuned against
 # the kernel that actually runs and never collide with three-matmul
 # entries at the same shape.
 OP_BLOCK_NAMES: Dict[str, Tuple[str, ...]] = {
     "dense": ("block_m", "block_n", "block_k"),
     "dense_first": ("block_m", "block_n", "block_k"),
+    "dense_var": ("block_m", "block_n", "block_k"),
     "attention": ("block_q", "block_k"),
     # KV-cache decode attention (per-batch q_start/kv_len scalars) and its
     # paged variant. Both share the "attention" shape key layout; the paged
@@ -116,6 +118,8 @@ DEFAULT_SCHEDULES: Dict[str, Schedule] = {
     "dense": Schedule.make("dense", block_m=128, block_n=128, block_k=512),
     "dense_first": Schedule.make("dense_first", block_m=128, block_n=128,
                                  block_k=512),
+    "dense_var": Schedule.make("dense_var", block_m=128, block_n=128,
+                               block_k=512),
     "attention": Schedule.make("attention", block_q=128, block_k=128),
     "attention_cache": Schedule.make("attention_cache", block_q=128,
                                      block_k=128),

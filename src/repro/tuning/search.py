@@ -61,17 +61,20 @@ def cost_summary(op: str, shape_key: ShapeKey, schedule: Schedule) -> CostSummar
     if op not in OP_BLOCK_NAMES:
         raise ValueError(f"unknown tunable op {op!r}")
     get = schedule.block
-    if op in ("dense", "dense_first"):
+    if op in ("dense", "dense_first", "dense_var"):
         m, k, n = shape_key
         bm = min(get("block_m", 128), _round_up(m, _SUBLANE))
         bn = min(get("block_n", 128), _round_up(n, _LANE))
         bk = min(get("block_k", 512), _round_up(k, _LANE))
         # Eq. 12 joint kernel: mu/srm tiles for x and w, 3 matmuls, 3
         # accumulators. Eq. 13 first-layer variant: one x tile, mu/var
-        # weight tiles, 2 matmuls, 2 accumulators.
-        n_mm = 3 if op == "dense" else 2
-        x_bufs = 2 if op == "dense" else 1
-        vmem = (x_bufs * bm * bk + 2 * bk * bn + n_mm * bm * bn) * 4
+        # weight tiles, 2 matmuls, 2 accumulators. Eq. 7 'var' variant:
+        # mu/var tiles for both operands, 4 matmuls, 2 accumulators (all
+        # variance terms are additive — no mu^2 correction scratch).
+        n_mm = {"dense": 3, "dense_first": 2, "dense_var": 4}[op]
+        x_bufs = 1 if op == "dense_first" else 2
+        n_acc = 2 if op == "dense_var" else n_mm
+        vmem = (x_bufs * bm * bk + 2 * bk * bn + n_acc * bm * bn) * 4
         flops = n_mm * 2 * m * n * k
         # In the (M/bm, N/bn, K/bk) grid each x tile is re-read once per
         # N-block and each w tile once per M-block (K is the inner
@@ -148,6 +151,7 @@ _DENSE_MENU = {"block_m": (8, 16, 32, 64, 128, 256),
 _AXIS_MENU: Dict[str, Dict[str, Sequence[int]]] = {
     "dense": _DENSE_MENU,
     "dense_first": _DENSE_MENU,
+    "dense_var": _DENSE_MENU,
     "attention": {"block_q": (16, 32, 64, 128, 256),
                   "block_k": (32, 64, 128, 256, 512)},
     "attention_cache": {"block_q": (16, 32, 64, 128, 256),
@@ -171,6 +175,7 @@ _DENSE_DIM = {"block_m": (0, _SUBLANE), "block_n": (2, _LANE),
 _AXIS_DIM = {
     "dense": _DENSE_DIM,
     "dense_first": _DENSE_DIM,
+    "dense_var": _DENSE_DIM,
     "attention": {"block_q": (3, _SUBLANE), "block_k": (4, _SUBLANE)},
     "attention_cache": {"block_q": (3, _SUBLANE), "block_k": (4, _SUBLANE)},
     "attention_paged": {"block_q": (3, _SUBLANE)},

@@ -387,6 +387,7 @@ def test_tuned_schedule_changes_lowering_not_results():
 _VARIANTS = [
     {"dense": dict(block_m=8, block_n=128, block_k=128),
      "dense_first": dict(block_m=8, block_n=128, block_k=128),
+     "dense_var": dict(block_m=8, block_n=128, block_k=128),
      "attention": dict(block_q=16, block_k=32),
      "attention_cache": dict(block_q=16, block_k=32),
      "attention_paged": dict(block_q=16),
@@ -397,6 +398,7 @@ _VARIANTS = [
      "layernorm": dict(block_rows=8)},
     {"dense": dict(block_m=32, block_n=256, block_k=256),
      "dense_first": dict(block_m=32, block_n=256, block_k=256),
+     "dense_var": dict(block_m=32, block_n=256, block_k=256),
      "attention": dict(block_q=32, block_k=64),
      "attention_cache": dict(block_q=32, block_k=64),
      "attention_paged": dict(block_q=32),
@@ -407,6 +409,7 @@ _VARIANTS = [
      "layernorm": dict(block_rows=64)},
     {"dense": dict(block_m=256, block_n=512, block_k=1024),
      "dense_first": dict(block_m=256, block_n=512, block_k=1024),
+     "dense_var": dict(block_m=256, block_n=512, block_k=1024),
      "attention": dict(block_q=256, block_k=512),
      "attention_cache": dict(block_q=256, block_k=512),
      "attention_paged": dict(block_q=256),
