@@ -24,7 +24,17 @@ Row families, emitted through benchmarks/common.py:
                               tokens computed drop by >= the shared
                               fraction, and at an equal tight page budget
                               the sharing engine runs strictly more
-                              requests concurrently.
+                              requests concurrently;
+  serving/speculative/...     the speculative-decoding acceptance row:
+                              mean-only drafts verified by ONE chunked
+                              PFP pass against plain paged decode on the
+                              same trace — bit-for-bit identical tokens
+                              (MI traces within a float tolerance; the
+                              pass shapes differ) at < 1.0 full-PFP
+                              passes per served token, plus the
+                              batched-escalation pair (at most one SVI
+                              pass per engine step, strictly fewer SVI
+                              passes than sequential second opinions).
 
 Quick profile: 32 requests; --full: the acceptance-criteria 200-request
 run. ``python benchmarks/bench_serving.py --page-size 4 8 16`` sweeps
@@ -55,10 +65,12 @@ PAGE_SIZE = 8
 
 
 def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
-                  page_size=None, slots=SLOTS, page_budget=None,
-                  reserve_pages=True, prefix_sharing=False):
+                  svi_mi_abstain=None, page_size=None, slots=SLOTS,
+                  page_budget=None, reserve_pages=True, prefix_sharing=False,
+                  speculate_k=0, batch_escalations=True):
     router = UncertaintyRouter(
         cfg, RouterConfig(mi_continue=mi_continue, mi_abstain=mi_abstain,
+                          svi_mi_abstain=svi_mi_abstain,
                           escalate_samples=4))
     scheduler = RequestScheduler(
         SchedulerConfig(max_queue=256, prefill_chunk=8, prefill_budget=16),
@@ -69,7 +81,9 @@ def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
                                page_size=page_size, page_budget=page_budget,
                                reserve_pages=reserve_pages,
                                auto_defrag=page_size is not None,
-                               prefix_sharing=prefix_sharing),
+                               prefix_sharing=prefix_sharing,
+                               speculate_k=speculate_k,
+                               batch_escalations=batch_escalations),
                   router=router, scheduler=scheduler)
 
 
@@ -243,6 +257,73 @@ def _prefix_reuse_row(lines, cfg, params, *, m=6):
         f";pages={tight}x{ps}"))
 
 
+def _speculative_row(lines, cfg, params, *, n_requests, k=4):
+    """Acceptance row: uncertainty-speculative decoding (mean-only draft,
+    ONE chunked PFP verify per block) against plain paged decode on the
+    SAME Poisson trace. Pinned here: (1) token streams bit-for-bit
+    identical, MI traces within MI_ATOL (the two sides run
+    different-shaped passes — K-wide verify vs 1-wide decode, slot-wide
+    batched SVI vs one-at-a-time — and gemm accumulation order is
+    shape-dependent on this backend, which MI's entropy cancellation
+    amplifies to ~1e-7); (2) < 1.0 full-PFP passes per served token on
+    the low-uncertainty trace; (3) escalation amortization — a
+    force-escalate pair where batched resolution spends at most ONE SVI
+    pass per engine step and strictly fewer passes than the sequential
+    second opinion."""
+    MI_ATOL = 2e-5
+
+    def same_stream(got, want, what):
+        assert set(got) == set(want), f"{what}: request set diverged"
+        for uid in want:
+            g_tok, g_mi = got[uid]
+            w_tok, w_mi = want[uid]
+            assert g_tok == w_tok, f"{what}: uid {uid} tokens diverged"
+            assert len(g_mi) == len(w_mi) and np.allclose(
+                g_mi, w_mi, rtol=0.0, atol=MI_ATOL), (
+                f"{what}: uid {uid} MI trace diverged beyond {MI_ATOL}")
+
+    trace_kw = dict(rate=0.5, vocab_size=cfg.vocab_size, seed=5,
+                    prompt_len=(4, 16), max_new_tokens=(2, 8))
+
+    def run_one(n=n_requests, **ekw):
+        eng = _build_engine(cfg, params, page_size=PAGE_SIZE, **ekw)
+        s = run_load(eng, poisson_trace(n, **trace_kw))
+        assert s["final_occupancy"] == 0, "slot leak in speculative run"
+        assert s["final_live_pages"] == 0, "page leak in speculative run"
+        outs = {r.uid: (list(r.generated), [float(x) for x in r.mi_trace])
+                for r in eng.finished}
+        return s, outs
+
+    s_base, out_base = run_one()
+    s_spec, out_spec = run_one(speculate_k=k)
+    same_stream(out_spec, out_base, "speculative vs plain paged decode")
+    assert s_spec["pfp_passes_per_token"] < 1.0, (
+        f"speculation spent {s_spec['pfp_passes_per_token']:.2f} >= 1.0 "
+        "full-PFP passes per served token")
+    # Escalation amortization under a force-escalate router: sequential
+    # second opinions pay one SVI pass per escalation, the batched pass
+    # at most one per engine step — bit-for-bit identical streams.
+    esc = dict(mi_continue=-1.0, mi_abstain=1e9, svi_mi_abstain=1e9)
+    n_esc = max(n_requests // 2, 8)
+    e_seq, out_seq = run_one(n_esc, batch_escalations=False, **esc)
+    e_bat, out_bat = run_one(n_esc, **esc)
+    same_stream(out_bat, out_seq, "batched vs sequential escalation")
+    assert e_bat["max_svi_passes_per_step"] <= 1
+    assert e_bat["svi_passes"] < e_seq["svi_passes"]
+    lines.append(emit(
+        f"serving/speculative/k{k}/ps{PAGE_SIZE}", s_spec["elapsed_s"],
+        f"tok_bitforbit=1;mi_atol={MI_ATOL:g}"
+        f";accept_rate={s_spec['draft_acceptance_rate']:.3f}"
+        f";acc_per_verify={s_spec['accepted_tokens_per_verify']:.2f}"
+        f";pfp_per_tok={s_spec['pfp_passes_per_token']:.3f}"
+        f";base_pfp_per_tok={s_base['pfp_passes_per_token']:.3f}"
+        f";spec_rounds={s_spec['spec_rounds']}"
+        f";draft_passes={s_spec['draft_passes']}"
+        f";svi_seq={e_seq['svi_passes']};svi_bat={e_bat['svi_passes']}"
+        f";esc_batch={e_bat['mean_escalation_batch']:.2f}"
+        f";max_svi_step={e_bat['max_svi_passes_per_step']}"))
+
+
 def run(quick: bool = True, page_sizes=None):
     lines = []
     cfg = reduced_config(ARCH)
@@ -263,6 +344,10 @@ def run(quick: bool = True, page_sizes=None):
 
     # -- prefix reuse: refcounted COW sharing vs cold prefill --------------
     _prefix_reuse_row(lines, cfg, params, m=6 if quick else 16)
+
+    # -- speculative decode + amortized escalation -------------------------
+    _speculative_row(lines, cfg, params,
+                     n_requests=16 if quick else n_requests)
     return lines
 
 

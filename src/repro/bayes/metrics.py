@@ -29,6 +29,23 @@ def predictive_metrics_from_samples(logits_samples):
             "mean_probs": mean_probs}
 
 
+def predictive_metrics_from_sample_rows(logits_samples):
+    """Row-batched Eq. 1-3 reduction: (B, N, K) -> dict of (B,) arrays.
+
+    Row ``b`` is bit-identical to
+    ``predictive_metrics_from_samples(logits_samples[b, :, None])[...][0]``
+    — a vmap of the per-row reduction, NOT a re-derivation — so callers
+    batching N-sample SVI passes at slot width (the serving engine's
+    amortized escalation) inherit the sequential path's exact numerics.
+    """
+
+    def one(samples):                                        # (N, K)
+        m = predictive_metrics_from_samples(samples[:, None])
+        return {k: v[0] for k, v in m.items()}
+
+    return jax.vmap(one)(logits_samples)
+
+
 def sample_pfp_logits(key, mean, var, num_samples: int):
     """Paper Eq. 11: l ~ N(mu_PFP, sigma^2_PFP) as a post-processing step."""
     std = jnp.sqrt(jnp.maximum(var, 0.0))

@@ -59,6 +59,14 @@ _PREFIX_KEYS = (
     "mean_shared_pages", "final_prefix_held_pages",
 )
 
+_SPEC_KEYS = (
+    "spec_rounds", "draft_tokens", "accepted_draft_tokens",
+    "draft_acceptance_rate", "accepted_tokens_per_verify", "verify_passes",
+    "decode_passes", "draft_passes", "svi_passes", "svi_passes_per_step",
+    "max_svi_passes_per_step", "mean_escalation_batch",
+    "pfp_passes_per_token",
+)
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -111,6 +119,17 @@ def main():
     ap.add_argument("--expect-prefix-hits", action="store_true",
                     help="exit nonzero unless at least one admission "
                          "mapped shared prefix pages (CI smoke)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="uncertainty-speculative decoding: draft K tokens "
+                         "per slot with a mean-only pass and verify the "
+                         "block with ONE chunked PFP pass (paged only); "
+                         "the run is checked bit-for-bit against a plain "
+                         "engine on the same trace")
+    ap.add_argument("--expect-accept-rate", type=float, default=None,
+                    metavar="R",
+                    help="exit nonzero if the draft acceptance rate falls "
+                         "below R (CI: prove speculation actually "
+                         "amortizes verify passes)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--mi-continue", type=float, default=0.5)
     ap.add_argument("--mi-abstain", type=float, default=3.0)
@@ -140,22 +159,28 @@ def main():
         SchedulerConfig(prefill_chunk=args.prefill_chunk,
                         prefill_budget=2 * args.prefill_chunk),
         max_len=max_len)
-    trace = poisson_trace(
-        args.requests, args.rate, vocab_size=cfg.vocab_size, seed=args.seed,
-        prompt_len=(max(2, args.prompt_len // 2), args.prompt_len),
-        max_new_tokens=(max(1, args.tokens // 2), args.tokens))
-    if args.common_prefix:
-        # one fixed system prefix across the whole trace (deterministic),
-        # so requests share their leading pages once a donor finishes
-        import numpy as np
-        system = (np.arange(args.common_prefix, dtype=np.int32)
-                  % cfg.vocab_size)
-        for r in trace:
-            n = min(args.common_prefix, len(r.prompt) - 1)
-            r.prompt[:n] = system[:n]
+    def make_trace():
+        # Regenerable: run_load mutates the Request objects, so the
+        # speculative parity check below needs a fresh copy per engine.
+        trace = poisson_trace(
+            args.requests, args.rate, vocab_size=cfg.vocab_size,
+            seed=args.seed,
+            prompt_len=(max(2, args.prompt_len // 2), args.prompt_len),
+            max_new_tokens=(max(1, args.tokens // 2), args.tokens))
+        if args.common_prefix:
+            # one fixed system prefix across the whole trace
+            # (deterministic), so requests share their leading pages once
+            # a donor finishes
+            import numpy as np
+            system = (np.arange(args.common_prefix, dtype=np.int32)
+                      % cfg.vocab_size)
+            for r in trace:
+                n = min(args.common_prefix, len(r.prompt) - 1)
+                r.prompt[:n] = system[:n]
+        return trace
 
-    with mesh:
-        engine = Engine(
+    def build_engine(speculate_k):
+        return Engine(
             cfg, params,
             # bf16 activations, mirroring the decode_* dry-run programs
             # (serving/decode.py) whose executed version this driver is
@@ -166,17 +191,24 @@ def main():
                          reserve_pages=not args.optimistic_pages,
                          auto_defrag=args.page_size is not None,
                          prefix_sharing=args.prefix_sharing,
-                         prefix_retention_pages=args.prefix_retention),
+                         prefix_retention_pages=args.prefix_retention,
+                         speculate_k=speculate_k),
             router=router, scheduler=scheduler, mesh=mesh)
-        summary = run_load(engine, trace)
+
+    with mesh:
+        engine = build_engine(args.speculate)
+        summary = run_load(engine, make_trace())
 
     layout = (f"paged/ps={args.page_size}" if args.page_size else "contiguous")
     if args.prefix_sharing:
         layout += "/prefix"
+    if args.speculate:
+        layout += f"/spec-k{args.speculate}"
     print(f"== engine summary ({cfg.name}, mesh={dims}, "
           f"impl={args.impl or 'default'}, kv={layout}) ==")
     keys = _SUMMARY_KEYS + (_PAGED_KEYS if args.page_size else ()) + \
-        (_PREFIX_KEYS if args.prefix_sharing else ())
+        (_PREFIX_KEYS if args.prefix_sharing else ()) + \
+        (_SPEC_KEYS if args.speculate else ())
     for k in keys:
         v = summary[k]
         print(f"  {k:22s} {v:.4g}" if isinstance(v, float)
@@ -225,6 +257,38 @@ def main():
               "prefix pages (trace lacks a common prefix, or donors never "
               "finished before sharers arrived)", file=sys.stderr)
         return 1
+    if args.speculate:
+        # The speculative stream must serve exactly what plain decode
+        # serves: tokens and finish reasons bit-for-bit; MI traces within
+        # a float tolerance (a K-wide verify and a 1-wide decode pass
+        # accumulate their gemms in different orders, and MI's entropy
+        # cancellation amplifies those ulps to ~1e-7 — a real
+        # verify/rollback bug moves MI by orders of magnitude more).
+        import numpy as np
+        with mesh:
+            plain = build_engine(0)
+            run_load(plain, make_trace())
+        out = lambda e: {r.uid: (list(r.generated),  # noqa: E731
+                                 [float(m) for m in r.mi_trace],
+                                 r.finish_reason) for r in e.finished}
+        got, want = out(engine), out(plain)
+        same = set(got) == set(want) and all(
+            (got[u][0], got[u][2]) == (want[u][0], want[u][2])
+            and len(got[u][1]) == len(want[u][1])
+            and np.allclose(got[u][1], want[u][1], rtol=0.0, atol=2e-5)
+            for u in want)
+        if not same:
+            print("ERROR: speculative decode diverged from plain decode "
+                  "(tokens differ, or MI traces beyond 2e-5)",
+                  file=sys.stderr)
+            return 1
+        if args.expect_accept_rate is not None and \
+                summary["draft_acceptance_rate"] < args.expect_accept_rate:
+            print("ERROR: draft acceptance rate "
+                  f"{summary['draft_acceptance_rate']:.3f} below the "
+                  f"--expect-accept-rate {args.expect_accept_rate} floor",
+                  file=sys.stderr)
+            return 1
     print(f"served {summary['completed']} requests "
           f"({summary['tokens_generated']} tokens) — one PFP pass per decode "
           "step; escalations spent SVI samples only on gray-zone tokens.")

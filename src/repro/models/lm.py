@@ -16,6 +16,7 @@ The same definition serves three programs:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Optional
 
@@ -513,6 +514,35 @@ def decode_step(params, cfg: ModelConfig, inputs, states, ctx: Context):
     """
     logits, _, new_states = forward(
         params, cfg, inputs, ctx, states=dict(states), collect_states=True)
+    return logits, new_states
+
+
+def draft_decode_step(params, cfg: ModelConfig, inputs, states,
+                      ctx: Context = None):
+    """Mean-only (zero-variance) decode pass for speculative drafting.
+
+    Runs :func:`decode_step` in ``Mode.DETERMINISTIC`` — every weight is
+    its posterior mean, no variance is propagated — so the pass costs a
+    plain point-estimate forward instead of a full PFP moment pass. On a
+    Gaussian KV pool the deterministic path writes ``v_var = 0`` rows;
+    draft writes are throwaway (the verify pass re-feeds the drafted
+    tokens through the real PFP pass and overwrites the same rows, or the
+    caller discards ``new_states`` outright), so the zero-variance rows
+    never reach a served computation. Returns ``(mean_logits, new_states)``
+    with ``mean_logits`` a plain (B, T, V) array.
+
+    The same ``inputs`` dict as :func:`decode_step` also serves the
+    block-verify pass: feed the K drafted tokens as a (B, K) chunk with
+    ``cache_len``/``write_start`` bounding the writable window and a
+    full-PFP ``Context`` — chunked paged attention masks by absolute
+    position, so the multi-token window is causally exact and, on this
+    backend, bit-identical to K sequential single-token passes.
+    """
+    dctx = (dataclasses.replace(ctx, mode=Mode.DETERMINISTIC)
+            if ctx is not None else Context(mode=Mode.DETERMINISTIC))
+    logits, new_states = decode_step(params, cfg, inputs, states, dctx)
+    if is_gaussian(logits):
+        logits = logits.mean
     return logits, new_states
 
 

@@ -162,6 +162,13 @@ def attention_apply(
         # re-fed window's overlap with a copy-on-write-shared prompt
         # prefix — the shared pages already hold the identical k/v rows,
         # and writing through would force a pointless private copy.
+        # Speculative verify leans on the same two redirects: a chunked
+        # verify window writes its K drafted rows through this path, and
+        # rejected rows need no explicit rollback — the engine simply does
+        # not advance ``cache_len`` past the accepted prefix, so the next
+        # pass masks the stale rows out of attention and re-feeds their
+        # positions (overwriting them in place, or trash-redirecting via
+        # the same ``writable`` test if they fall outside the window).
         writable = positions < cache_len[:, None]
         if write_start is not None:
             writable = jnp.logical_and(writable,

@@ -10,7 +10,9 @@ from repro.serving.engine.metrics import EngineMetrics, percentile
 from repro.serving.engine.prefix import PrefixIndex, PrefixNode
 from repro.serving.engine.router import (Decision, RouterConfig,
                                          UncertaintyRouter,
-                                         make_svi_fallback)
+                                         make_svi_fallback,
+                                         make_svi_fallback_batched,
+                                         svi_fallback_cache_clear)
 from repro.serving.engine.scheduler import (RequestScheduler, SchedulerConfig,
                                             pages_for)
 from repro.serving.engine.state import DecodeStatePool, PagedDecodeStatePool
@@ -21,6 +23,7 @@ __all__ = [
     "DecodeStatePool", "PagedDecodeStatePool",
     "PrefixIndex", "PrefixNode",
     "UncertaintyRouter", "RouterConfig", "Decision", "make_svi_fallback",
+    "make_svi_fallback_batched", "svi_fallback_cache_clear",
     "EngineMetrics", "percentile",
     "poisson_trace", "run_load",
 ]

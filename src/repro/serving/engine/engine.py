@@ -89,6 +89,21 @@ class EngineConfig:
     #                                finished; None = the whole page budget
     #                                (the index yields pages to admissions
     #                                on demand either way)
+    # -- uncertainty-speculative decoding (paged engines only) --------------
+    speculate_k: int = 0           # 0 = off. K >= 1: each decode round
+    #                                drafts K-1 tokens with a mean-only
+    #                                (zero-variance) pass, then verifies the
+    #                                K-token block (served-but-unfed head +
+    #                                drafts) with ONE chunked PFP pass and
+    #                                serves the verified tokens greedily
+    #                                while routing says CONTINUE
+    batch_escalations: bool = True  # paged: resolve every slot the router
+    #                                escalates in a step with ONE lockstep
+    #                                N-sample SVI pass (per-(request, token)
+    #                                keying makes each slot's second opinion
+    #                                match the sequential calls — tokens
+    #                                exactly, MI to float precision);
+    #                                contiguous engines always go sequential
 
 
 @dataclasses.dataclass
@@ -114,6 +129,11 @@ class _Slot:
     # already cached — the paged insert redirects re-fed writes there to
     # the trash page, and prefill starts here).
     write_start: int = 0
+    # Speculative decode: the one token already SERVED (appended to
+    # generated, MI recorded) but not yet fed — the head of the next
+    # draft+verify block. None when the slot's current logits are fresh
+    # (the next step routes them in phase 0 instead).
+    pending: Optional[int] = None
 
 
 class Engine:
@@ -193,6 +213,21 @@ class Engine:
         self._decode_fn = jax.jit(self._decode_step_paged if self.paged
                                   else self._decode_step)
         self._set_row = jax.jit(lambda buf, slot, row: buf.at[slot].set(row))
+        if config.speculate_k:
+            if config.speculate_k < 1:
+                raise ValueError("speculate_k must be >= 1 (or 0 = off)")
+            if not self.paged:
+                raise ValueError(
+                    "speculative decoding requires the paged Gaussian "
+                    "KV-cache (set page_size): the chunked verify pass "
+                    "leans on trash-page write redirection to leave "
+                    "rejected rows rollback-free")
+        self._draft_fn = jax.jit(self._draft_steps)
+        self._verify_fn = jax.jit(self._verify_step)
+        # Test hook: fn((B, K-1) drafted tokens) -> replacement array.
+        # Forcing drafts to always/never match the verified tokens pins the
+        # acceptance extremes in the bit-for-bit parity tests.
+        self._draft_override = None
 
         # Uncertainty sampling is keyed per (request uid, token index), NOT
         # per engine step: a request's MI trace (and sampled tokens, when
@@ -212,6 +247,34 @@ class Engine:
             return jax.vmap(row)(lm_mean, lm_var, uids, tok_idx)
 
         self._unc = jax.jit(_unc_batch)
+
+        # Block variant for speculative verify: (B, K, V) logit moments in,
+        # (B, K) (token, mi) out. Row (b, i) runs the exact per-token
+        # computation of ``_unc_batch`` under key fold_in(fold_in(base,
+        # uid), tok0 + i) — the same per-(request, token) derivation — so
+        # the verified trace reproduces decoding the block one token at a
+        # time (tokens exactly; MI to float precision, since the K-wide
+        # verify pass accumulates its gemms in a different order than the
+        # 1-wide decode pass).
+        def _unc_block_batch(lm_mean, lm_var, base_key, uids, tok0):
+            def row(mean, var, uid, t0):
+                def one(m, v, i):
+                    key = jax.random.fold_in(
+                        jax.random.fold_in(base_key, uid), t0 + i)
+                    out = uncertainty_decode(
+                        m[None, None], v[None, None], key,
+                        num_uncertainty_samples=config.
+                        num_uncertainty_samples,
+                        mi_threshold=self.router.config.mi_abstain,
+                        greedy=config.greedy)
+                    return out.token[0], out.mutual_info[0]
+
+                idx = jnp.arange(mean.shape[0], dtype=jnp.int32)
+                return jax.vmap(one)(mean, var, idx)
+
+            return jax.vmap(row)(lm_mean, lm_var, uids, tok0)
+
+        self._unc_block = jax.jit(_unc_block_batch)
 
     # -- jitted device programs ---------------------------------------------
     def _ctx(self) -> Context:
@@ -281,6 +344,46 @@ class Engine:
             var.astype(jnp.float32), out_idx[:, None, None], axis=1)[:, 0]
         return (jnp.where(done[:, None], mean, lm_mean),
                 jnp.where(done[:, None], var, lm_var), new_states)
+
+    def _draft_steps(self, params, head, positions, states, table):
+        """K-1 mean-only (zero-variance) draft decode steps over the shared
+        page pool: a ``lax.scan`` of :func:`lm.draft_decode_step`, each
+        step feeding the previous argmax. Returns the (K-1, B) drafted
+        tokens; the scanned state updates (det-mode k/v rows) are DISCARDED
+        — only the verify pass's PFP rows ever reach ``pool.states``, so a
+        draft can never leave zero-variance rows behind. Rows not drafting
+        this round run at position 0 over their own (or the trash) pages;
+        their proposals are ignored."""
+
+        def body(carry, i):
+            tok, st = carry
+            inputs = {"tokens": tok[:, None],
+                      "positions": (positions + i)[:, None],
+                      "cache_len": positions + i + 1,
+                      "page_table": table}
+            logits, st = lm.draft_decode_step(params, self.cfg, inputs, st,
+                                              self._ctx())
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return (nxt, st), nxt
+
+        _, drafts = jax.lax.scan(
+            body, (head, states),
+            jnp.arange(self.config.speculate_k - 1, dtype=jnp.int32))
+        return drafts
+
+    def _verify_step(self, params, inputs, states):
+        """ONE chunked PFP pass over each slot's (B, K) speculative block —
+        the chunked-prefill machinery pointed at decode: logit means AND
+        variances for every block position, plus the pool with all fed
+        rows' PFP k/v written (``cache_len`` bounds the writable window;
+        pad rows land on the trash page). Rows the acceptance scan rejects
+        need no rollback — the engine simply leaves ``positions`` at the
+        accepted prefix, so stale rows stay masked until re-fed."""
+        logits, new_states = lm.decode_step(params, self.cfg, inputs, states,
+                                            self._ctx())
+        mean, var = self._split_logits(logits)
+        return (mean.astype(jnp.float32), var.astype(jnp.float32),
+                new_states)
 
     # -- public API ---------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -563,11 +666,10 @@ class Engine:
                     }
                     sl.replay = (pre_states, row, int(out_idx[slot]))
 
-    def _route_and_decode(self, now: float) -> None:
-        decode_slots = [slot for slot, sl in enumerate(self._slots)
-                        if sl is not None and sl.phase == "decode"]
-        if not decode_slots:
-            return
+    def _route_current(self, decode_slots):
+        """Route every listed slot's CURRENT logits: one keyed uncertainty
+        pass + one (batched, when paged) SVI resolution of the slots the
+        router escalates. Returns {slot: (token, mi, decision)}."""
         uids = np.zeros(self.config.slots, np.int32)
         tok_idx = np.zeros(self.config.slots, np.int32)
         for slot in decode_slots:
@@ -576,19 +678,25 @@ class Engine:
             tok_idx[slot] = len(req.generated)
         toks, mis = self._unc(self._lm_mean, self._lm_var, self._key_unc,
                               jnp.asarray(uids), jnp.asarray(tok_idx))
-        tok_np = np.asarray(toks)
-        mi_np = np.asarray(mis)
+        return self._resolve_escalations(decode_slots, np.asarray(toks),
+                                         np.asarray(mis))
+
+    def _route_and_decode(self, now: float) -> None:
+        if self.config.speculate_k:
+            self._route_and_decode_spec(now)
+            return
+        decode_slots = [slot for slot, sl in enumerate(self._slots)
+                        if sl is not None and sl.phase == "decode"]
+        if not decode_slots:
+            return
+        resolved = self._route_current(decode_slots)
 
         feed = np.zeros(self.config.slots, np.int32)
         active = np.zeros(self.config.slots, bool)
         for slot in decode_slots:
             sl = self._slots[slot]
             req = sl.request
-            mi = float(mi_np[slot])
-            tok = int(tok_np[slot])
-            decision = self.router.route(mi)
-            if decision is Decision.ESCALATE:
-                tok, mi, decision = self._escalate(slot, sl, mi)
+            tok, mi, decision = resolved[slot]
             if decision is Decision.ABSTAIN:
                 req.mi_trace.append(mi)
                 req.abstained = True
@@ -637,32 +745,360 @@ class Engine:
         else:
             self._lm_mean, self._lm_var, self.pool.states = self._decode_fn(
                 *args, self._lm_mean, self._lm_var)
+        self.metrics.on_decode_pass()
         self.pool.positions[active] += 1
         for slot in np.flatnonzero(active):
             self._slots[slot].replay = None  # replay via _prev_states now
 
+    # -- uncertainty-speculative decoding ------------------------------------
+    def _route_and_decode_spec(self, now: float) -> None:
+        """The speculative decode round, replacing the one-token lockstep:
+
+        phase 0  slots whose current logits are FRESH (just prefetched or
+                 escalate-deferred) route them exactly like the plain
+                 engine — serve/abstain/escalate under the same keys — but
+                 a served token becomes the slot's ``pending`` head
+                 instead of a one-token feed;
+        phase 1  every slot holding a pending head drafts K-1 more tokens
+                 with the mean-only pass and the whole (head + drafts)
+                 block is verified by ONE chunked PFP pass; verified
+                 tokens are served greedily while the router says
+                 CONTINUE and the next draft matches.
+
+        Every served (token, mi) is keyed per (request uid, token index),
+        so the generated tokens are bit-for-bit the plain engine's (MI
+        traces to float precision — the pass shapes differ) — speculation
+        only changes how many full-PFP passes it takes to produce
+        them."""
+        decode_slots = [slot for slot, sl in enumerate(self._slots)
+                        if sl is not None and sl.phase == "decode"]
+        if not decode_slots:
+            return
+        route_slots = [s for s in decode_slots
+                       if self._slots[s].pending is None]
+        if route_slots:
+            resolved = self._route_current(route_slots)
+            for slot in route_slots:
+                sl = self._slots[slot]
+                req = sl.request
+                tok, mi, decision = resolved[slot]
+                if decision is Decision.ABSTAIN:
+                    req.mi_trace.append(mi)
+                    req.abstained = True
+                    self._finish(slot, "abstain", now)
+                    continue
+                req.generated.append(tok)
+                req.mi_trace.append(mi)
+                self.metrics.on_token()
+                if self.config.eos_id is not None and \
+                        tok == self.config.eos_id:
+                    self._finish(slot, "eos", now)
+                elif len(req.generated) >= req.max_new_tokens:
+                    self._finish(slot, "length", now)
+                else:
+                    sl.pending = tok
+        spec_slots = [s for s in decode_slots
+                      if self._slots[s] is not None
+                      and self._slots[s].pending is not None]
+        if spec_slots:
+            self._speculative_round(spec_slots, now)
+
+    def _speculative_round(self, spec_slots, now: float) -> None:
+        """Draft K-1 tokens per pending slot, verify the K-token block
+        with one chunked PFP pass, accept greedily."""
+        k = self.config.speculate_k
+        b = self.config.slots
+        # Per-slot block width: the pending head plus up to K-1 drafts,
+        # clipped so a fully-accepted block lands exactly on the request's
+        # generation budget (fed positions then never pass max_len - 1).
+        f_of = {}
+        for slot in list(spec_slots):
+            sl = self._slots[slot]
+            if sl is None:
+                continue  # preempted as a page victim below
+            req = sl.request
+            # generation budget left (>= 1: a slot at its budget finished
+            # in phase 0); a fully-accepted block lands exactly on it
+            f = min(k, req.max_new_tokens - len(req.generated))
+            pos = int(self.pool.positions[slot])
+            if not self._ensure_pages(slot, pos + f) and \
+                    not self._make_room(slot, pos + f):
+                self._preempt(slot)
+                continue
+            f_of[slot] = f
+        live = [s for s in spec_slots
+                if self._slots[s] is not None and s in f_of]
+        if not live:
+            return
+
+        head = np.zeros(b, np.int32)
+        pos0 = np.zeros(b, np.int32)
+        for slot in live:
+            head[slot] = self._slots[slot].pending
+            pos0[slot] = self.pool.positions[slot]
+        table = self.pool.device_table()
+        drafts = np.zeros((b, max(k - 1, 0)), np.int32)
+        if k > 1:
+            drafts = np.asarray(self._draft_fn(
+                self.params, jnp.asarray(head), jnp.asarray(pos0),
+                self.pool.states, table)).T          # (K-1, B) -> (B, K-1)
+            self.metrics.on_draft_pass(k - 1)
+        if self._draft_override is not None:
+            drafts = self._draft_override(drafts)
+
+        # ONE chunked PFP verify pass over every block. Pad rows (beyond a
+        # slot's width, or whole rows for slots not speculating) carry
+        # positions at/past cache_len or an all-trash table row, so the
+        # pool is only written through live blocks' own pages.
+        tokens = np.zeros((b, k), np.int32)
+        positions = np.tile(np.arange(k, dtype=np.int32), (b, 1))
+        cache_len = np.ones(b, np.int32)
+        write_start = np.zeros(b, np.int32)
+        vtable = np.zeros_like(self.pool.page_table)
+        uids = np.zeros(b, np.int32)
+        tok0 = np.zeros(b, np.int32)
+        fed_of = {}
+        for slot in live:
+            sl = self._slots[slot]
+            f = f_of[slot]
+            fed = [int(head[slot])] + [int(t) for t in drafts[slot, :f - 1]]
+            fed_of[slot] = fed
+            tokens[slot, :f] = fed
+            positions[slot] = pos0[slot] + np.arange(k, dtype=np.int32)
+            cache_len[slot] = pos0[slot] + f
+            write_start[slot] = sl.write_start
+            vtable[slot] = self.pool.page_table[slot]
+            uids[slot] = sl.request.uid & 0x7FFFFFFF
+            tok0[slot] = len(sl.request.generated)
+        inputs = {
+            "tokens": jnp.asarray(tokens),
+            "positions": jnp.asarray(positions),
+            "cache_len": jnp.asarray(cache_len),
+            "write_start": jnp.asarray(write_start),
+            "page_table": jnp.asarray(vtable, jnp.int32),
+        }
+        vmean, vvar, self.pool.states = self._verify_fn(
+            self.params, inputs, self.pool.states)
+        self.metrics.on_verify_pass()
+        btoks, bmis = self._unc_block(vmean, vvar, self._key_unc,
+                                      jnp.asarray(uids), jnp.asarray(tok0))
+        tok_np = np.asarray(btoks)
+        mi_np = np.asarray(bmis)
+
+        drafted_total = accepted_total = 0
+        for slot in live:
+            sl = self._slots[slot]
+            req = sl.request
+            f = f_of[slot]
+            fed = fed_of[slot]
+            a = f                    # fed rows that stay valid
+            finish_reason = None
+            defer_row = None
+            for i in range(f):
+                mi = float(mi_np[slot, i])
+                tok = int(tok_np[slot, i])
+                decision = self.router.route(mi)
+                if decision is Decision.ESCALATE:
+                    # Stop UNSERVED: row i's logits become the slot's
+                    # current logits and next step's phase 0 — same
+                    # (uid, token) key, same MI — escalates them into
+                    # that step's single batched SVI pass.
+                    a = i + 1
+                    sl.pending = None
+                    sl.last_input = fed[i]
+                    defer_row = i
+                    break
+                if decision is Decision.ABSTAIN:
+                    req.mi_trace.append(mi)
+                    req.abstained = True
+                    a = i + 1
+                    finish_reason = "abstain"
+                    break
+                req.generated.append(tok)
+                req.mi_trace.append(mi)
+                self.metrics.on_token()
+                if self.config.eos_id is not None and \
+                        tok == self.config.eos_id:
+                    a = i + 1
+                    finish_reason = "eos"
+                    break
+                if len(req.generated) >= req.max_new_tokens:
+                    a = i + 1
+                    finish_reason = "length"
+                    break
+                if i + 1 < f and tok == fed[i + 1]:
+                    continue         # draft confirmed; row i+1 stays valid
+                # Draft mismatch (or block exhausted): the verified token
+                # is served but unfed — it heads the next block. Rows past
+                # i are stale; they sit masked past ``positions`` until
+                # re-fed (rollback-to-trash, no device work).
+                a = i + 1
+                sl.pending = tok
+                sl.last_input = fed[i]
+                break
+            drafted_total += f - 1
+            accepted_total += a - 1
+            self.pool.positions[slot] = int(pos0[slot]) + a
+            sl.replay = None
+            if defer_row is not None:
+                self._lm_mean = self._set_row(self._lm_mean, slot,
+                                              vmean[slot, defer_row])
+                self._lm_var = self._set_row(self._lm_var, slot,
+                                             vvar[slot, defer_row])
+            if finish_reason is not None:
+                self._finish(slot, finish_reason, now)
+        self.metrics.on_spec_round(drafted_total, accepted_total)
+
+    # -- escalation ----------------------------------------------------------
+    def _resolve_escalations(self, decode_slots, tok_np, mi_np):
+        """Route each slot's (token, MI); resolve every ESCALATE with the
+        SVI second opinion — ONE lockstep pass at slot width on paged
+        engines (``batch_escalations``), a per-slot call otherwise.
+        Returns {slot: (token, mi, decision)} with ESCALATE already
+        replaced by the second opinion's CONTINUE/ABSTAIN."""
+        out = {}
+        esc = []
+        for slot in decode_slots:
+            mi = float(mi_np[slot])
+            tok = int(tok_np[slot])
+            decision = self.router.route(mi)
+            if decision is Decision.ESCALATE:
+                esc.append(slot)
+            else:
+                out[slot] = (tok, mi, decision)
+        if esc:
+            if self.paged and self.config.batch_escalations:
+                out.update(self._escalate_batched(esc))
+            else:
+                for slot in esc:
+                    out[slot] = self._escalate(slot, self._slots[slot],
+                                               float(mi_np[slot]))
+        return out
+
+    def _escalate_batched(self, esc_slots):
+        """ONE lockstep N-sample SVI pass resolving every escalating
+        slot's second opinion — the way batched prefill amortizes chunk
+        passes. Every row replays the inputs that produced its current
+        logits (the stored prefill chunk, or the last fed token padded to
+        chunk width with masked rows) against the CURRENT pool: pages are
+        refcounted and copy-on-write, so no other slot can have touched
+        this slot's rows, and the replay functionally rewrites its own
+        window before attending — bit-identical to the sequential replay
+        against the pre-step snapshot. Returns {slot: (tok, mi,
+        decision)}."""
+        b = self.config.slots
+        c = self.scheduler.config.prefill_chunk
+        tokens = np.zeros((b, c), np.int32)
+        positions = np.zeros((b, c), np.int32)
+        cache_len = np.ones(b, np.int32)     # idle rows: one trash row
+        write_start = np.zeros(b, np.int32)
+        table = np.zeros_like(self.pool.page_table)
+        uids = np.zeros(b, np.int32)
+        tok_idx = np.zeros(b, np.int32)
+        out_idx = np.zeros(b, np.int32)
+        for slot in esc_slots:
+            sl = self._slots[slot]
+            self.metrics.on_escalation()
+            sl.request.escalated += 1
+            uids[slot] = sl.request.uid & 0x7FFFFFFF
+            tok_idx[slot] = len(sl.request.generated)
+            if sl.replay is not None:
+                # logits came from a prefill chunk: replay its stored
+                # (1, C) inputs verbatim (widths match — chunks ARE C)
+                _, row, oi = sl.replay
+                tokens[slot] = np.asarray(row["tokens"][0])
+                positions[slot] = np.asarray(row["positions"][0])
+                cache_len[slot] = int(np.asarray(row["cache_len"][0]))
+                write_start[slot] = int(np.asarray(row["write_start"][0]))
+                table[slot] = self.pool.page_table[slot]
+                out_idx[slot] = oi
+                continue
+            # mid-decode: the trailing fed-token window (_replay_window),
+            # the SAME construction the sequential path replays — the
+            # window widths match, so the only accumulation difference
+            # left is the batch width (ulp-level; tokens agree exactly,
+            # MI to float precision)
+            toks_w, pos_w, clen_w, oi = self._replay_window(slot, sl)
+            tokens[slot] = toks_w[0]
+            positions[slot] = pos_w[0]
+            cache_len[slot] = clen_w[0]
+            table[slot] = self.pool.page_table[slot]
+            out_idx[slot] = oi
+        inputs = {
+            "tokens": jnp.asarray(tokens),
+            "positions": jnp.asarray(positions),
+            "cache_len": jnp.asarray(cache_len),
+            "write_start": jnp.asarray(write_start),
+            "page_table": jnp.asarray(table, jnp.int32),
+        }
+        stoks, smis = self.router.second_opinion_batched(
+            self.params, inputs, self.pool.states, self._key_esc,
+            uids, tok_idx, out_idx)
+        self.metrics.on_svi_pass(len(esc_slots))
+        stok_np = np.asarray(stoks)
+        smi_np = np.asarray(smis)
+        out = {}
+        for slot in esc_slots:
+            mi = float(smi_np[slot])
+            decision = (Decision.ABSTAIN if mi >= self.router.svi_mi_abstain
+                        else Decision.CONTINUE)
+            out[slot] = (int(stok_np[slot]), mi, decision)
+        return out
+
+    def _replay_window(self, slot: int, sl: _Slot):
+        """Chunk-style SVI replay window for a mid-decode escalation: the
+        last ``prefill_chunk`` fed tokens ending at the slot's position
+        (right-padded past cache_len while fewer have been fed) — the SAME
+        shape as a stored prefill-chunk replay. One window width keeps
+        every escalation replay in one compiled program, which is what
+        keeps the batched second opinion aligned with the sequential
+        one: this backend's width-1 and width-C passes accumulate
+        differently (the residual batch-width difference stays at ulp
+        level). Hybrid (recurrent) models keep the exact one-token
+        window — re-feeding consumed tokens would advance their carries
+        twice — and they never take the batched path (it is paged-only).
+        Returns (tokens (1, w), positions (1, w), cache_len (1,),
+        out_idx)."""
+        pos = int(self.pool.positions[slot])
+        c = (self.scheduler.config.prefill_chunk
+             if all(b == "attn" for b in self.cfg.pattern) else 1)
+        lo = max(0, pos - c)
+        window = self._request_tokens(sl.request)[lo:pos]
+        tokens = np.zeros(c, np.int32)
+        tokens[:len(window)] = window
+        positions = lo + np.arange(c, dtype=np.int32)
+        return (tokens[None], positions[None],
+                np.asarray([pos], np.int32), len(window) - 1)
+
     def _replay_for(self, slot: int, sl: _Slot):
         """(substate, inputs, out_idx) reproducing the pass that made the
         slot's current logits: the pre-chunk snapshot + chunk inputs right
-        after prefill, else last_input against the pre-decode pool. Paged
-        engines replay against the WHOLE pre-step page pool (there is no
-        per-slot state to extract) with the slot's page-table row doing
-        the selection."""
+        after prefill, else the trailing fed-token window against the
+        pre-decode pool. Paged engines replay against the WHOLE pre-step
+        page pool (there is no per-slot state to extract) with the slot's
+        page-table row doing the selection."""
         if sl.replay is not None:
             return sl.replay
-        pos = int(self.pool.positions[slot])
+        tokens, positions, cache_len, out_idx = self._replay_window(slot, sl)
         inputs = {
-            "tokens": jnp.asarray([[sl.last_input]], jnp.int32),
-            "positions": jnp.asarray([[pos - 1]], jnp.int32),
-            "cache_len": jnp.asarray([pos], jnp.int32),
+            "tokens": jnp.asarray(tokens),
+            "positions": jnp.asarray(positions),
+            "cache_len": jnp.asarray(cache_len),
         }
         if self.paged:
             inputs["page_table"] = self.pool.device_table(
                 np.asarray([slot], np.int32))
-            return self._prev_states, inputs, 0
+            # Speculative mode replays against the CURRENT pool: the
+            # verify pass writes several rows per step, so the pre-step
+            # snapshot is missing this slot's accepted rows. The replay
+            # functionally rewrites its whole window before attending and
+            # masks everything past cache_len, so the states swap is exact.
+            if self.config.speculate_k:
+                return self.pool.states, inputs, out_idx
+            return self._prev_states, inputs, out_idx
         sub = lm.take_decode_slots(self._prev_states,
                                    np.asarray([slot], np.int32))
-        return sub, inputs, 0
+        return sub, inputs, out_idx
 
     def _escalate(self, slot: int, sl: _Slot, pfp_mi: float):
         """SVI second opinion for one gray-zone token. Returns the final
@@ -678,6 +1114,7 @@ class Engine:
             len(sl.request.generated))
         stok, smi = self.router.second_opinion(
             self.params, inputs, sub, key, out_idx=out_idx)
+        self.metrics.on_svi_pass(1)
         mi = float(smi)
         if mi >= self.router.svi_mi_abstain:
             return int(stok), mi, Decision.ABSTAIN

@@ -66,6 +66,18 @@ class EngineMetrics:
         self.prefix_shared_pages = 0   # pages mapped shared at admission
         self.prefill_tokens_saved = 0  # prompt tokens NOT prefilled (shared)
         self.cow_copies = 0            # copy-on-write page duplications
+        # Speculative-decode + amortized-escalation telemetry (stays zero
+        # when speculation is off and no slot escalates).
+        self.spec_rounds = 0           # draft->verify->accept rounds run
+        self.draft_tokens = 0          # tokens proposed by the mean draft
+        self.accepted_draft_tokens = 0  # drafted tokens served after verify
+        self.verify_passes = 0         # chunked PFP block-verify passes
+        self.decode_passes = 0         # plain (1-token) PFP decode passes
+        self.draft_passes = 0          # mean-only draft decode passes
+        self.svi_passes = 0            # SVI second-opinion passes launched
+        self.escalation_batches = []   # slots resolved per batched SVI pass
+        self.svi_pass_trace: List[int] = []   # SVI passes per engine step
+        self._svi_passes_prev = 0
         self._admit_times = {}     # uid -> (arrival_step, admit_step, wall_t0)
         self._t0: Optional[float] = None
 
@@ -126,6 +138,29 @@ class EngineMetrics:
     def on_cow(self, n: int = 1) -> None:
         self.cow_copies += n
 
+    def on_spec_round(self, drafted: int, accepted: int) -> None:
+        """One draft->verify->accept round: ``drafted`` tokens proposed by
+        the mean-only draft, ``accepted`` of them served after the chunked
+        PFP verify (the verify pass itself lands via on_verify_pass)."""
+        self.spec_rounds += 1
+        self.draft_tokens += drafted
+        self.accepted_draft_tokens += accepted
+
+    def on_verify_pass(self, n: int = 1) -> None:
+        self.verify_passes += n
+
+    def on_decode_pass(self, n: int = 1) -> None:
+        self.decode_passes += n
+
+    def on_draft_pass(self, n: int = 1) -> None:
+        self.draft_passes += n
+
+    def on_svi_pass(self, batch: int = 1) -> None:
+        """One SVI second-opinion launch resolving ``batch`` slots at once
+        (the sequential path calls this with batch=1 per escalation)."""
+        self.svi_passes += 1
+        self.escalation_batches.append(batch)
+
     def on_step(self, occupancy: int,
                 pages: Optional[Tuple[int, ...]] = None) -> None:
         """``pages``: (live_pages, total_pages, fragmented_pages) — plus
@@ -137,6 +172,10 @@ class EngineMetrics:
         if pages is not None:
             self.page_trace.append(pages)
             self.peak_live_pages = max(self.peak_live_pages, pages[0])
+        # Per-step SVI-pass delta: the "<= 1 SVI pass per engine step"
+        # bar for batched escalation is max(svi_pass_trace) <= 1.
+        self.svi_pass_trace.append(self.svi_passes - self._svi_passes_prev)
+        self._svi_passes_prev = self.svi_passes
 
     # -- reduction ----------------------------------------------------------
     def summary(self) -> dict:
@@ -202,4 +241,30 @@ class EngineMetrics:
             "final_prefix_held_pages": (
                 self.page_trace[-1][4]
                 if self.page_trace and len(self.page_trace[-1]) > 4 else 0),
+            # speculative-decode + amortized-escalation gauges (all zero
+            # when speculation is off and nothing escalates)
+            "spec_rounds": self.spec_rounds,
+            "draft_tokens": self.draft_tokens,
+            "accepted_draft_tokens": self.accepted_draft_tokens,
+            "draft_acceptance_rate": self.accepted_draft_tokens / max(
+                self.draft_tokens, 1),
+            "accepted_tokens_per_verify": self.accepted_draft_tokens / max(
+                self.verify_passes, 1),
+            "verify_passes": self.verify_passes,
+            "decode_passes": self.decode_passes,
+            "draft_passes": self.draft_passes,
+            "svi_passes": self.svi_passes,
+            "svi_passes_per_step": self.svi_passes / max(self.steps, 1),
+            "max_svi_passes_per_step": (max(self.svi_pass_trace)
+                                        if self.svi_pass_trace else 0),
+            "mean_escalation_batch": (
+                sum(self.escalation_batches)
+                / max(len(self.escalation_batches), 1)),
+            "max_escalation_batch": (max(self.escalation_batches)
+                                     if self.escalation_batches else 0),
+            # full-PFP passes per served token: decode passes serve one
+            # token each, verify passes serve up to K — speculation wins
+            # when this drops below 1.0
+            "pfp_passes_per_token": (self.decode_passes + self.verify_passes)
+            / max(self.tokens_generated, 1),
         }

@@ -30,6 +30,10 @@ The scheduler owns the waiting-room side of continuous batching:
     page pressure can never invert priority order. ``requeue`` re-inserts
     a PREEMPTED request (pages reclaimed mid-flight by a more senior
     slot) without admission checks — preemption must not lose requests.
+    Speculative decoding changes none of this arithmetic: a verify block
+    never runs past ``max_new_tokens``, so the prompt + generation pages
+    :func:`pages_for` reserves at admission already cover every
+    speculative write the slot can make.
 
 Pure host logic — no jax imports; the engine executes the plans.
 """

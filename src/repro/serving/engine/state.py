@@ -51,6 +51,13 @@ under prefix sharing, below ``write_start``) there, which is what lets
 one lockstep pass over the shared pool serve slots at different
 lifecycle phases without select-merge.
 
+Speculative decoding writes through the same discipline: a chunked
+verify pass lands a whole K-token block of rows via the paged insert,
+and a rejected suffix needs no device-side rollback — the engine leaves
+``positions[slot]`` at the accepted prefix, so the stale rows sit masked
+behind ``cache_len`` until the next block re-feeds them (or, once the
+slot's window moves past them, their writes redirect to trash).
+
 All device transfers are whole-axis gathers issued from jitted functions;
 neither pool ever round-trips KV buffers through the host. Host state is
 only free lists, page tables and per-slot position counters.

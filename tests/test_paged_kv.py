@@ -190,12 +190,16 @@ def test_engine_paged_auto_defrag_is_transparent(lm_setup):
 def test_engine_paged_escalation_replay_parity(lm_setup):
     """Escalations replay against the pre-step page pool (batch-1 query,
     full-pool states): SVI second opinions must match the contiguous
-    engine's bit-for-bit."""
+    engine's bit-for-bit. Both engines run SEQUENTIAL escalation so the
+    two sides execute identically-shaped replay passes — batched vs
+    sequential parity (cross-shape, float-tolerance) is pinned in
+    tests/test_speculative.py."""
     cfg, params = lm_setup
     esc = RouterConfig(mi_continue=-1.0, mi_abstain=1e9, escalate_samples=2,
                       svi_mi_abstain=1e9)
     want = _served(_engine(cfg, params, router_cfg=esc), _trace(cfg, n=4))
-    eng = _engine(cfg, params, page_size=4, router_cfg=esc)
+    eng = _engine(cfg, params, page_size=4, router_cfg=esc,
+                  batch_escalations=False)
     got = _served(eng, _trace(cfg, n=4))
     assert got == want
     assert eng.metrics.escalations > 0

@@ -1,0 +1,246 @@
+"""Speculative decoding + batched SVI escalation (ISSUE-6 surface).
+
+The acceptance bar is parity: uncertainty-speculative decode (mean-only
+draft -> one chunked PFP verify -> greedy accept) and batched escalation
+(ONE lockstep N-sample SVI pass per engine step) must reproduce the
+plain engine's token stream bit-for-bit, at acceptance settings
+{always-accept, never-accept, MI-gated} x page sizes {1, 16, max_len} —
+while spending strictly fewer full-PFP and SVI passes. MI traces are
+compared at float tolerance (``MI_ATOL``), NOT bitwise: the two sides
+run different-shaped forward passes (a K-wide verify vs a 1-wide decode;
+a slot-wide batched SVI pass vs one-at-a-time), and this backend's gemm
+accumulation order is shape-dependent — identical math lands within
+ulps, which MI's entropy cancellation amplifies to ~1e-7 (the same
+reason test_engine_paged_kernel_impl_parity compares tokens, not raw
+logits). A real keying/replay bug moves MI by orders of magnitude more.
+Plus: the compiled SVI second-opinion program is cached per (cfg,
+samples, formulation, impl) and never retraces across steps.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bayes.convert import svi_to_pfp
+from repro.configs import reduced_config
+from repro.models import lm
+from repro.serving.engine import (Engine, EngineConfig, RequestScheduler,
+                                  RouterConfig, SchedulerConfig,
+                                  UncertaintyRouter, make_svi_fallback,
+                                  poisson_trace, run_load,
+                                  svi_fallback_cache_clear)
+
+MAX_LEN = 24
+# MI parity tolerance across pass shapes: ~40x the largest ulp-amplified
+# divergence observed, far below any semantic (keying/replay) regression.
+MI_ATOL = 2e-5
+
+# Wide-open router: every token CONTINUEs (the always-accept extreme).
+OPEN = dict(mi_continue=1e9, mi_abstain=2e9)
+# Force-escalate: every token takes the SVI second opinion.
+FORCE = dict(mi_continue=-1.0, mi_abstain=1e9, escalate_samples=2,
+             svi_mi_abstain=1e9)
+# MI-gated: thresholds sit inside the observed MI range of the reduced
+# model (~7e-5..1e-4), so decisions genuinely mix per token.
+GATED = dict(mi_continue=8e-5, mi_abstain=1e9, escalate_samples=2,
+             svi_mi_abstain=1e9)
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = dataclasses.replace(reduced_config("granite-8b"), sigma_init=1e-3)
+    params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+def _engine(cfg, params, *, page_size=4, router_cfg=None, **ekw):
+    router = UncertaintyRouter(cfg, RouterConfig(**(router_cfg or OPEN)))
+    scheduler = RequestScheduler(SchedulerConfig(prefill_chunk=3,
+                                                 prefill_budget=6))
+    return Engine(cfg, params,
+                  EngineConfig(slots=3, max_len=MAX_LEN,
+                               num_uncertainty_samples=8, seed=0,
+                               page_size=page_size, **ekw),
+                  router=router, scheduler=scheduler)
+
+
+def _trace(cfg, n=6, seed=4):
+    return poisson_trace(n, rate=0.8, vocab_size=cfg.vocab_size, seed=seed,
+                         prompt_len=(2, 7), max_new_tokens=(1, 5))
+
+
+def _served(eng, trace, max_steps=600):
+    run_load(eng, trace, max_steps=max_steps)
+    eng.pool.check_invariants()
+    assert eng.pool.live == 0
+    return {r.uid: (list(r.generated), [float(m) for m in r.mi_trace],
+                    r.finish_reason) for r in eng.finished}
+
+
+def _assert_same_stream(got, want):
+    """Tokens and finish reasons bit-for-bit; MI traces within MI_ATOL."""
+    assert set(got) == set(want)
+    for uid in want:
+        g_tok, g_mi, g_fin = got[uid]
+        w_tok, w_mi, w_fin = want[uid]
+        assert (g_tok, g_fin) == (w_tok, w_fin), f"uid {uid} tokens diverged"
+        assert len(g_mi) == len(w_mi), f"uid {uid} MI trace length diverged"
+        assert np.allclose(g_mi, w_mi, rtol=0.0, atol=MI_ATOL), \
+            f"uid {uid} MI trace diverged beyond {MI_ATOL}"
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode: bit-for-bit parity with the plain engine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("page_size", [1, 16, MAX_LEN])
+def test_speculative_parity_always_accept(lm_setup, page_size):
+    """Wide-open router (every draft verifies CONTINUE): tokens are
+    bit-identical to plain decode at every page size (MI within MI_ATOL),
+    while the block verify replaces (almost) every one-token decode
+    pass."""
+    cfg, params = lm_setup
+    base = _served(_engine(cfg, params, page_size=page_size), _trace(cfg))
+    eng = _engine(cfg, params, page_size=page_size, speculate_k=4)
+    spec = _served(eng, _trace(cfg))
+    _assert_same_stream(spec, base)
+    m = eng.metrics.summary()
+    assert m["decode_passes"] == 0          # every token came from a verify
+    assert m["draft_acceptance_rate"] == 1.0
+    assert m["pfp_passes_per_token"] < 1.0
+
+
+def test_speculative_parity_never_accept(lm_setup):
+    """Drafts forced to mismatch: every block rejects after its head, the
+    engine degrades to one verified token per round — and the served
+    stream STILL matches (rejected rows roll back to masked stale rows,
+    never into served state)."""
+    cfg, params = lm_setup
+    base = _served(_engine(cfg, params), _trace(cfg))
+    eng = _engine(cfg, params, speculate_k=4)
+    eng._draft_override = lambda d: (d + 1) % cfg.vocab_size
+    spec = _served(eng, _trace(cfg))
+    _assert_same_stream(spec, base)
+    m = eng.metrics.summary()
+    assert m["accepted_draft_tokens"] == 0
+    assert m["decode_passes"] == 0
+
+
+def test_speculative_parity_mi_gated(lm_setup):
+    """Thresholds inside the live MI range: CONTINUE and ESCALATE mix per
+    token, escalations defer out of mid-block to the next step's single
+    batched SVI pass — and everything still matches the plain engine
+    running the same router (both escalation styles)."""
+    cfg, params = lm_setup
+    base_seq = _served(_engine(cfg, params, router_cfg=GATED,
+                               batch_escalations=False), _trace(cfg))
+    base_bat = _served(_engine(cfg, params, router_cfg=GATED), _trace(cfg))
+    eng = _engine(cfg, params, router_cfg=GATED, speculate_k=4)
+    spec = _served(eng, _trace(cfg))
+    _assert_same_stream(base_bat, base_seq)
+    _assert_same_stream(spec, base_seq)
+    m = eng.metrics.summary()
+    assert m["escalations"] > 0             # the gate actually fired
+    assert m["max_svi_passes_per_step"] <= 1
+
+
+def test_speculative_parity_eos(lm_setup):
+    """EOS served mid-block finishes the request exactly where plain
+    decode would."""
+    cfg, params = lm_setup
+    base = _served(_engine(cfg, params, eos_id=62), _trace(cfg))
+    spec = _served(_engine(cfg, params, eos_id=62, speculate_k=4),
+                   _trace(cfg))
+    _assert_same_stream(spec, base)
+
+
+def test_speculative_requires_paged(lm_setup):
+    cfg, params = lm_setup
+    with pytest.raises(ValueError, match="paged"):
+        _engine(cfg, params, page_size=None, speculate_k=2)
+
+
+# ---------------------------------------------------------------------------
+# Batched escalation: ONE SVI pass per step, same stream as sequential
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("page_size", [1, 4])
+def test_batched_escalation_reproduces_sequential(lm_setup, page_size):
+    cfg, params = lm_setup
+    seq_eng = _engine(cfg, params, page_size=page_size, router_cfg=FORCE,
+                      batch_escalations=False)
+    seq = _served(seq_eng, _trace(cfg))
+    bat_eng = _engine(cfg, params, page_size=page_size, router_cfg=FORCE)
+    bat = _served(bat_eng, _trace(cfg))
+    _assert_same_stream(bat, seq)
+    ms, mb = seq_eng.metrics.summary(), bat_eng.metrics.summary()
+    assert ms["escalations"] == mb["escalations"] > 0
+    # amortization: sequential pays one SVI pass per escalation, batched
+    # at most one per step regardless of how many slots escalate
+    assert ms["svi_passes"] == ms["escalations"]
+    assert mb["max_svi_passes_per_step"] <= 1
+    assert mb["svi_passes"] < ms["svi_passes"]
+    assert mb["mean_escalation_batch"] > 1.0
+
+
+def test_speculative_with_escalations_matches_sequential(lm_setup):
+    """The full stack — speculation + batched escalation — against the
+    sequential-escalation plain engine."""
+    cfg, params = lm_setup
+    seq = _served(_engine(cfg, params, router_cfg=FORCE,
+                          batch_escalations=False), _trace(cfg))
+    eng = _engine(cfg, params, router_cfg=FORCE, speculate_k=4)
+    spec = _served(eng, _trace(cfg))
+    _assert_same_stream(spec, seq)
+    assert eng.metrics.summary()["max_svi_passes_per_step"] <= 1
+
+
+# ---------------------------------------------------------------------------
+# Compiled second-opinion caching: no retrace across steps or engines
+# ---------------------------------------------------------------------------
+def test_svi_fallback_compiles_once_across_steps(lm_setup):
+    """The jitted second-opinion programs are cached per (cfg, samples,
+    formulation, impl): repeated escalations across steps — and a second
+    engine over the same model — reuse ONE compiled program per call
+    shape instead of retracing."""
+    cfg, params = lm_setup
+    svi_fallback_cache_clear()
+    eng = _engine(cfg, params, router_cfg=FORCE)
+    _served(eng, _trace(cfg))
+    batched = eng.router._fallback_batched
+    assert batched is not None
+    assert batched._cache_size() == 1       # one (B, C) shape, one trace
+    # a fresh engine over the same model resolves to the SAME programs
+    eng2 = _engine(cfg, params, router_cfg=FORCE)
+    assert eng2.router._fallback is eng.router._fallback
+    _served(eng2, _trace(cfg))
+    assert eng2.router._fallback_batched is batched
+    assert batched._cache_size() == 1       # still no retrace
+    assert make_svi_fallback(cfg, 2) is make_svi_fallback(cfg, 2)
+
+
+def test_sequential_fallback_no_retrace_across_steps(lm_setup):
+    """The sequential path re-traces only per distinct replay width
+    ((1, chunk) right after prefill, (1, 1) mid-decode), never per step."""
+    cfg, params = lm_setup
+    svi_fallback_cache_clear()
+    eng = _engine(cfg, params, router_cfg=FORCE, batch_escalations=False)
+    _served(eng, _trace(cfg))
+    assert eng.router._fallback._cache_size() <= 2
+
+
+# ---------------------------------------------------------------------------
+# Accounting: the perf claims the benchmarks publish
+# ---------------------------------------------------------------------------
+def test_speculative_accounting_low_uncertainty(lm_setup):
+    """On a low-uncertainty trace the engine must spend < 1.0 full-PFP
+    passes per served token and zero SVI passes — the ISSUE-6 bar."""
+    cfg, params = lm_setup
+    eng = _engine(cfg, params, speculate_k=4)
+    _served(eng, _trace(cfg, n=8))
+    m = eng.metrics.summary()
+    assert m["svi_passes"] == 0
+    assert m["verify_passes"] == m["spec_rounds"]
+    assert m["pfp_passes_per_token"] < 1.0
+    assert m["accepted_tokens_per_verify"] > 0
+    assert m["draft_acceptance_rate"] == 1.0
+    assert m["decode_passes"] == 0
