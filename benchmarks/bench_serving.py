@@ -57,6 +57,7 @@ from repro.serving.engine import (Engine, EngineConfig, Request,
                                   RequestScheduler, RouterConfig,
                                   SchedulerConfig, UncertaintyRouter,
                                   poisson_trace, run_load)
+from repro.serving.fleet import Fleet, FleetConfig
 
 ARCH = "granite-8b"
 SLOTS = 4
@@ -324,6 +325,92 @@ def _speculative_row(lines, cfg, params, *, n_requests, k=4):
         f";max_svi_step={e_bat['max_svi_passes_per_step']}"))
 
 
+def _fleet_trace(cfg, *, groups, m, prefix_len, tail_len, max_new):
+    """``groups`` families of ``m`` requests, each family opening with its
+    own fixed system prompt. Members arrive staggered, so while a late
+    member's shadow prefill is mid-prompt, earlier members of the same
+    family are decoding — the overlap the disaggregation row pins."""
+    reqs = []
+    uid = 0
+    for g in range(groups):
+        system = (np.arange(1, prefix_len + 1, dtype=np.int32)
+                  + 100 * g) % cfg.vocab_size
+        for i in range(m):
+            reqs.append(Request(
+                uid=uid,
+                prompt=np.concatenate(
+                    [system, np.full(tail_len, 800 + uid, np.int32)]),
+                max_new_tokens=max_new, arrival=float(g + 3 * i)))
+            uid += 1
+    return sorted(reqs, key=lambda r: (r.arrival, r.uid))
+
+
+def _fleet_row(lines, cfg, params, *, m=4):
+    """Acceptance row: a 2-replica prefill/decode-disaggregated fleet
+    against ONE engine on the same trace. Pinned here: (1) routed
+    multi-replica decode is bit-for-bit the single engine's — tokens AND
+    MI traces, exactly (every replica runs the baseline's pass shapes and
+    sampling is keyed per (uid, token), so placement is invisible); (2)
+    the prefix router lands >= 50% of requests on a replica that already
+    caches their prefix; (3) decode steps proceed WHILE a peer prefill is
+    mid-prompt (disaggregated admission never waits behind a long
+    prompt); (4) every replica's pool drains without a page/hold leak."""
+    ps = 4
+    # Unique 9-token tails at prefill_chunk=4: a late member's shadow
+    # prefill spans ~3 ticks while its family decodes 6 tokens.
+    prefix_len, tail_len, max_new = 3 * ps + 2, 9, 6
+    sched_cfg = SchedulerConfig(max_queue=256, prefill_chunk=4,
+                                prefill_budget=8)
+    router = UncertaintyRouter(
+        cfg, RouterConfig(mi_continue=0.5, mi_abstain=3.0,
+                          escalate_samples=4))
+    ecfg = EngineConfig(slots=SLOTS, max_len=MAX_LEN,
+                        num_uncertainty_samples=16, seed=0, page_size=ps,
+                        auto_defrag=False, prefix_sharing=True)
+    trace_kw = dict(groups=2, m=m, prefix_len=prefix_len,
+                    tail_len=tail_len, max_new=max_new)
+
+    def outs(finished):
+        return {r.uid: (list(r.generated), [float(x) for x in r.mi_trace],
+                        r.finish_reason) for r in finished}
+
+    base = Engine(cfg, params, ecfg, router=router,
+                  scheduler=RequestScheduler(sched_cfg, max_len=MAX_LEN))
+    run_load(base, _fleet_trace(cfg, **trace_kw))
+    want = outs(base.finished)
+
+    fleet = Fleet(cfg, params, ecfg,
+                  FleetConfig(replicas=2, disaggregate=True),
+                  router=router, scheduler_config=sched_cfg)
+    s = run_load(fleet, _fleet_trace(cfg, **trace_kw))
+    got = outs(fleet.finished)
+    assert got == want, (
+        "routed fleet decode diverged from the single-engine baseline")
+    assert s["route_hit_rate"] >= 0.5, (
+        f"prefix routing hit-rate {s['route_hit_rate']:.2f} < 0.5")
+    assert s["decode_steps_during_peer_prefill"] >= 1, (
+        "no decode step overlapped a peer prefill — disaggregation never "
+        "decoupled admission from prompt length")
+    assert s["handoffs"] == len(want), "a prefill->decode handoff was lost"
+    assert s["final_occupancy"] == 0, "fleet leaked occupied slots"
+    for rep in fleet.replicas:
+        rep.pool.check_invariants()
+        rep.prefix.check_invariants(rep.pool)
+        leaked = [p for p in range(1, rep.pool.num_pages)
+                  if rep.pool.page_ref[p] != rep.pool.external_holds[p]]
+        assert not leaked, f"page/hold leak after drain: {leaked}"
+    lines.append(emit(
+        f"serving/fleet/r2_disagg/ps{ps}", s["elapsed_s"],
+        f"bitforbit=1;requests={len(want)}"
+        f";route_hit_rate={s['route_hit_rate']:.3f}"
+        f";route_hits={s['route_prefix_hits']}"
+        f";fallbacks={s['route_fallbacks']}"
+        f";handoffs={s['handoffs']}"
+        f";p50_handoff={s['p50_handoff_steps']:.1f}"
+        f";overlap_steps={s['decode_steps_during_peer_prefill']}"
+        f";prefix_hit_rate={s['prefix_hit_rate']:.3f}"))
+
+
 def run(quick: bool = True, page_sizes=None):
     lines = []
     cfg = reduced_config(ARCH)
@@ -348,6 +435,9 @@ def run(quick: bool = True, page_sizes=None):
     # -- speculative decode + amortized escalation -------------------------
     _speculative_row(lines, cfg, params,
                      n_requests=16 if quick else n_requests)
+
+    # -- multi-replica disaggregated fleet vs single engine ----------------
+    _fleet_row(lines, cfg, params, m=4 if quick else 8)
     return lines
 
 

@@ -9,6 +9,8 @@
 7. Serve an LM through the continuous-batching engine  (repro.serving.engine)
 8. Paged Gaussian KV-cache: page-pool decode memory     (EngineConfig(page_size=N))
 9. Prefix sharing: refcounted copy-on-write pages for a shared system prompt
+10. Speculative decoding gated by the PFP's own uncertainty  (repro.serving)
+11. Fleet serving: two disaggregated replicas behind a prefix router
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -285,6 +287,58 @@ def main():
     # a mesh with a built-in parity check; bench_serving's speculative
     # row pins < 1.0 PFP passes per token plus the batched-escalation
     # amortization (at most one SVI pass per engine step).
+
+    print("== 11. Fleet serving: two disaggregated replicas behind a "
+          "prefix router ==")
+    # A Fleet fronts R replicas with one admission router: each request
+    # goes to the replica whose prefix index already caches the longest
+    # prefix of its prompt (read-only peek, so routing never perturbs
+    # retention), falling back to least-loaded. With disaggregate=True
+    # each replica is a prefill engine + decode engine sharing one page
+    # pool: the prompt prefills as a shadow request, the prefix index
+    # takes refcounted holds on its pages, and the decode engine admits
+    # the real request by mapping those pages — prefilling exactly ONE
+    # token, so decode admission never waits behind a long prompt.
+    # Every replica runs the single engine's pass shapes and sampling is
+    # keyed per (request, token), so the routed fleet's tokens AND MI
+    # traces are bit-for-bit a single engine's.
+    from repro.serving.fleet import Fleet, FleetConfig
+
+    def fleet_trace():
+        from repro.serving.engine import Request
+        system = np.arange(1, 10, dtype=np.int32)
+        return [Request(uid=i,
+                        prompt=np.concatenate(
+                            [system, np.full(3, 50 + i, np.int32)]),
+                        max_new_tokens=4, arrival=float(2 * i))
+                for i in range(6)]
+
+    fleet_ecfg = EngineConfig(slots=2, max_len=24,
+                              num_uncertainty_samples=16, page_size=4,
+                              prefix_sharing=True)
+    fleet_router = UncertaintyRouter(spec_cfg, RouterConfig(
+        mi_continue=0.02, mi_abstain=1.5, escalate_samples=4))
+    single = Engine(spec_cfg, spec_params, fleet_ecfg, router=fleet_router)
+    run_load(single, fleet_trace())
+    fleet = Fleet(spec_cfg, spec_params, fleet_ecfg,
+                  FleetConfig(replicas=2, disaggregate=True),
+                  router=fleet_router)
+    fs = run_load(fleet, fleet_trace())
+    out = lambda e: {r.uid: (list(r.generated),  # noqa: E731
+                             [float(m) for m in r.mi_trace])
+                     for r in e.finished}
+    print(f"  2-replica disaggregated fleet vs single engine: bit-for-bit "
+          f"{out(fleet) == out(single)}")
+    print(f"  routing: {fs['route_prefix_hits']} requests sent to a cached "
+          f"prefix, {fs['route_fallbacks']} least-loaded fallbacks "
+          f"(hit rate {fs['route_hit_rate']:.0%})")
+    print(f"  disaggregation: {fs['handoffs']} prefill->decode handoffs, "
+          f"p50 latency {fs['p50_handoff_steps']:.1f} steps, "
+          f"{fs['decode_steps_during_peer_prefill']} decode steps served "
+          f"during a peer prefill")
+    # `launch/serve.py --replicas R --disaggregate` runs this on a mesh
+    # with parity + page/hold-leak checks and a `--expect-route-hits`
+    # floor; bench_serving's fleet row pins the acceptance criteria.
 
 
 if __name__ == "__main__":

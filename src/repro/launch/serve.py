@@ -40,6 +40,7 @@ from repro.models import lm  # noqa: E402
 from repro.serving.engine import (Engine, EngineConfig, RequestScheduler,  # noqa: E402
                                   RouterConfig, SchedulerConfig,
                                   UncertaintyRouter, poisson_trace, run_load)
+from repro.serving.fleet import Fleet, FleetConfig  # noqa: E402
 
 _SUMMARY_KEYS = (
     "submitted", "rejected", "expired", "completed", "abstained",
@@ -66,6 +67,138 @@ _SPEC_KEYS = (
     "max_svi_passes_per_step", "mean_escalation_batch",
     "pfp_passes_per_token",
 )
+
+
+_FLEET_KEYS = (
+    "replicas", "submitted", "rejected", "expired", "finished", "completed",
+    "abstained", "tokens_generated", "prefill_tokens", "steps",
+    "route_prefix_hits", "route_fallbacks", "route_hit_rate",
+    "route_tokens_matched", "prefix_hits", "prefix_hit_rate",
+    "prefill_tokens_saved", "cow_copies", "preemptions", "requeue_overflow",
+    "final_occupancy",
+)
+
+_DISAGG_KEYS = (
+    "handoffs", "p50_handoff_steps", "p99_handoff_steps",
+    "decode_steps_during_peer_prefill",
+)
+
+
+def _run_fleet(args, cfg, params, router, sched_cfg, mesh, dims, max_len,
+               build_engine, make_trace):
+    """--replicas R: the fleet frontend path. Routed multi-replica output
+    must be bit-for-bit (tokens AND MI traces) a single engine's on the
+    same trace — every replica runs the baseline's pass shapes and the
+    per-(uid, token) keyed sampling makes placement invisible — and every
+    replica's pool must drain without a page or hold leak."""
+    import numpy as np
+    if args.disaggregate and (args.page_size is None
+                              or not args.prefix_sharing):
+        print("ERROR: --disaggregate requires --page-size and "
+              "--prefix-sharing (pages hand off from the prefill engine "
+              "to the decode engine through the prefix index)",
+              file=sys.stderr)
+        return 2
+    engine_cfg = EngineConfig(
+        slots=args.batch, max_len=max_len, impl=args.impl,
+        compute_dtype=jnp.bfloat16, seed=args.seed,
+        page_size=args.page_size, page_budget=args.page_budget,
+        reserve_pages=not args.optimistic_pages,
+        # a defrag inside one engine of a disaggregated pair would remap
+        # the peer's tables without permuting its replay snapshot
+        auto_defrag=args.page_size is not None and not args.disaggregate,
+        prefix_sharing=args.prefix_sharing,
+        prefix_retention_pages=args.prefix_retention,
+        speculate_k=args.speculate)
+    with mesh:
+        fleet = Fleet(cfg, params, engine_cfg,
+                      FleetConfig(replicas=args.replicas,
+                                  disaggregate=args.disaggregate),
+                      router=router, scheduler_config=sched_cfg, mesh=mesh)
+        summary = run_load(fleet, make_trace())
+
+    mode = "disaggregated" if args.disaggregate else "replicated"
+    layout = (f"paged/ps={args.page_size}" if args.page_size
+              else "contiguous")
+    if args.prefix_sharing:
+        layout += "/prefix"
+    print(f"== fleet summary ({cfg.name}, R={args.replicas} {mode}, "
+          f"mesh={dims}, impl={args.impl or 'default'}, kv={layout}) ==")
+    for k in _FLEET_KEYS + (_DISAGG_KEYS if args.disaggregate else ()):
+        v = summary[k]
+        print(f"  {k:22s} {v:.4g}" if isinstance(v, float)
+              else f"  {k:22s} {v}")
+
+    # -- per-replica drain + page/hold leak checks --------------------------
+    occ = sum(r.active_slots for r in fleet.replicas)
+    if occ != 0:
+        print(f"ERROR: fleet leaked {occ} occupied slots after drain",
+              file=sys.stderr)
+        return 1
+    for i, rep in enumerate(fleet.replicas):
+        rep.pool.check_invariants()
+        prefix = getattr(rep, "prefix", None)
+        if prefix is not None:
+            if prefix.pages_held > prefix.retention_pages:
+                print(f"ERROR: replica {i} prefix index holds "
+                      f"{prefix.pages_held} pages beyond its retention of "
+                      f"{prefix.retention_pages}", file=sys.stderr)
+                return 1
+            prefix.check_invariants(rep.pool)
+        if args.page_size is not None:
+            pool = rep.pool
+            leaked = [p for p in range(1, pool.num_pages)
+                      if pool.page_ref[p] != pool.external_holds[p]]
+            if leaked:
+                print(f"ERROR: replica {i} page/hold leak on pages "
+                      f"{leaked[:8]} ({len(leaked)} total) after drain",
+                      file=sys.stderr)
+                return 1
+
+    if args.expect_route_hits is not None:
+        if summary["route_prefix_hits"] == 0 or \
+                summary["route_hit_rate"] < args.expect_route_hits:
+            print("ERROR: --expect-route-hits: "
+                  f"{summary['route_prefix_hits']} prefix routes at "
+                  f"hit-rate {summary['route_hit_rate']:.3f} "
+                  f"(floor {args.expect_route_hits})", file=sys.stderr)
+            return 1
+    if args.disaggregate and summary["handoffs"] == 0:
+        print("ERROR: --disaggregate but no prefill->decode handoff "
+              "completed (trace drained without disaggregation engaging)",
+              file=sys.stderr)
+        return 1
+
+    # -- bit-for-bit parity with a single engine ----------------------------
+    # The baseline reuses the fleet's exact engine_cfg (NOT build_engine's,
+    # which re-enables auto_defrag): with an identical pass signature it
+    # shares the replicas' compiled executables, so the comparison can
+    # only surface routing/handoff bugs, never compilation variance.
+    assert build_engine is not None  # single-engine path's builder, unused
+    with mesh:
+        single = Engine(cfg, params, engine_cfg, router=router,
+                        scheduler=RequestScheduler(sched_cfg,
+                                                   max_len=max_len),
+                        mesh=mesh)
+        run_load(single, make_trace())
+    out = lambda reqs: {r.uid: (list(r.generated),  # noqa: E731
+                                [float(m) for m in r.mi_trace],
+                                r.finish_reason) for r in reqs}
+    got, want = out(fleet.finished), out(single.finished)
+    if got != want:
+        diff = sorted(u for u in set(got) | set(want)
+                      if got.get(u) != want.get(u))
+        print("ERROR: routed fleet output diverged from the single-engine "
+              f"baseline on uids {diff[:8]} (tokens and MI traces must be "
+              "bit-for-bit identical)", file=sys.stderr)
+        return 1
+    assert np is not None  # imported for parity-debug sessions
+    print(f"fleet served {summary['completed']} requests "
+          f"({summary['tokens_generated']} tokens) across {args.replicas} "
+          "replicas — bit-for-bit the single-engine stream, "
+          f"{summary['route_prefix_hits']} of them routed to a cached "
+          "prefix.")
+    return 0
 
 
 def main():
@@ -130,6 +263,24 @@ def main():
                     help="exit nonzero if the draft acceptance rate falls "
                          "below R (CI: prove speculation actually "
                          "amortizes verify passes)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="R",
+                    help="serve through a fleet of R data-parallel replica "
+                         "engines behind a prefix-routing frontend; the "
+                         "routed output is checked bit-for-bit against a "
+                         "single-engine baseline on the same trace")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split each replica into a prefill engine and a "
+                         "decode engine over one shared page pool (needs "
+                         "--page-size and --prefix-sharing): prompts "
+                         "prefill on the prefill engine and the pages hand "
+                         "off through the prefix index, so decode "
+                         "admission never waits behind a long prompt")
+    ap.add_argument("--expect-route-hits", type=float, default=None,
+                    nargs="?", const=0.0, metavar="RATE",
+                    help="exit nonzero unless at least one request was "
+                         "routed to a replica's cached prefix (with a "
+                         "value: unless the routing prefix hit-rate is "
+                         ">= RATE)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--mi-continue", type=float, default=0.5)
     ap.add_argument("--mi-abstain", type=float, default=3.0)
@@ -155,10 +306,9 @@ def main():
                           mi_abstain=args.mi_abstain,
                           escalate_samples=args.escalate_samples),
         impl=args.impl)
-    scheduler = RequestScheduler(
-        SchedulerConfig(prefill_chunk=args.prefill_chunk,
-                        prefill_budget=2 * args.prefill_chunk),
-        max_len=max_len)
+    sched_cfg = SchedulerConfig(prefill_chunk=args.prefill_chunk,
+                                prefill_budget=2 * args.prefill_chunk)
+    scheduler = RequestScheduler(sched_cfg, max_len=max_len)
     def make_trace():
         # Regenerable: run_load mutates the Request objects, so the
         # speculative parity check below needs a fresh copy per engine.
@@ -194,6 +344,10 @@ def main():
                          prefix_retention_pages=args.prefix_retention,
                          speculate_k=speculate_k),
             router=router, scheduler=scheduler, mesh=mesh)
+
+    if args.replicas > 1:
+        return _run_fleet(args, cfg, params, router, sched_cfg, mesh, dims,
+                          max_len, build_engine, make_trace)
 
     with mesh:
         engine = build_engine(args.speculate)

@@ -30,6 +30,11 @@ class Request:
     priority: int = 0           # lower = more urgent
     deadline: Optional[float] = None  # engine-step deadline for admission
     arrival: float = 0.0        # engine-step arrival time (loadgen)
+    prefill_only: bool = False  # disaggregation: fill pages, generate nothing
+    # Set by the scheduler at first admission; preserved across preemption
+    # requeues so the aging clock keeps a request's accumulated promotion.
+    first_enqueue: Optional[float] = None
+    preempted: int = 0          # times this request was preempted mid-flight
     # Filled in during decode.
     generated: list = dataclasses.field(default_factory=list)
     mi_trace: list = dataclasses.field(default_factory=list)

@@ -4,7 +4,8 @@ See README.md in this directory for the request lifecycle and the
 uncertainty-routing policy.
 """
 from repro.serving.batcher import Request
-from repro.serving.engine.engine import Engine, EngineConfig
+from repro.serving.engine.engine import (Engine, EngineConfig,
+                                         clear_shared_pass_cache)
 from repro.serving.engine.loadgen import poisson_trace, run_load
 from repro.serving.engine.metrics import EngineMetrics, percentile
 from repro.serving.engine.prefix import PrefixIndex, PrefixNode
@@ -18,7 +19,7 @@ from repro.serving.engine.scheduler import (RequestScheduler, SchedulerConfig,
 from repro.serving.engine.state import DecodeStatePool, PagedDecodeStatePool
 
 __all__ = [
-    "Engine", "EngineConfig", "Request",
+    "Engine", "EngineConfig", "Request", "clear_shared_pass_cache",
     "RequestScheduler", "SchedulerConfig", "pages_for",
     "DecodeStatePool", "PagedDecodeStatePool",
     "PrefixIndex", "PrefixNode",

@@ -136,12 +136,39 @@ class _Slot:
     pending: Optional[int] = None
 
 
+# Jitted pass callables shared by every engine with an identical pass
+# signature (model config, engine config, router thresholds, mesh) —
+# engines reuse ONE set of traced/compiled executables instead of
+# re-tracing per instance. Besides skipping recompilation for every
+# fleet replica, this makes cross-engine bit-for-bit comparisons
+# structural: a replica runs literally the same executables as the
+# baseline engine it is checked against, so parity can never hinge on
+# the toolchain reproducing identical float schedules across separate
+# compilations of the same program.
+_SHARED_PASSES: dict = {}
+
+
+def clear_shared_pass_cache() -> None:
+    """Drop the cross-engine jitted-pass cache (tests; frees the first
+    owner engine each entry's bound passes keep alive)."""
+    _SHARED_PASSES.clear()
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params,
                  config: EngineConfig = EngineConfig(), *,
                  router: Optional[UncertaintyRouter] = None,
                  scheduler: Optional[RequestScheduler] = None,
-                 mesh=None):
+                 mesh=None, pool=None, prefix: Optional[PrefixIndex] = None):
+        """``pool``/``prefix`` inject SHARED decode state (disaggregated
+        serving: a prefill engine and a decode engine over one page pool
+        and one prefix index). The injecting owner is responsible for the
+        pool's remap-listener wiring — an engine never registers a
+        listener on a prefix it did not create, so one defrag remaps the
+        shared index exactly once. Slot ownership stays disjoint: each
+        engine only ever touches slots its own ``pool.alloc`` returned;
+        a peer's slots are inactive rows in this engine's lockstep passes
+        (their writes redirect to the trash page)."""
         if not cfg.embed_inputs:
             raise ValueError("engine serves token-prompt models only")
         self.cfg = cfg
@@ -165,7 +192,17 @@ class Engine:
         self._static_chunks = all(k in ("attn", "moe", "cross")
                                   for k in cfg.pattern)
         self.paged = config.page_size is not None
-        if self.paged:
+        if pool is not None:
+            if self.paged != isinstance(pool, PagedDecodeStatePool):
+                raise ValueError("injected pool layout does not match "
+                                 "config.page_size")
+            if pool.num_slots != config.slots or \
+                    pool.max_len != config.max_len or \
+                    (self.paged and pool.page_size != config.page_size):
+                raise ValueError("injected pool geometry does not match "
+                                 "the engine config")
+            self.pool = pool
+        elif self.paged:
             if not self._static_chunks:
                 raise ValueError(
                     "paged KV-cache serving supports attention-family "
@@ -183,13 +220,22 @@ class Engine:
             if not self.paged:
                 raise ValueError("prefix_sharing requires the paged "
                                  "Gaussian KV-cache (set page_size)")
-            retention = (config.prefix_retention_pages
-                         if config.prefix_retention_pages is not None
-                         else self.pool.total_pages)
-            self.prefix = PrefixIndex(config.page_size, retention)
-            # defrag moves a shared page once; the index's page ids must
-            # follow the rewritten tables
-            self.pool.add_remap_listener(self.prefix.remap_pages)
+            if prefix is not None:
+                # shared index: the owner registered the remap listener
+                # ONCE — registering again would remap page ids twice per
+                # defrag and corrupt the tree
+                self.prefix = prefix
+            else:
+                retention = (config.prefix_retention_pages
+                             if config.prefix_retention_pages is not None
+                             else self.pool.total_pages)
+                self.prefix = PrefixIndex(config.page_size, retention)
+                # defrag moves a shared page once; the index's page ids
+                # must follow the rewritten tables
+                self.pool.add_remap_listener(self.prefix.remap_pages)
+        elif prefix is not None:
+            raise ValueError("injected prefix index requires "
+                             "config.prefix_sharing")
         # (uid, pages, matched) of _page_need's latest index walk, reused
         # by the admission it gated
         self._prefix_match = None
@@ -208,11 +254,6 @@ class Engine:
         v = cfg.vocab_size
         self._lm_mean = jnp.zeros((config.slots, v), jnp.float32)
         self._lm_var = jnp.zeros((config.slots, v), jnp.float32)
-        self._chunk_fn = jax.jit(self._chunk_step)
-        self._batch_chunk_fn = jax.jit(self._batch_chunk_step)
-        self._decode_fn = jax.jit(self._decode_step_paged if self.paged
-                                  else self._decode_step)
-        self._set_row = jax.jit(lambda buf, slot, row: buf.at[slot].set(row))
         if config.speculate_k:
             if config.speculate_k < 1:
                 raise ValueError("speculate_k must be >= 1 (or 0 = off)")
@@ -222,8 +263,6 @@ class Engine:
                     "KV-cache (set page_size): the chunked verify pass "
                     "leans on trash-page write redirection to leave "
                     "rejected rows rollback-free")
-        self._draft_fn = jax.jit(self._draft_steps)
-        self._verify_fn = jax.jit(self._verify_step)
         # Test hook: fn((B, K-1) drafted tokens) -> replacement array.
         # Forcing drafts to always/never match the verified tokens pins the
         # acceptance extremes in the bit-for-bit parity tests.
@@ -245,8 +284,6 @@ class Engine:
                 return out.token[0], out.mutual_info[0]
 
             return jax.vmap(row)(lm_mean, lm_var, uids, tok_idx)
-
-        self._unc = jax.jit(_unc_batch)
 
         # Block variant for speculative verify: (B, K, V) logit moments in,
         # (B, K) (token, mi) out. Row (b, i) runs the exact per-token
@@ -274,7 +311,40 @@ class Engine:
 
             return jax.vmap(row)(lm_mean, lm_var, uids, tok0)
 
-        self._unc_block = jax.jit(_unc_block_batch)
+        # The non-speculative passes ignore speculate_k, so a plain engine
+        # and a speculative engine that agree on everything else share
+        # them; draft/verify close over speculate_k and are keyed by the
+        # full config.
+        common_sig = ("common", cfg,
+                      dataclasses.replace(config, speculate_k=0),
+                      self.router.config, mesh)
+        shared = _SHARED_PASSES.get(common_sig)
+        if shared is None:
+            shared = {
+                "chunk": jax.jit(self._chunk_step),
+                "batch_chunk": jax.jit(self._batch_chunk_step),
+                "decode": jax.jit(self._decode_step_paged if self.paged
+                                  else self._decode_step),
+                "set_row": jax.jit(
+                    lambda buf, slot, row: buf.at[slot].set(row)),
+                "unc": jax.jit(_unc_batch),
+                "unc_block": jax.jit(_unc_block_batch),
+            }
+            _SHARED_PASSES[common_sig] = shared
+        self._chunk_fn = shared["chunk"]
+        self._batch_chunk_fn = shared["batch_chunk"]
+        self._decode_fn = shared["decode"]
+        self._set_row = shared["set_row"]
+        self._unc = shared["unc"]
+        self._unc_block = shared["unc_block"]
+        spec_sig = ("spec", cfg, config, self.router.config, mesh)
+        spec = _SHARED_PASSES.get(spec_sig)
+        if spec is None:
+            spec = {"draft": jax.jit(self._draft_steps),
+                    "verify": jax.jit(self._verify_step)}
+            _SHARED_PASSES[spec_sig] = spec
+        self._draft_fn = spec["draft"]
+        self._verify_fn = spec["verify"]
 
     # -- jitted device programs ---------------------------------------------
     def _ctx(self) -> Context:
@@ -413,8 +483,41 @@ class Engine:
         return self._lm_mean, self._lm_var
 
     @property
+    def active_slots(self) -> int:
+        """Slots THIS engine owns (a shared pool's ``live`` also counts a
+        disaggregated peer's slots; this never does)."""
+        return sum(sl is not None for sl in self._slots)
+
+    @property
+    def prefilling(self) -> int:
+        """This engine's slots still mid-prefill."""
+        return sum(sl is not None and sl.phase == "prefill"
+                   for sl in self._slots)
+
+    @property
+    def decoding(self) -> int:
+        """This engine's slots in the decode phase."""
+        return sum(sl is not None and sl.phase == "decode"
+                   for sl in self._slots)
+
+    @property
     def idle(self) -> bool:
-        return len(self.scheduler) == 0 and self.pool.live == 0
+        return len(self.scheduler) == 0 and self.active_slots == 0
+
+    # -- fleet replica protocol ---------------------------------------------
+    @property
+    def load(self) -> int:
+        """Queued + occupying work, the fleet router's fallback metric."""
+        return len(self.scheduler) + self.active_slots
+
+    def prefix_peek(self, tokens) -> int:
+        """Cached-prefix length for the fleet router: how many leading
+        tokens of ``tokens`` this engine's prefix index holds pages for
+        (0 without an index). Read-only — never bumps the LRU clock. The
+        limit mirrors admission's: the last token is always prefilled."""
+        if self.prefix is None or len(tokens) == 0:
+            return 0
+        return self.prefix.peek(tokens, limit=len(tokens) - 1)
 
     def run_until_idle(self, max_steps: int = 100_000) -> dict:
         while not self.idle:
@@ -576,6 +679,11 @@ class Engine:
             self.pool.positions[slot] = sl.prefill_pos
             self.metrics.on_prefill(n)
             if sl.prefill_pos == len(prompt):
+                if sl.request.prefill_only:
+                    # disaggregation: the pages are the product — finish
+                    # without ever entering the decode phase
+                    self._finish(slot, "prefill", float(self._step_idx))
+                    continue
                 sl.phase = "decode"
                 sl.last_input = int(prompt[-1])
                 sl.replay = (sub, inputs, out_idx)
@@ -655,6 +763,9 @@ class Engine:
                 self.pool.positions[slot] = end
                 self.metrics.on_prefill(n)
                 if done[slot]:
+                    if sl.request.prefill_only:
+                        self._finish(slot, "prefill", float(self._step_idx))
+                        continue
                     sl.phase = "decode"
                     sl.last_input = int(sl.prefill_tokens[-1])
                     row = {
@@ -1164,7 +1275,12 @@ class Engine:
         self.pool.evict(slot)
         self._slots[slot] = None
         self.metrics.on_preemption()
-        self.scheduler.requeue(sl.request, float(self._step_idx))
+        displaced = self.scheduler.requeue(sl.request, float(self._step_idx))
+        if displaced is not None:
+            # the requeue displaced the newest un-started waiter to keep
+            # the queue depth bounded; account it like a rejection
+            self.metrics.on_requeue_overflow()
+            self.finished.append(displaced)
 
     def _make_room(self, for_slot: int, upto_len: int) -> bool:
         """Free pages for ``for_slot``: first reclaim prefix-index holds

@@ -55,6 +55,7 @@ class EngineMetrics:
         self.peak_occupancy = 0
         # Paged-pool telemetry (stays zero on the contiguous layout).
         self.preemptions = 0
+        self.requeue_overflows = 0  # waiters displaced by preemption requeues
         self.defrags = 0
         # (live, total, frag[, shared, held]) per step; the last two ride
         # along when the engine runs prefix sharing.
@@ -120,6 +121,11 @@ class EngineMetrics:
 
     def on_preemption(self, n: int = 1) -> None:
         self.preemptions += n
+
+    def on_requeue_overflow(self, n: int = 1) -> None:
+        """A preemption requeue found the waiting room full and displaced
+        the newest un-started waiter (finished as 'requeue_overflow')."""
+        self.requeue_overflows += n
 
     def on_defrag(self, n: int = 1) -> None:
         self.defrags += n
@@ -210,6 +216,7 @@ class EngineMetrics:
             "final_occupancy": occ[-1] if occ else 0,
             # paged-pool gauges (all zero on the contiguous layout)
             "preemptions": self.preemptions,
+            "requeue_overflow": self.requeue_overflows,
             "defrags": self.defrags,
             "peak_page_occupancy": (
                 self.peak_live_pages / self.page_trace[0][1]
@@ -225,6 +232,7 @@ class EngineMetrics:
             else 0,
             # prefix-sharing gauges (all zero without a prefix index)
             "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
             "prefix_hit_rate": self.prefix_hits / max(
                 self.prefix_hits + self.prefix_misses, 1),
             "prefix_shared_pages": self.prefix_shared_pages,

@@ -130,6 +130,36 @@ class PrefixIndex:
             break
         return pages, matched
 
+    def peek(self, tokens, *, limit: Optional[int] = None) -> int:
+        """Length of the longest cached prefix of ``tokens`` WITHOUT
+        touching the LRU clock or any node's recency — the fleet router's
+        read-only probe. Routing consults every replica's index; if the
+        probe bumped recency, the mere act of routing would perturb each
+        index's retention order and make eviction depend on fleet-level
+        traffic instead of the replica's own matches."""
+        limit = len(tokens) if limit is None else min(limit, len(tokens))
+        matched = 0
+        children = self._roots
+        while matched < limit:
+            remaining = [int(t) for t in tokens[matched:limit]]
+            full = tuple(remaining[:self.page_size])
+            node = children.get(full) if len(full) == self.page_size else None
+            if node is not None:
+                matched += self.page_size
+                children = node.children
+                continue
+            best_m = 0
+            for child in children.values():
+                m = 0
+                for a, b in zip(child.key, remaining):
+                    if a != b:
+                        break
+                    m += 1
+                best_m = max(best_m, m)
+            matched += best_m
+            break
+        return matched
+
     # -- registration --------------------------------------------------------
     def insert(self, tokens, pages, pool) -> int:
         """Register a lineage: ``tokens`` (prompt + generated, truncated to
@@ -165,8 +195,16 @@ class PrefixIndex:
                            if n.page not in fresh and n is not parent]
                 if not victims:
                     break                # truncate our own tail instead
-                self._evict_node(min(victims, key=lambda n: n.last_used),
-                                 pool)
+                # Prefer victims whose hold is the only thing keeping the
+                # page alive (the same refcount test reclaim applies):
+                # evicting a leaf some live slot still maps frees zero
+                # memory AND loses a reusable prefix — only fall back to
+                # still-mapped leaves when every freeable one is gone.
+                freeable = [n for n in victims
+                            if pool.page_ref[n.page]
+                            == pool.external_holds[n.page]]
+                self._evict_node(min(freeable or victims,
+                                     key=lambda n: n.last_used), pool)
             node = PrefixNode(key=chunk, page=page, parent=parent,
                               last_used=self._clock)
             pool.hold(page)

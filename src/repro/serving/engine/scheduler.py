@@ -90,6 +90,7 @@ class RequestScheduler:
         self.rejected = 0
         self.expired = 0
         self.submitted = 0
+        self.requeue_overflow = 0  # waiters displaced by preemption requeues
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -132,6 +133,8 @@ class RequestScheduler:
                 len(req.prompt) + req.max_new_tokens > self.max_len:
             self.rejected += 1
             return False
+        if req.first_enqueue is None:
+            req.first_enqueue = now  # aging clock epoch; survives requeues
         self._queue.append((self._seq, now, req))
         self._seq += 1
         return True
@@ -181,7 +184,7 @@ class RequestScheduler:
         self._queue.remove(best)
         return best[2], expired
 
-    def requeue(self, req: Request, now: float) -> None:
+    def requeue(self, req: Request, now: float) -> Optional[Request]:
         """Re-insert a preempted request. Admission control is skipped —
         the request was already admitted once and its pages were taken
         back mid-flight; dropping it here would turn preemption into
@@ -189,11 +192,36 @@ class RequestScheduler:
         it bounds ADMISSION (batcher.Request), which this request already
         passed on time — leaving it set would let the next expiry purge
         finish a mid-generation request as 'expired'. FIFO seq is fresh,
-        so among equals it waits behind current waiters (aging still
-        promotes it)."""
+        so among equals it waits behind current waiters — but the aging
+        clock is the ORIGINAL enqueue time (``first_enqueue``), so the
+        promotion a request accumulated while waiting survives every
+        preemption; a repeatedly-preempted request keeps climbing instead
+        of being reset behind a hot stream.
+
+        Depth stays bounded: when the waiting room is already at
+        ``max_queue``, the preempted request displaces the NEWEST
+        un-started waiter (finished as ``'requeue_overflow'`` and
+        returned to the caller for accounting) — preempted requests are
+        never dropped, and never displace each other. If every waiter is
+        itself preempted, the queue is allowed to overflow temporarily:
+        each preemption frees a slot, so at most ``slots`` such requeues
+        can ever be outstanding at once.
+        """
         req.deadline = None
-        self._queue.append((self._seq, now, req))
+        req.preempted += 1
+        enq = req.first_enqueue if req.first_enqueue is not None else now
+        displaced: Optional[Request] = None
+        if len(self._queue) >= self.config.max_queue:
+            fresh = [it for it in self._queue if it[2].preempted == 0]
+            if fresh:
+                victim = max(fresh, key=lambda it: it[0])
+                self._queue.remove(victim)
+                displaced = victim[2]
+                displaced.finish("requeue_overflow")
+                self.requeue_overflow += 1
+        self._queue.append((self._seq, enq, req))
         self._seq += 1
+        return displaced
 
     # -- chunked prefill ----------------------------------------------------
     def plan_prefill(

@@ -74,6 +74,15 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import lm
 
+# One jitted wrapper per pool primitive for the whole process (not per
+# pool instance): every pool reuses the same traced/compiled gathers and
+# scatters, so building many pools (fleet replicas, parity baselines)
+# costs no re-tracing and runs byte-identical executables.
+_JIT_RESET = jax.jit(lm.reset_decode_slot)
+_JIT_TAKE = jax.jit(lm.take_decode_slots)
+_JIT_WRITE = jax.jit(lm.write_decode_slot)
+_JIT_COPY = jax.jit(lm.copy_decode_pages)
+
 
 class DecodeStatePool:
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int, *,
@@ -94,9 +103,9 @@ class DecodeStatePool:
         self._free: List[int] = list(range(num_slots))
         self.owner: List[Optional[int]] = [None] * num_slots  # request uid
         self.positions = np.zeros(num_slots, np.int32)  # valid cache entries
-        self._reset = jax.jit(lm.reset_decode_slot)
-        self._take = jax.jit(lm.take_decode_slots)
-        self._write = jax.jit(lm.write_decode_slot)
+        self._reset = _JIT_RESET
+        self._take = _JIT_TAKE
+        self._write = _JIT_WRITE
 
     # -- occupancy ----------------------------------------------------------
     @property
@@ -237,8 +246,8 @@ class PagedDecodeStatePool:
         # prefix index) stay aligned with the moved pool rows.
         self._remap_listeners: List[Callable[[Dict[int, int]], None]] = []
         self._device_table = None                # cache; tables change rarely
-        self._take = jax.jit(lm.take_decode_slots)
-        self._copy = jax.jit(lm.copy_decode_pages)
+        self._take = _JIT_TAKE
+        self._copy = _JIT_COPY
 
     # -- occupancy ----------------------------------------------------------
     @property

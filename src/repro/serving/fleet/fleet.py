@@ -1,0 +1,114 @@
+"""The fleet frontend: R data-parallel replicas behind one admission
+router.
+
+Each replica is a full serving stack over its own page pool — a plain
+``Engine``, or a ``DisaggPair`` (prefill/decode disaggregation) under
+``FleetConfig.disaggregate``. The frontend owns nothing on the device:
+it routes each submitted request to one replica (longest cached prefix
+first, least-loaded fallback — see ``router.py``), ticks every replica
+once per fleet step, and aggregates telemetry.
+
+All replicas share ONE compiled model (same params pytree, same
+``UncertaintyRouter``) and the same engine config — so every lockstep
+pass in the fleet has the very shapes the single-engine baseline
+compiles, and the per-(uid, token) keyed sampling makes the routed
+output bit-for-bit the baseline's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.serving.batcher import Request
+from repro.serving.engine.engine import Engine, EngineConfig
+from repro.serving.engine.router import RouterConfig, UncertaintyRouter
+from repro.serving.engine.scheduler import RequestScheduler, SchedulerConfig
+from repro.serving.fleet.handoff import DisaggPair
+from repro.serving.fleet.metrics import FleetMetrics, pooled_handoff_gauges
+from repro.serving.fleet.router import PrefixRouter
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    replicas: int = 2
+    disaggregate: bool = False     # replicas are DisaggPairs, not Engines
+    route_min_tokens: int = 1      # cached tokens needed for a prefix route
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError("a fleet needs at least one replica")
+        if self.route_min_tokens < 1:
+            raise ValueError("route_min_tokens must be >= 1")
+
+
+class Fleet:
+    """Same submit/step/now/idle/metrics protocol as ``Engine``, so the
+    loadgen harness and serve CLI drive a fleet like a single engine."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 config: EngineConfig = EngineConfig(),
+                 fleet_config: FleetConfig = FleetConfig(), *,
+                 router: Optional[UncertaintyRouter] = None,
+                 scheduler_config: Optional[SchedulerConfig] = None,
+                 mesh=None):
+        self.cfg = cfg
+        self.config = config
+        self.fleet_config = fleet_config
+        if router is None:
+            router = UncertaintyRouter(cfg, RouterConfig(),
+                                       formulation=config.formulation,
+                                       impl=config.impl)
+        sched_cfg = scheduler_config or SchedulerConfig()
+        self.replicas: List = []
+        for _ in range(fleet_config.replicas):
+            if fleet_config.disaggregate:
+                self.replicas.append(DisaggPair(
+                    cfg, params, config, router=router,
+                    scheduler_config=sched_cfg, mesh=mesh))
+            else:
+                self.replicas.append(Engine(
+                    cfg, params, config, router=router,
+                    scheduler=RequestScheduler(sched_cfg,
+                                               max_len=config.max_len),
+                    mesh=mesh))
+        self.router = PrefixRouter(min_tokens=fleet_config.route_min_tokens)
+        pairs = (self.replicas if fleet_config.disaggregate else [])
+        self.metrics = FleetMetrics(
+            fleet_config.replicas,
+            lambda: [r.metrics.summary() for r in self.replicas],
+            (lambda: pooled_handoff_gauges(pairs)) if pairs else None)
+        self.finished: List[Request] = []
+        self._tick = 0
+
+    # -- engine protocol ----------------------------------------------------
+    @property
+    def now(self) -> int:
+        return self._tick
+
+    @property
+    def idle(self) -> bool:
+        return all(r.idle for r in self.replicas)
+
+    def submit(self, req: Request) -> bool:
+        idx, matched, hit = self.router.route(req, self.replicas)
+        ok = self.replicas[idx].submit(req)
+        self.metrics.on_route(idx, matched, hit, ok)
+        return ok
+
+    def step(self) -> None:
+        for replica in self.replicas:
+            replica.step()
+            finished = replica.finished
+            replica.finished = []
+            self.finished.extend(finished)
+        self.metrics.on_step(
+            tuple(r.active_slots for r in self.replicas))
+        self._tick += 1
+
+    def run_until_idle(self, max_steps: int = 100_000) -> dict:
+        while not self.idle:
+            if self._tick >= max_steps:
+                raise RuntimeError(f"fleet not idle after {max_steps} steps")
+            self.step()
+        return self.metrics.summary()

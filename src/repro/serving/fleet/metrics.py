@@ -1,0 +1,120 @@
+"""Fleet-level telemetry: routing, per-replica occupancy, handoffs.
+
+``FleetMetrics`` owns the counters only the frontend can see (where each
+request was routed and why); everything per-replica is pulled from the
+replicas' own summaries at reduction time, so no event is double-booked.
+Pure host bookkeeping, like the engine metrics it aggregates.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.serving.engine.metrics import percentile
+
+# Replica work counters summed into the fleet summary (request-stream
+# counters like submitted/rejected live at the fleet boundary instead).
+_SUM_KEYS = (
+    "expired", "admitted", "finished", "completed", "abstained",
+    "escalations", "tokens_generated", "prefill_tokens", "preemptions",
+    "requeue_overflow", "prefix_hits", "prefix_misses",
+    "prefix_shared_pages", "prefill_tokens_saved", "cow_copies",
+    "decode_passes", "verify_passes", "draft_passes", "svi_passes",
+)
+
+
+class FleetMetrics:
+    def __init__(self, num_replicas: int,
+                 replica_summaries: Optional[Callable[[], List[dict]]] = None,
+                 pair_gauges: Optional[Callable[[], dict]] = None):
+        self.num_replicas = num_replicas
+        self._replica_summaries = replica_summaries
+        self._pair_gauges = pair_gauges
+        self.submitted = 0
+        self.rejected = 0
+        self.route_prefix_hits = 0    # routed to a replica's cached prefix
+        self.route_fallbacks = 0      # routed least-loaded (nothing cached)
+        self.route_tokens_matched = 0  # cached tokens at the routed replica
+        self.steps = 0
+        # per-step tuple of each replica's occupied slots
+        self.occupancy_trace: List[Tuple[int, ...]] = []
+        self._t0: Optional[float] = None
+
+    # -- events -------------------------------------------------------------
+    def on_route(self, replica: int, matched: int, prefix_hit: bool,
+                 accepted: bool) -> None:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self.submitted += 1
+        if not accepted:
+            self.rejected += 1
+            return
+        if prefix_hit:
+            self.route_prefix_hits += 1
+            self.route_tokens_matched += matched
+        else:
+            self.route_fallbacks += 1
+
+    def on_step(self, occupancies: Tuple[int, ...]) -> None:
+        self.steps += 1
+        self.occupancy_trace.append(occupancies)
+
+    # -- reduction ----------------------------------------------------------
+    @property
+    def route_hit_rate(self) -> float:
+        routed = self.route_prefix_hits + self.route_fallbacks
+        return self.route_prefix_hits / max(routed, 1)
+
+    def summary(self) -> dict:
+        reps = (self._replica_summaries() if self._replica_summaries
+                else [])
+        out = {k: sum(r.get(k, 0) for r in reps) for k in _SUM_KEYS}
+        out["prefix_hit_rate"] = out["prefix_hits"] / max(
+            out["prefix_hits"] + out["prefix_misses"], 1)
+        elapsed = (time.perf_counter() - self._t0) if self._t0 else 0.0
+        out["elapsed_s"] = elapsed
+        out["throughput_tok_s"] = \
+            out["tokens_generated"] / max(elapsed, 1e-9)
+        out.update({
+            "replicas": self.num_replicas,
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "steps": self.steps,
+            "route_prefix_hits": self.route_prefix_hits,
+            "route_fallbacks": self.route_fallbacks,
+            "route_hit_rate": self.route_hit_rate,
+            "route_tokens_matched": self.route_tokens_matched,
+        })
+        occ = self.occupancy_trace
+        per_replica_occ = [
+            [t[i] for t in occ] for i in range(self.num_replicas)]
+        out["per_replica_mean_occupancy"] = [
+            sum(o) / max(len(o), 1) for o in per_replica_occ]
+        out["per_replica_peak_occupancy"] = [
+            max(o) if o else 0 for o in per_replica_occ]
+        out["final_occupancy"] = sum(occ[-1]) if occ else 0
+        out["per_replica_tokens"] = [
+            r.get("tokens_generated", 0) for r in reps]
+        # latency percentiles over the POOLED request records would need
+        # raw traces; p50/p99 of the per-replica p50/p99s is not that.
+        # Expose the per-replica values instead of a misleading merge.
+        out["per_replica_p50_latency_steps"] = [
+            r.get("p50_latency_steps", 0.0) for r in reps]
+        out["per_replica_p99_latency_steps"] = [
+            r.get("p99_latency_steps", 0.0) for r in reps]
+        if self._pair_gauges is not None:
+            out.update(self._pair_gauges())
+        return out
+
+
+def pooled_handoff_gauges(pairs) -> dict:
+    """Disaggregation gauges pooled over a fleet's ``DisaggPair``
+    replicas (raw latency lists pool exactly, unlike percentiles)."""
+    lat = [s for p in pairs for s in p.handoff_latencies]
+    return {
+        "handoffs": len(lat),
+        "p50_handoff_steps": percentile(lat, 50),
+        "p99_handoff_steps": percentile(lat, 99),
+        "decode_steps_during_peer_prefill": sum(
+            p.overlap_steps for p in pairs),
+    }

@@ -161,20 +161,49 @@ def reset_global_cache() -> None:
 
 
 def default_backend() -> str:
+    """The backend component of every cache key: the concrete accelerator
+    GENERATION (``jax.devices()[0].device_kind`` — e.g. ``'TPU v4'``,
+    ``'NVIDIA H100'``, ``'cpu'``), not the coarse platform name
+    ``jax.default_backend()`` returns (``'tpu'``/``'gpu'``/``'cpu'``).
+    Schedules are tuned against one chip's VMEM/alignment/latency profile;
+    keying by platform alone would silently replay a v4's schedules on a
+    v5e. On CPU the two names coincide."""
     import jax  # local: keep this module importable without initializing jax
+
+    return jax.devices()[0].device_kind
+
+
+def legacy_backend() -> str:
+    """The pre-device_kind cache key component (the coarse platform name).
+    Kept only so caches written before the device_kind keying stay warm:
+    :func:`lookup` falls back to this key once per (op, shape, dtype) and
+    migrates any hit under the device_kind key."""
+    import jax
 
     return jax.default_backend()
 
 
 def lookup(op: str, shape_key: ShapeKey, dtype: str) -> Optional[Schedule]:
     """The dispatch-layer query: record (if tracing under the recorder),
-    consult the global cache, note what ran. Returns None on miss."""
+    consult the global cache, note what ran. Returns None on miss.
+
+    A miss under the device_kind backend key retries the legacy
+    platform-name key (caches tuned before device_kind keying) and, on a
+    hit, copies the entry under the device_kind key — a one-time
+    migration, so the fallback probe never repeats for that query."""
     backend = default_backend()
     shape_key = tuple(int(d) for d in shape_key)
     query: Query = (op, shape_key, str(dtype), backend)
     for rec in _RECORDERS:
         rec.append(query)
     schedule = _GLOBAL_CACHE.get(op, shape_key, str(dtype), backend)
+    if schedule is None:
+        legacy = legacy_backend()
+        if legacy != backend:
+            schedule = _GLOBAL_CACHE.get(op, shape_key, str(dtype), legacy)
+            if schedule is not None:
+                _GLOBAL_CACHE.put(op, shape_key, str(dtype), backend,
+                                  schedule)
     _CONSULTS[op] = schedule.describe() if schedule is not None else "default"
     return schedule
 

@@ -1,0 +1,230 @@
+"""Multi-replica fleet serving (ISSUE-7 acceptance surface).
+
+Covers: the cross-replica prefix router (longest cached prefix wins,
+lowest-index ties, least-loaded fallback, read-only probes that never
+perturb an index's LRU order), prefill/decode disaggregation over one
+shared page pool (every prompt hands off, decode admission prefills
+exactly one token, pools drain with refcounts equal to index holds), and
+the acceptance criterion: 2-replica routed decode — plain and
+disaggregated — is bit-for-bit identical to a single engine (tokens AND
+MI traces) at page sizes {1, 16}.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bayes.convert import svi_to_pfp
+from repro.configs import reduced_config
+from repro.models import lm
+from repro.serving.batcher import Request
+from repro.serving.engine import (Engine, EngineConfig, PagedDecodeStatePool,
+                                  PrefixIndex, RequestScheduler, RouterConfig,
+                                  SchedulerConfig, UncertaintyRouter,
+                                  run_load)
+from repro.serving.fleet import DisaggPair, Fleet, FleetConfig, PrefixRouter
+
+MAX_LEN = 24
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = dataclasses.replace(reduced_config("granite-8b"), sigma_init=1e-3)
+    params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+def _sched():
+    return SchedulerConfig(prefill_chunk=3, prefill_budget=6)
+
+
+def _router(cfg):
+    return UncertaintyRouter(cfg, RouterConfig(mi_continue=1e9,
+                                               mi_abstain=2e9))
+
+
+def _ecfg(page_size, **kw):
+    return EngineConfig(slots=3, max_len=MAX_LEN, num_uncertainty_samples=8,
+                        seed=0, page_size=page_size, prefix_sharing=True,
+                        **kw)
+
+
+def _trace(n=6, prefix_len=9, tail_len=3, max_new=4):
+    """Requests opening with one system prompt, arrivals spaced so early
+    finishers seed the prefix locality the router then routes on."""
+    system = np.arange(1, prefix_len + 1, dtype=np.int32)
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [system, np.full(tail_len, 50 + i, np.int32)]),
+                    max_new_tokens=max_new, arrival=float(2 * i))
+            for i in range(n)]
+
+
+def _served(eng, trace, max_steps=4000):
+    run_load(eng, trace, max_steps=max_steps)
+    return {r.uid: (list(r.generated), [float(m) for m in r.mi_trace],
+                    r.finish_reason) for r in eng.finished}
+
+
+def _assert_drained(pool):
+    pool.check_invariants()
+    for p in range(1, pool.num_pages):
+        assert pool.page_ref[p] == pool.external_holds[p], (
+            f"page {p} leaked a reference beyond its index holds")
+
+
+# ---------------------------------------------------------------------------
+# PrefixRouter
+# ---------------------------------------------------------------------------
+class _FakeReplica:
+    def __init__(self, peek, load):
+        self._peek, self.load = peek, load
+
+    def prefix_peek(self, tokens):
+        return self._peek
+
+
+def test_prefix_router_longest_prefix_wins_over_load():
+    r = PrefixRouter(min_tokens=1)
+    req = Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                  max_new_tokens=2)
+    idx, matched, hit = r.route(req, [_FakeReplica(3, 0), _FakeReplica(6, 9)])
+    assert (idx, matched, hit) == (1, 6, True)
+
+
+def test_prefix_router_deterministic_lowest_index_ties():
+    r = PrefixRouter(min_tokens=1)
+    req = Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                  max_new_tokens=2)
+    idx, matched, hit = r.route(req, [_FakeReplica(4, 5), _FakeReplica(4, 0)])
+    assert (idx, matched, hit) == (0, 4, True)
+
+
+def test_prefix_router_least_loaded_fallback():
+    r = PrefixRouter(min_tokens=1)
+    req = Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                  max_new_tokens=2)
+    idx, matched, hit = r.route(req, [_FakeReplica(0, 2), _FakeReplica(0, 1),
+                                      _FakeReplica(0, 1)])
+    assert (idx, matched, hit) == (1, 0, False)
+    # a cached prefix shorter than min_tokens is not worth chasing either
+    r2 = PrefixRouter(min_tokens=5)
+    idx, matched, hit = r2.route(req, [_FakeReplica(4, 9), _FakeReplica(0, 0)])
+    assert (idx, matched, hit) == (1, 0, False)
+
+
+def test_prefix_peek_is_read_only(lm_setup):
+    """Routing probes must not bump recency: after many peeks at the LRU
+    lineage, a retention eviction still removes IT, not the fresher one —
+    otherwise fleet-level routing traffic would rewrite every replica's
+    eviction order."""
+    cfg, _ = lm_setup
+    pool = PagedDecodeStatePool(cfg, num_slots=3, max_len=MAX_LEN,
+                                page_size=2, num_pages=16)
+    index = PrefixIndex(2, retention_pages=2)
+    old = np.asarray([1, 2], np.int32)
+    for slot_uid, tokens in enumerate([old, np.asarray([3, 4], np.int32)]):
+        s = pool.alloc(slot_uid)
+        assert pool.ensure_capacity(s, 2)
+        index.insert(tokens, pool.slot_pages[s], pool)
+        pool.evict(s)
+    for _ in range(5):
+        assert index.peek(old) == 2          # probe the LRU lineage hard
+    c = pool.alloc(2)
+    assert pool.ensure_capacity(c, 2)
+    index.insert(np.asarray([5, 6], np.int32), pool.slot_pages[c], pool)
+    pool.evict(c)
+    assert index.peek(old) == 0              # ...it was still the victim
+    assert index.peek(np.asarray([3, 4], np.int32)) == 2
+    index.clear(pool)
+    pool.check_invariants()
+
+
+def test_engines_with_equal_signature_share_jitted_passes(lm_setup):
+    """Every fleet replica (and the parity baseline it is compared to)
+    must run the SAME compiled executables, so bit-for-bit parity is
+    structural rather than a bet on the compiler reproducing identical
+    float schedules across separate compilations of one program."""
+    cfg, params = lm_setup
+    a = Engine(cfg, params, _ecfg(4), router=_router(cfg))
+    b = Engine(cfg, params, _ecfg(4), router=_router(cfg))
+    assert a._decode_fn is b._decode_fn
+    assert a._batch_chunk_fn is b._batch_chunk_fn
+    assert a._unc is b._unc
+    # a speculative engine differs only in speculate_k: the common decode
+    # passes are still shared; draft/verify are its own
+    c = Engine(cfg, params, _ecfg(4, speculate_k=3), router=_router(cfg))
+    assert c._decode_fn is a._decode_fn
+    assert c._draft_fn is not a._draft_fn
+    # a different page geometry compiles its own set
+    d = Engine(cfg, params, _ecfg(2), router=_router(cfg))
+    assert d._decode_fn is not a._decode_fn
+
+
+# ---------------------------------------------------------------------------
+# DisaggPair
+# ---------------------------------------------------------------------------
+def test_disagg_pair_config_validation(lm_setup):
+    cfg, params = lm_setup
+    with pytest.raises(ValueError, match="paged"):
+        DisaggPair(cfg, params,
+                   EngineConfig(slots=2, max_len=MAX_LEN,
+                                prefix_sharing=True))
+    with pytest.raises(ValueError, match="prefix"):
+        DisaggPair(cfg, params,
+                   EngineConfig(slots=2, max_len=MAX_LEN, page_size=4))
+    with pytest.raises(ValueError, match="auto_defrag"):
+        DisaggPair(cfg, params, _ecfg(4, auto_defrag=True))
+
+
+def test_disagg_pair_decode_prefills_one_token_per_request(lm_setup):
+    """The handoff contract: the prefill engine fills the whole prompt;
+    the decode engine maps those pages through the shared index and
+    prefills exactly ONE token per request, independent of prompt
+    length — and the shared pool drains clean."""
+    cfg, params = lm_setup
+    pair = DisaggPair(cfg, params, _ecfg(4), router=_router(cfg),
+                      scheduler_config=_sched())
+    trace = _trace()
+    got = _served(pair, trace)
+    assert set(got) == {r.uid for r in trace}
+    s = pair.summary()
+    n = len(trace)
+    assert s["handoffs"] == n
+    assert s["decode_engine_prefill_tokens"] == n
+    assert s["prefill_engine_prefill_tokens"] > n
+    assert s["finished"] == n and s["final_occupancy"] == 0
+    assert pair.pool.live == 0
+    _assert_drained(pair.pool)
+    pair.prefix.check_invariants(pair.pool)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: routed multi-replica decode is bit-for-bit a single engine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("page_size", [1, 16])
+@pytest.mark.parametrize("disaggregate", [False, True])
+def test_fleet_two_replicas_bitforbit_single_engine(lm_setup, page_size,
+                                                    disaggregate):
+    cfg, params = lm_setup
+    router = _router(cfg)
+    base = Engine(cfg, params, _ecfg(page_size), router=router,
+                  scheduler=RequestScheduler(_sched(), max_len=MAX_LEN))
+    want = _served(base, _trace())
+    fleet = Fleet(cfg, params, _ecfg(page_size),
+                  FleetConfig(replicas=2, disaggregate=disaggregate),
+                  router=router, scheduler_config=_sched())
+    got = _served(fleet, _trace())
+    # EXACT equality — tokens and MI floats; every replica runs the
+    # baseline's pass shapes and sampling is keyed per (uid, token), so
+    # request placement is invisible to the math
+    assert got == want
+    s = fleet.metrics.summary()
+    assert s["final_occupancy"] == 0
+    assert s["route_prefix_hits"] + s["route_fallbacks"] == len(want)
+    if disaggregate:
+        assert s["handoffs"] == len(want)
+    for rep in fleet.replicas:
+        _assert_drained(rep.pool)
+        rep.prefix.check_invariants(rep.pool)

@@ -229,6 +229,38 @@ def test_prefix_index_retention_and_reclaim_respect_sharers(lm_setup):
         assert pool.page_ref[page] >= 1
 
 
+def test_insert_retention_eviction_prefers_freeable_victims(lm_setup):
+    """Retention eviction during insert picks a victim whose hold is the
+    LAST reference to its page (``page_ref == external_holds``) over the
+    plain LRU leaf a live slot still maps — evicting the mapped leaf
+    frees zero memory AND loses a reusable prefix."""
+    cfg, _ = lm_setup
+    pool = PagedDecodeStatePool(cfg, num_slots=3, max_len=MAX_LEN,
+                                page_size=2, num_pages=16)
+    index = PrefixIndex(2, retention_pages=2)
+    # lineage A (the LRU leaf): still mapped by live slot a
+    a = pool.alloc(0)
+    assert pool.ensure_capacity(a, 2)
+    index.insert(np.asarray([1, 2], np.int32), pool.slot_pages[a], pool)
+    # lineage B (more recent): owner drained, hold is the last reference
+    b = pool.alloc(1)
+    assert pool.ensure_capacity(b, 2)
+    index.insert(np.asarray([3, 4], np.int32), pool.slot_pages[b], pool)
+    pool.evict(b)
+    # at retention, inserting lineage C must evict B — freeable — even
+    # though A is older
+    c = pool.alloc(2)
+    assert pool.ensure_capacity(c, 2)
+    index.insert(np.asarray([5, 6], np.int32), pool.slot_pages[c], pool)
+    assert index.pages_held == 2
+    assert index.match(np.asarray([1, 2], np.int32))[1] == 2   # A survived
+    assert index.match(np.asarray([3, 4], np.int32))[1] == 0   # B evicted
+    pool.evict(a)
+    pool.evict(c)
+    index.clear(pool)
+    pool.check_invariants()
+
+
 def test_shared_page_defrag_rewrites_every_table(lm_setup):
     """Two live sharers + the index all reference one page; defrag must
     rewrite BOTH tables and the index node to the page's new id."""

@@ -22,8 +22,9 @@ from repro.serving.decode import uncertainty_decode
 from repro.serving.engine import (Decision, DecodeStatePool, Engine,
                                   EngineConfig, RequestScheduler,
                                   RouterConfig, SchedulerConfig,
-                                  UncertaintyRouter, make_svi_fallback,
-                                  percentile, poisson_trace, run_load)
+                                  UncertaintyRouter, clear_shared_pass_cache,
+                                  make_svi_fallback, percentile,
+                                  poisson_trace, run_load)
 
 
 @pytest.fixture(scope="module")
@@ -113,6 +114,56 @@ def test_scheduler_prefill_plan_budget_and_round_robin():
     # round-robin: every slot gets a first chunk before anyone gets seconds
     first_three = [slot for slot, _ in plan[:3]]
     assert first_three == [0, 1, 2]
+
+
+def test_requeue_depth_bound_displaces_newest_fresh_waiter():
+    """A preemption requeue into a full waiting room stays depth-bounded
+    by displacing the NEWEST un-started waiter — never by dropping the
+    preempted request, which already holds partial generation."""
+    s = RequestScheduler(SchedulerConfig(max_queue=2))
+    s.submit(_req(0), now=0)
+    s.submit(_req(1), now=1)
+    pre = _req(7)
+    pre.first_enqueue = 0.0                       # was admitted at step 0
+    displaced = s.requeue(pre, now=5.0)
+    assert displaced is not None and displaced.uid == 1
+    assert displaced.finish_reason == "requeue_overflow"
+    assert s.requeue_overflow == 1
+    assert len(s) == 2                            # depth bound held
+    got = {s.pop_ready(5.0)[0].uid for _ in range(2)}
+    assert got == {0, 7}
+
+
+def test_requeue_overflow_never_drops_preempted():
+    s = RequestScheduler(SchedulerConfig(max_queue=1))
+    s.submit(_req(9), now=0)                      # fresh waiter at capacity
+    a, b = _req(0), _req(1)
+    a.first_enqueue = b.first_enqueue = 0.0
+    assert s.requeue(a, now=3.0).uid == 9         # displaced the fresh one
+    # every waiter is now preempted: the queue overflows temporarily
+    # (bounded by slot count) instead of losing in-flight work
+    assert s.requeue(b, now=4.0) is None
+    assert len(s) == 2 and s.requeue_overflow == 1
+    got = {s.pop_ready(5.0)[0].uid for _ in range(2)}
+    assert got == {0, 1}
+
+
+def test_requeue_preserves_aging_epoch():
+    """The aging clock is the ORIGINAL enqueue time, so the promotion a
+    request accumulated while waiting survives preemption — with the
+    epoch reset to the requeue time, a repeatedly-preempted cold request
+    would restart behind every hot stream."""
+    s = RequestScheduler(SchedulerConfig(aging_steps=2))
+    cold = _req(99, priority=3)
+    s.submit(cold, now=0)
+    popped, _ = s.pop_ready(0)
+    assert popped is cold
+    s.requeue(cold, now=10.0)                     # preempted at step 10
+    s.submit(_req(1, priority=0), now=10)
+    # effective priority 3 - 12//2 = -3 beats the fresh 0 - 1 = -1;
+    # an epoch reset to 10 would yield 3 - 1 = 2 and lose
+    popped, _ = s.pop_ready(12.0)
+    assert popped.uid == 99
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +393,9 @@ def test_engine_prefill_compiles_one_chunk_shape(lm_setup):
     window), so varied prompt lengths and budget-split chunks cannot
     trigger per-length recompilation of the LM forward."""
     cfg, params = lm_setup
+    # chunk passes are shared across same-signature engines, so drop the
+    # cache to get a fresh jit wrapper whose compile count is this test's
+    clear_shared_pass_cache()
     eng = _engine(cfg, params, slots=2,
                   sched_cfg=SchedulerConfig(prefill_chunk=4,
                                             prefill_budget=6))

@@ -312,6 +312,35 @@ def test_cache_hit_short_circuits_measurement(monkeypatch, tmp_path):
     assert third == first  # deterministic tuner
 
 
+def test_backend_key_is_device_kind():
+    """Cache keys carry the concrete accelerator generation, not the
+    coarse platform name — a v4's schedules must not silently replay on a
+    v5e. On CPU the two names coincide, so CPU caches are unaffected."""
+    assert tcache.default_backend() == jax.devices()[0].device_kind
+    if jax.default_backend() == "cpu":
+        assert tcache.default_backend() == "cpu" == tcache.legacy_backend()
+
+
+def test_lookup_migrates_legacy_platform_keyed_schedules(monkeypatch):
+    """A cache tuned before device_kind keying (platform-name keys) still
+    hits: a miss probes the legacy key once and migrates the entry under
+    the device_kind key, so the fallback never repeats."""
+    sched = Schedule.make("dense", block_m=8, block_n=128, block_k=256)
+    monkeypatch.setattr(tcache, "default_backend", lambda: "TPU v4")
+    monkeypatch.setattr(tcache, "legacy_backend", lambda: "tpu")
+    tcache.global_cache().put("dense", (8, 64, 64), "float32", "tpu", sched)
+    assert tcache.lookup("dense", (8, 64, 64), "float32") is sched
+    assert tcache.global_cache().get("dense", (8, 64, 64), "float32",
+                                     "TPU v4") is sched
+    # migrated: the next lookup hits the device_kind key directly
+    monkeypatch.setattr(tcache, "legacy_backend",
+                        lambda: pytest.fail("legacy key probed twice"))
+    assert tcache.lookup("dense", (8, 64, 64), "float32") is sched
+    # a genuine miss (different shape) still returns None
+    monkeypatch.setattr(tcache, "legacy_backend", lambda: "tpu")
+    assert tcache.lookup("dense", (9, 64, 64), "float32") is None
+
+
 # ---------------------------------------------------------------------------
 # Shape recording / autotune entry point
 # ---------------------------------------------------------------------------
