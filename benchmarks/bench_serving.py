@@ -11,6 +11,16 @@ Row families, emitted through benchmarks/common.py:
                               abstention/escalation rates — paged runs add
                               page-occupancy, fragmentation and preemption
                               counts;
+  serving/op_profile/...      ONE eager lockstep decode pass through the
+                              dispatch profiler (every op fenced): the
+                              derived column is the live Table-4-style
+                              per-layer time breakdown + tuning-cache
+                              consult counters;
+  serving/obs_overhead/...    the observability acceptance row: the same
+                              loadgen trace with tracing disabled and
+                              with a live Tracer + exports — derived
+                              carries the enabled/disabled elapsed
+                              ratio, pinned < 1.05 under --full;
   serving/occupancy/...       the paged-memory acceptance row: a static
                               engine and a paged engine at the SAME
                               device-memory budget (equal KV rows) under
@@ -68,7 +78,7 @@ PAGE_SIZE = 8
 def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
                   svi_mi_abstain=None, page_size=None, slots=SLOTS,
                   page_budget=None, reserve_pages=True, prefix_sharing=False,
-                  speculate_k=0, batch_escalations=True):
+                  speculate_k=0, batch_escalations=True, tracer=None):
     router = UncertaintyRouter(
         cfg, RouterConfig(mi_continue=mi_continue, mi_abstain=mi_abstain,
                           svi_mi_abstain=svi_mi_abstain,
@@ -85,7 +95,7 @@ def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
                                prefix_sharing=prefix_sharing,
                                speculate_k=speculate_k,
                                batch_escalations=batch_escalations),
-                  router=router, scheduler=scheduler)
+                  router=router, scheduler=scheduler, tracer=tracer)
 
 
 def _decode_step_row(lines, cfg, params, *, page_size=None):
@@ -149,6 +159,78 @@ def _loadgen_row(lines, cfg, params, *, n_requests, page_size=None,
         name or f"serving/loadgen/n{n_requests}"
         + ("" if page_size is None else f"/ps{page_size}"),
         s["elapsed_s"], derived))
+
+
+def _op_profile_row(lines, cfg, params):
+    """Live Table-4 row: ONE eager lockstep decode pass through the
+    dispatch-registry profiler — every PFP op block_until_ready-fenced,
+    so the derived column carries the per-layer time breakdown (and the
+    tuning-cache consult counters) of the forward the engine actually
+    serves. Runs with every slot inactive, so no engine state mutates."""
+    from repro.obs.profiler import profile_ops
+
+    engine = _build_engine(cfg, params, page_size=PAGE_SIZE)
+    b = engine.config.slots
+    feed = jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.zeros((b, 1), jnp.int32)
+    clen = jnp.zeros(b, jnp.int32)
+    active = jnp.zeros(b, bool)
+    with profile_ops() as prof:
+        engine.decode_fn(engine.params, feed, pos, clen, active,
+                         engine.pool.states, engine.pool.device_table(),
+                         *engine.logit_buffers)
+    rows = prof.table()
+    assert rows, "profiled decode pass dispatched no registry ops"
+    top = ";".join(f"{r['op']}={r['frac'] * 100:.1f}%" for r in rows[:5])
+    lines.append(emit(
+        f"serving/op_profile/b{b}/ps{PAGE_SIZE}", prof.total_seconds,
+        f"{top};ops={len(rows)}"
+        f";cache_consults={prof.cache_consults}"
+        f";cache_hits={prof.cache_hits}"))
+
+
+def _obs_overhead_row(lines, cfg, params, *, n_requests, full):
+    """Acceptance row: the SAME warmed Poisson loadgen run with tracing
+    disabled (the default engine — every emit site sits behind an
+    ``if tracer is not None``) and with a live Tracer attached, both
+    trace exports and the Prometheus text rendered afterwards. The
+    derived column carries the enabled/disabled elapsed ratio; --full
+    pins it < 1.05 (the quick profile is too short to time stably)."""
+    from repro.obs.trace import Tracer
+
+    trace_kw = dict(rate=0.5, vocab_size=cfg.vocab_size,
+                    prompt_len=(4, 16), max_new_tokens=(2, 8))
+
+    def run_one(tracer):
+        engine = _build_engine(cfg, params, page_size=PAGE_SIZE,
+                               tracer=tracer)
+        run_load(engine, poisson_trace(4, seed=9, **trace_kw))
+        engine.reset_metrics()
+        trace = poisson_trace(n_requests, seed=1, **trace_kw)
+        for r in trace:
+            r.arrival += engine.now
+        return engine, run_load(engine, trace)
+
+    _, s_off = run_one(None)
+    tracer = Tracer()
+    eng_on, s_on = run_one(tracer)
+    # export cost is real but off the serving path — rendered here so a
+    # pathological exporter would still show up in the bench log
+    n_events = len(tracer.events)
+    tracer.to_jsonl()
+    tracer.to_chrome()
+    eng_on.metrics.registry.to_prometheus()
+    ratio = s_on["elapsed_s"] / max(s_off["elapsed_s"], 1e-9)
+    lines.append(emit(
+        f"serving/obs_overhead/n{n_requests}/ps{PAGE_SIZE}",
+        s_on["elapsed_s"],
+        f"ratio={ratio:.3f};off_s={s_off['elapsed_s']:.3f}"
+        f";on_s={s_on['elapsed_s']:.3f};events={n_events}"
+        f";tput_on={s_on['throughput_tok_s']:.1f}tok_s"))
+    if full:
+        assert ratio < 1.05, (
+            f"tracing overhead {ratio:.3f} >= 1.05 on the serving loadgen "
+            "row — the observability layer is leaking into the hot path")
 
 
 def _occupancy_row(lines, cfg, params, *, n_requests):
@@ -425,6 +507,13 @@ def run(quick: bool = True, page_sizes=None):
     _loadgen_row(lines, cfg, params, n_requests=n_requests)
     for ps in (page_sizes or (PAGE_SIZE,)):
         _loadgen_row(lines, cfg, params, n_requests=n_requests, page_size=ps)
+
+    # -- live Table-4: per-op fenced decode profile ------------------------
+    _op_profile_row(lines, cfg, params)
+
+    # -- observability cost: tracing on vs off on one loadgen trace --------
+    _obs_overhead_row(lines, cfg, params, n_requests=n_requests,
+                      full=not quick)
 
     # -- equal-memory concurrency: static vs paged -------------------------
     _occupancy_row(lines, cfg, params, n_requests=n_requests)

@@ -118,8 +118,14 @@ def main() -> None:
 def _write_serving_summary(lines, *, full: bool, impl) -> None:
     """Persist the serving rows as results/BENCH_serving.json — a
     machine-readable artifact (uploaded by CI) so the serving perf
-    trajectory is trackable across PRs instead of living only in logs."""
+    trajectory is trackable across PRs instead of living only in logs.
+    Every row carries the run metadata (git sha, device kind, jax/jaxlib
+    versions, interpret-mode flag), so rows stay attributable after CI
+    concatenates artifacts across commits and machines."""
     from repro.core.dispatch import resolve_impl
+    from repro.obs.runmeta import run_metadata
+
+    meta = run_metadata()
 
     def parse(line: str) -> dict:
         name, us, impl_col, schedule, derived = line.split(",", 4)
@@ -131,6 +137,7 @@ def _write_serving_summary(lines, *, full: bool, impl) -> None:
                 row[k] = float(v) if "." in v or "e" in v else int(v)
             except ValueError:
                 row[k] = v
+        row.update(meta)
         return row
 
     payload = {
@@ -138,6 +145,7 @@ def _write_serving_summary(lines, *, full: bool, impl) -> None:
         "unix_time": time.time(),
         "profile": "full" if full else "quick",
         "impl": resolve_impl(impl),
+        "meta": meta,
         "rows": [parse(line) for line in lines],
     }
     out = os.path.join("results", "BENCH_serving.json")

@@ -11,6 +11,8 @@
 9. Prefix sharing: refcounted copy-on-write pages for a shared system prompt
 10. Speculative decoding gated by the PFP's own uncertainty  (repro.serving)
 11. Fleet serving: two disaggregated replicas behind a prefix router
+12. Observability: deterministic traces (Perfetto-viewable), metrics
+    registry exports, live per-op profile, uncertainty telemetry (repro.obs)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -339,6 +341,66 @@ def main():
     # `launch/serve.py --replicas R --disaggregate` runs this on a mesh
     # with parity + page/hold-leak checks and a `--expect-route-hits`
     # floor; bench_serving's fleet row pins the acceptance criteria.
+
+    print("== 12. Observability: traces, metrics, live per-op profile ==")
+    # The whole serving stack instruments through repro.obs. A Tracer
+    # records every lifecycle event keyed on (engine step, seq) — the
+    # engine's step counter is the only time base, so two identical runs
+    # produce byte-identical traces — and a fleet shares ONE tracer
+    # across its frontend ('fleet' lane) and replicas ('r0.prefill',
+    # 'r0.decode', ...). Metrics live in per-engine registries
+    # (Counter/Gauge/Histogram families) with deterministic snapshots
+    # and a Prometheus text export; escalations double as free
+    # calibration audits (mi_ece) and high-MI tokens count OOD alarms.
+    import json as _json
+
+    from repro.obs.trace import Tracer
+
+    tracer = Tracer()
+    fleet2 = Fleet(spec_cfg, spec_params, fleet_ecfg,
+                   FleetConfig(replicas=2, disaggregate=True),
+                   router=fleet_router, tracer=tracer)
+    os = run_load(fleet2, fleet_trace())
+    events = tracer.events
+    kinds = sorted({e["event"] for e in events})
+    print(f"  {len(events)} trace events across "
+          f"{len({e['lane'] for e in events})} lanes: {', '.join(kinds)}")
+    # Write the Perfetto view: drop this file onto https://ui.perfetto.dev
+    # and each lane becomes a track with per-request lifetime spans.
+    chrome = tracer.to_chrome()
+    print(f"  Chrome trace-event export: {len(chrome['traceEvents'])} "
+          f"entries (tracer.write_chrome('trace.chrome.json') to save)")
+    # Uncertainty telemetry rides the same summaries: band totals pool
+    # across replicas by summation; calibration (mi_ece) stays per-engine
+    # because an error RATE does not sum.
+    dec_s = fleet2.replicas[0].decode_engine.metrics.summary()
+    print(f"  router bands: continue={os['band_continue']} "
+          f"escalate={os['band_escalate']} abstain={os['band_abstain']}, "
+          f"ood_alarms={os['ood_alarms']}, "
+          f"r0.decode mi_ece={dec_s['mi_ece']:.3f}")
+    # Per-lane Prometheus export (one registry per engine):
+    dec0 = fleet2.replicas[0].decode_engine.metrics.registry
+    prom = dec0.to_prometheus(extra_labels={"lane": "r0.decode"})
+    sample = [ln for ln in prom.splitlines()
+              if ln.startswith("repro_tokens_generated")][0]
+    print(f"  Prometheus sample: {sample}")
+    # And the live Table-4 per-op profile of the serving forward:
+    from repro.obs.profiler import profile_ops
+    eng0 = fleet2.replicas[0].decode_engine
+    feed = jnp.zeros((eng0.config.slots, 1), jnp.int32)
+    zeros = jnp.zeros(eng0.config.slots, jnp.int32)
+    with profile_ops() as prof:  # eager, per-op block_until_ready fences
+        eng0.decode_fn(eng0.params, feed, feed, zeros,
+                       jnp.zeros(eng0.config.slots, bool), eng0.pool.states,
+                       eng0.pool.device_table(), *eng0.logit_buffers)
+    top = prof.table()[0]
+    print(f"  per-op decode profile: {len(prof.table())} ops, top = "
+          f"{top['op']} at {top['frac']:.0%} of pass time")
+    _ = _json.dumps(tracer.to_chrome())  # both exports are plain JSON
+    # `launch/serve.py --trace-out t.jsonl --metrics-out m.json --prom-out
+    # m.prom --profile-ops` exports all of this from a real run, and
+    # `python -m repro.obs.validate` schema-checks the artifacts (the CI
+    # obs-smoke job's gate).
 
 
 if __name__ == "__main__":

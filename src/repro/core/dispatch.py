@@ -51,6 +51,25 @@ _DEFAULT_IMPL = "xla"
 # op name -> {'xla': fn, 'kernel': fn}
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 
+# Active per-op profiler (repro.obs.profiler.OpProfiler) or None. When
+# set, get_op returns a fenced/timed wrapper around the resolved impl and
+# _schedule_for reports each tuning-cache consult. The None check is the
+# only cost the un-profiled path pays.
+_PROFILER = None
+
+
+def set_profiler(profiler):
+    """Install (or clear, with None) the dispatch-level op profiler.
+    Returns the previous profiler so scopes nest."""
+    global _PROFILER
+    prev = _PROFILER
+    _PROFILER = profiler
+    return prev
+
+
+def get_profiler():
+    return _PROFILER
+
 
 # ---------------------------------------------------------------------------
 # Registry plumbing
@@ -88,7 +107,11 @@ def register(name: str, impl: str):
 
 
 def get_op(name: str, impl: Optional[str] = None) -> Callable:
-    return _REGISTRY[name][resolve_impl(impl)]
+    impl = resolve_impl(impl)
+    fn = _REGISTRY[name][impl]
+    if _PROFILER is not None:
+        return _PROFILER.wrap(name, impl, fn)
+    return fn
 
 
 def registered_ops() -> Dict[str, Dict[str, Callable]]:
@@ -122,8 +145,11 @@ def _schedule_for(op: str, shape_key, dtype) -> Optional[Any]:
     """
     from repro.tuning import cache as _schedule_cache
 
-    return _schedule_cache.lookup(op, tuple(int(d) for d in shape_key),
-                                  jnp.dtype(dtype).name)
+    sched = _schedule_cache.lookup(op, tuple(int(d) for d in shape_key),
+                                   jnp.dtype(dtype).name)
+    if _PROFILER is not None:
+        _PROFILER.on_cache_consult(op, sched is not None)
+    return sched
 
 
 def _rows(shape) -> int:
@@ -566,7 +592,7 @@ def pfp_residual(x, y, impl: Optional[str] = None) -> GaussianTensor:
 
 __all__ = [
     "IMPLS", "set_default_impl", "get_default_impl", "resolve_impl",
-    "register", "get_op", "registered_ops",
+    "register", "get_op", "registered_ops", "set_profiler", "get_profiler",
     "pfp_dense", "pfp_einsum", "pfp_conv2d_im2col", "pfp_activation",
     "pfp_maxpool2d", "pfp_attention", "pfp_attention_cache",
     "pfp_attention_paged", "pfp_rmsnorm", "pfp_layernorm",

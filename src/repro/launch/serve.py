@@ -15,6 +15,7 @@ Usage:
       --engine --tokens 4            # CI interpret-mode smoke
 """
 import argparse
+import json
 import os
 import sys
 
@@ -37,6 +38,7 @@ from repro.configs import get_config, reduced_config  # noqa: E402
 from repro.launch import sharding as shlib  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.models import lm  # noqa: E402
+from repro.obs.trace import Tracer  # noqa: E402
 from repro.serving.engine import (Engine, EngineConfig, RequestScheduler,  # noqa: E402
                                   RouterConfig, SchedulerConfig,
                                   UncertaintyRouter, poisson_trace, run_load)
@@ -84,8 +86,90 @@ _DISAGG_KEYS = (
 )
 
 
+def _lane_registries(target):
+    """lane -> MetricsRegistry for every telemetry owner in a serving
+    stack: a single Engine, or a Fleet frontend plus each replica engine
+    (a DisaggPair contributes its prefill and decode engines)."""
+    if hasattr(target, "replicas"):  # Fleet
+        out = {"fleet": target.metrics.registry}
+        for i, rep in enumerate(target.replicas):
+            if hasattr(rep, "engines"):  # DisaggPair
+                out[f"r{i}.prefill"] = rep.prefill_engine.metrics.registry
+                out[f"r{i}.decode"] = rep.decode_engine.metrics.registry
+            else:
+                out[f"r{i}"] = rep.metrics.registry
+        return out
+    return {"engine": target.metrics.registry}
+
+
+def _profile_decode(engine):
+    """One eager, per-op-fenced lockstep decode pass through the dispatch
+    profiler — the live Table-4-style per-layer breakdown for the LM
+    forward the engine actually serves. Runs with every slot inactive
+    (paged writes redirect to the trash page; the contiguous select-merge
+    discards the update), so the engine's state is untouched."""
+    from repro.obs.profiler import profile_ops
+
+    b = engine.config.slots
+    feed = jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.zeros((b, 1), jnp.int32)
+    clen = jnp.zeros(b, jnp.int32)
+    active = jnp.zeros(b, bool)
+    with profile_ops() as prof:
+        fwd = (engine.params, feed, pos, clen, active, engine.pool.states)
+        if engine.paged:
+            engine.decode_fn(*fwd, engine.pool.device_table(),
+                             *engine.logit_buffers)
+        else:
+            engine.decode_fn(*fwd, *engine.logit_buffers)
+    return prof
+
+
+def _export_obs(args, target, summary, tracer, profile=None):
+    """Write the run's observability artifacts: JSONL + Chrome traces,
+    the metrics JSON payload (run metadata + summary + every lane's
+    registry snapshot), and the Prometheus text export."""
+    if tracer is not None and args.trace_out:
+        tracer.write_jsonl(args.trace_out)
+        chrome = os.path.splitext(args.trace_out)[0] + ".chrome.json"
+        tracer.write_chrome(chrome)
+        print(f"trace: {len(tracer.events)} events -> {args.trace_out} "
+              f"(Perfetto: {chrome})")
+    regs = _lane_registries(target)
+    if args.metrics_out:
+        from repro.obs.runmeta import run_metadata
+        payload = {
+            "meta": run_metadata(),
+            "summary": summary,
+            "registries": {lane: reg.snapshot()
+                           for lane, reg in sorted(regs.items())},
+        }
+        if profile is not None:
+            payload["op_profile"] = profile.summary()
+        os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"metrics: -> {args.metrics_out}")
+    if args.prom_out:
+        # One text exposition over every lane (lane is a label); repeated
+        # HELP/TYPE headers from the per-lane exports are deduplicated.
+        seen, lines = set(), []
+        for lane, reg in sorted(regs.items()):
+            for line in reg.to_prometheus(
+                    extra_labels={"lane": lane}).splitlines():
+                if line.startswith("#"):
+                    if line in seen:
+                        continue
+                    seen.add(line)
+                lines.append(line)
+        os.makedirs(os.path.dirname(args.prom_out) or ".", exist_ok=True)
+        with open(args.prom_out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"prometheus: -> {args.prom_out}")
+
+
 def _run_fleet(args, cfg, params, router, sched_cfg, mesh, dims, max_len,
-               build_engine, make_trace):
+               build_engine, make_trace, tracer=None):
     """--replicas R: the fleet frontend path. Routed multi-replica output
     must be bit-for-bit (tokens AND MI traces) a single engine's on the
     same trace — every replica runs the baseline's pass shapes and the
@@ -114,8 +198,20 @@ def _run_fleet(args, cfg, params, router, sched_cfg, mesh, dims, max_len,
         fleet = Fleet(cfg, params, engine_cfg,
                       FleetConfig(replicas=args.replicas,
                                   disaggregate=args.disaggregate),
-                      router=router, scheduler_config=sched_cfg, mesh=mesh)
+                      router=router, scheduler_config=sched_cfg, mesh=mesh,
+                      tracer=tracer)
         summary = run_load(fleet, make_trace())
+
+    profile = None
+    if args.profile_ops:
+        first = fleet.replicas[0]
+        eng = first.decode_engine if hasattr(first, "engines") else first
+        with mesh:
+            profile = _profile_decode(eng)
+        print("== per-op decode profile (one eager fenced pass, "
+              "replica 0) ==")
+        print(profile.format_table())
+    _export_obs(args, fleet, summary, tracer, profile)
 
     mode = "disaggregated" if args.disaggregate else "replicated"
     layout = (f"paged/ps={args.page_size}" if args.page_size
@@ -286,6 +382,25 @@ def main():
     ap.add_argument("--mi-abstain", type=float, default=3.0)
     ap.add_argument("--escalate-samples", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    # -- observability ------------------------------------------------------
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the deterministic request trace as JSONL "
+                         "to PATH and a Perfetto/chrome://tracing view to "
+                         "PATH's stem + '.chrome.json'")
+    ap.add_argument("--trace-wall", action="store_true",
+                    help="annotate every trace event with wall-clock "
+                         "seconds (strippable; the step-keyed trace stays "
+                         "deterministic without it)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics payload (run metadata, the "
+                         "summary, every lane's registry snapshot) as JSON")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write every lane's registry in Prometheus text "
+                         "exposition format (lane as a label)")
+    ap.add_argument("--profile-ops", action="store_true",
+                    help="after the run, time ONE eager per-op-fenced "
+                         "decode pass at the dispatch registry and print "
+                         "the per-layer breakdown (paper Table 4, live)")
     args = ap.parse_args()
 
     if args.mesh:
@@ -329,6 +444,8 @@ def main():
                 r.prompt[:n] = system[:n]
         return trace
 
+    tracer = Tracer(wall=args.trace_wall) if args.trace_out else None
+
     def build_engine(speculate_k):
         return Engine(
             cfg, params,
@@ -343,15 +460,23 @@ def main():
                          prefix_sharing=args.prefix_sharing,
                          prefix_retention_pages=args.prefix_retention,
                          speculate_k=speculate_k),
-            router=router, scheduler=scheduler, mesh=mesh)
+            router=router, scheduler=scheduler, mesh=mesh, tracer=tracer)
 
     if args.replicas > 1:
         return _run_fleet(args, cfg, params, router, sched_cfg, mesh, dims,
-                          max_len, build_engine, make_trace)
+                          max_len, build_engine, make_trace, tracer)
 
     with mesh:
         engine = build_engine(args.speculate)
         summary = run_load(engine, make_trace())
+
+    profile = None
+    if args.profile_ops:
+        with mesh:
+            profile = _profile_decode(engine)
+        print("== per-op decode profile (one eager fenced pass) ==")
+        print(profile.format_table())
+    _export_obs(args, engine, summary, tracer, profile)
 
     layout = (f"paged/ps={args.page_size}" if args.page_size else "contiguous")
     if args.prefix_sharing:

@@ -1,0 +1,42 @@
+"""Observability substrate for the PFP serving stack.
+
+Four orthogonal pieces, all pure host-side bookkeeping (nothing here ever
+touches the device path unless explicitly asked to time it):
+
+  * ``registry`` — Counter/Gauge/Histogram metric families with label
+    sets, a shared ``Stopwatch`` wall clock, and Prometheus text export.
+    ``EngineMetrics`` and ``FleetMetrics`` are backed by one
+    ``MetricsRegistry`` each instead of hand-rolled attribute bags.
+  * ``trace`` — deterministic structured request tracing: every lifecycle
+    event (submit, admit, prefill round, decode step, route, escalate,
+    spec draft/verify, COW, preempt/requeue, handoff, finish) is keyed on
+    ``(engine_step, seq)`` so two identical runs produce byte-identical
+    traces; wall-clock is an optional strippable annotation. Exports
+    JSONL and Chrome trace-event JSON (Perfetto-viewable).
+  * ``profiler`` — opt-in per-op, per-impl timing at the dispatch
+    registry (``core/dispatch.py``), block_until_ready-fenced, plus
+    tuning-cache consult/hit/miss counters: the paper's Table-4-style
+    per-layer breakdown reproduced live at serve time.
+  * ``uncertainty`` — router-band occupancy, escalation-outcome
+    counters, abstention-rate and ECE-style calibration over the MI
+    stream, and a thresholded OOD alarm.
+
+``runmeta``/``schema``/``validate`` round it out with run provenance
+(git sha, device kind, jax versions, interpret mode), a dependency-free
+JSON-schema subset validator, and a CLI used by the CI obs-smoke job.
+"""
+from repro.obs.profiler import OpProfiler, profile_ops
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                Stopwatch, percentile)
+from repro.obs.runmeta import run_metadata
+from repro.obs.trace import EVENTS, Tracer
+from repro.obs.uncertainty import UncertaintyTelemetry
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Stopwatch",
+    "percentile",
+    "Tracer", "EVENTS",
+    "OpProfiler", "profile_ops",
+    "UncertaintyTelemetry",
+    "run_metadata",
+]

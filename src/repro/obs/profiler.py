@@ -1,0 +1,149 @@
+"""Opt-in per-op, per-impl timing at the dispatch registry.
+
+The paper's tuning story runs on a per-layer time breakdown (Table 4);
+this module reproduces it live, at serve time, against whatever program
+the engine actually runs. ``core/dispatch.py`` is the single seam every
+PFP operator passes through, so one hook there covers the whole model
+zoo on both the XLA and the Pallas-kernel stack:
+
+    with profile_ops() as prof:
+        engine.decode_fn(params, ...)   # runs eagerly, each op fenced
+    print(prof.format_table())
+
+Two things make the numbers honest:
+
+  * profiling runs under ``jax.disable_jit()`` — inside a jitted program
+    the registry functions execute only at trace time, so timing them
+    there would measure tracing, not compute;
+  * every wrapped call is block_until_ready-fenced on BOTH sides: the
+    fence before ``t0`` drains async work a previous op left in flight
+    (which would otherwise be billed to this op), the fence after stops
+    the clock only when this op's outputs exist.
+
+When no profiler is active the dispatch hook is a single ``is None``
+check — the serving hot path never sees this module.
+
+The profiler also counts tuning-cache consults/hits/misses: dispatch's
+``_schedule_for`` reports every lookup, so a profile shows not just
+where the time went but whether the tuned schedules were actually bound.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+class OpProfiler:
+    """Accumulates (op, impl) -> calls / wall seconds, plus tuning-cache
+    consult outcomes. Created via :func:`profile_ops`; read via
+    ``table()`` / ``summary()`` / ``format_table()``."""
+
+    def __init__(self):
+        self.ops: Dict[Tuple[str, str], List] = {}  # (op, impl) -> [n, s]
+        self.cache_consults = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_by_op: Dict[str, List] = {}  # op -> [consults, hits]
+
+    # -- dispatch hooks -----------------------------------------------------
+    def wrap(self, name: str, impl: str, fn):
+        import jax
+
+        cell = self.ops.setdefault((name, impl), [0, 0.0])
+
+        def timed(*args, **kwargs):
+            jax.block_until_ready(
+                [a for a in args if hasattr(a, "dtype")
+                 or hasattr(a, "mean")])
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            jax.block_until_ready(out)
+            cell[0] += 1
+            cell[1] += time.perf_counter() - t0
+            return out
+
+        return timed
+
+    def on_cache_consult(self, op: str, hit: bool) -> None:
+        self.cache_consults += 1
+        per = self.cache_by_op.setdefault(op, [0, 0])
+        per[0] += 1
+        if hit:
+            self.cache_hits += 1
+            per[1] += 1
+        else:
+            self.cache_misses += 1
+
+    # -- reduction ----------------------------------------------------------
+    @property
+    def total_seconds(self) -> float:
+        return sum(s for _, s in self.ops.values())
+
+    def table(self) -> List[dict]:
+        """Per-(op, impl) rows sorted by total time descending — the
+        Table-4 shape: op, impl, calls, total/mean time, share."""
+        total = self.total_seconds
+        rows = []
+        for (op, impl), (n, s) in self.ops.items():
+            rows.append({
+                "op": op, "impl": impl, "calls": n,
+                "total_s": s,
+                "mean_us": s / n * 1e6 if n else 0.0,
+                "frac": s / total if total > 0 else 0.0,
+            })
+        rows.sort(key=lambda r: (-r["total_s"], r["op"], r["impl"]))
+        return rows
+
+    def summary(self) -> dict:
+        return {
+            "total_s": self.total_seconds,
+            "rows": self.table(),
+            "cache_consults": self.cache_consults,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_by_op": {op: {"consults": c, "hits": h}
+                            for op, (c, h) in sorted(
+                                self.cache_by_op.items())},
+        }
+
+    def format_table(self) -> str:
+        """Human-readable per-layer breakdown (the paper's Table-4 look):
+        one line per (op, impl) plus the tuning-cache consult line."""
+        lines = [f"{'op':18s} {'impl':7s} {'calls':>6s} {'total_ms':>9s} "
+                 f"{'mean_us':>9s} {'share':>6s}"]
+        for r in self.table():
+            lines.append(
+                f"{r['op']:18s} {r['impl']:7s} {r['calls']:6d} "
+                f"{r['total_s'] * 1e3:9.3f} {r['mean_us']:9.1f} "
+                f"{r['frac'] * 100:5.1f}%")
+        lines.append(
+            f"tuning cache: {self.cache_consults} consults, "
+            f"{self.cache_hits} hits, {self.cache_misses} misses")
+        return "\n".join(lines)
+
+
+@contextlib.contextmanager
+def profile_ops(disable_jit: bool = True):
+    """Activate per-op profiling on the dispatch registry for the
+    duration. ``disable_jit=True`` (the default) forces eager execution
+    so the wrapped registry functions actually run per call — keep it
+    unless you only want the tuning-cache consult counters from a fresh
+    trace."""
+    import jax
+
+    from repro.core import dispatch
+
+    prof = OpProfiler()
+    prev = dispatch.set_profiler(prof)
+    try:
+        if disable_jit:
+            with jax.disable_jit():
+                yield prof
+        else:
+            yield prof
+    finally:
+        dispatch.set_profiler(prev)
+
+
+__all__ = ["OpProfiler", "profile_ops"]

@@ -1,0 +1,59 @@
+"""Run provenance: the facts needed to compare two result files.
+
+Every benchmark row and metrics export carries this dict so an
+interpret-mode CPU trajectory and a future real-TPU run can never be
+confused: git sha (what code), device kind + backend (what hardware),
+jax/jaxlib versions (what toolchain), interpret flag (whether the Pallas
+kernels ran interpreted or compiled).
+"""
+from __future__ import annotations
+
+import functools
+import subprocess
+
+
+@functools.lru_cache(maxsize=1)
+def git_sha() -> str:
+    """Current commit sha ('unknown' outside a git checkout)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, check=False)
+        sha = out.stdout.strip()
+        if out.returncode == 0 and sha:
+            return sha
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def run_metadata() -> dict:
+    """Provenance dict for result files. Device facts degrade to
+    'unknown' rather than raise — a docs build without a usable backend
+    must still be able to stamp files."""
+    import jax
+
+    try:
+        dev = jax.devices()[0]
+        device_kind = dev.device_kind
+        backend = jax.default_backend()
+    except Exception:
+        device_kind = backend = "unknown"
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:
+        jaxlib_version = "unknown"
+    from repro.kernels.ops import _interpret
+
+    return {
+        "git_sha": git_sha(),
+        "device_kind": device_kind,
+        "backend": backend,
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+        "interpret_mode": bool(_interpret()),
+    }
+
+
+__all__ = ["run_metadata", "git_sha"]

@@ -46,6 +46,7 @@ from repro.core.gaussian import is_gaussian
 from repro.core.modes import Mode
 from repro.models import lm
 from repro.nn.module import Context
+from repro.obs.trace import Tracer
 from repro.serving.batcher import Request
 from repro.serving.decode import uncertainty_decode
 from repro.serving.engine.metrics import EngineMetrics
@@ -159,7 +160,8 @@ class Engine:
                  config: EngineConfig = EngineConfig(), *,
                  router: Optional[UncertaintyRouter] = None,
                  scheduler: Optional[RequestScheduler] = None,
-                 mesh=None, pool=None, prefix: Optional[PrefixIndex] = None):
+                 mesh=None, pool=None, prefix: Optional[PrefixIndex] = None,
+                 tracer=None, lane: str = "engine"):
         """``pool``/``prefix`` inject SHARED decode state (disaggregated
         serving: a prefill engine and a decode engine over one page pool
         and one prefix index). The injecting owner is responsible for the
@@ -240,6 +242,18 @@ class Engine:
         # by the admission it gated
         self._prefix_match = None
         self.metrics = EngineMetrics()
+        # OOD alarms threshold on the router's abstain bound unless the
+        # router config pins an explicit one.
+        self._ood_mi = (self.router.config.ood_mi
+                        if self.router.config.ood_mi is not None
+                        else self.router.config.mi_abstain)
+        self.metrics.uncertainty.set_ood_threshold(self._ood_mi)
+        # Structured tracing: ``tracer`` is a shared obs Tracer (bound to
+        # this engine's ``lane``) or an already-bound LaneTracer. None =
+        # tracing off — every emit site is guarded, so the disabled
+        # engine pays nothing.
+        self._tracer = (tracer.bind(lane) if isinstance(tracer, Tracer)
+                        else tracer)
         self.finished: List[Request] = []
         self._slots: List[Optional[_Slot]] = [None] * config.slots
         # Pool states as of just BEFORE the latest lockstep decode step —
@@ -459,6 +473,10 @@ class Engine:
     def submit(self, req: Request) -> bool:
         ok = self.scheduler.submit(req, float(self._step_idx))
         self.metrics.on_submit(ok)
+        if self._tracer is not None:
+            self._tracer.emit(self._step_idx, "submit", uid=req.uid,
+                              accepted=ok, prompt_len=len(req.prompt),
+                              max_new=req.max_new_tokens)
         return ok
 
     def reset_metrics(self) -> None:
@@ -466,6 +484,7 @@ class Engine:
         measure the hot path instead of trace/compile time). Compiled
         programs and pool state are kept."""
         self.metrics = EngineMetrics()
+        self.metrics.uncertainty.set_ood_threshold(self._ood_mi)
 
     @property
     def now(self) -> int:
@@ -533,14 +552,15 @@ class Engine:
         # they never hold the bounded admission queue against live traffic
         for e in self.scheduler.drain_expired(now):
             self.metrics.on_expire()
+            if self._tracer is not None:
+                self._tracer.emit(self._step_idx, "expire", uid=e.uid)
             self.finished.append(e)
         self._admit(now)
         self._prefill()
         self._route_and_decode(now)
         self._step_idx += 1
         if self.paged:
-            pages = (self.pool.live_pages, self.pool.total_pages,
-                     self.pool.page_fragmentation())
+            pages = self.pool.page_gauges()
             if self.prefix is not None:
                 pages += (self.pool.shared_pages, self.prefix.pages_held)
             self.metrics.on_step(self.pool.live, pages=pages)
@@ -586,6 +606,8 @@ class Engine:
                 req, expired = self.scheduler.pop_ready(now)
             for e in expired:
                 self.metrics.on_expire()
+                if self._tracer is not None:
+                    self._tracer.emit(self._step_idx, "expire", uid=e.uid)
                 self.finished.append(e)
             if req is None:
                 # The head may be blocked only by pages the prefix index
@@ -621,6 +643,12 @@ class Engine:
                 sl.prefill_pos = matched
                 sl.write_start = matched
                 self.metrics.on_prefix(matched, len(pages))
+            if self._tracer is not None:
+                extra = ({"shared_pages": len(pages),
+                          "matched_tokens": matched}
+                         if self.prefix is not None else {})
+                self._tracer.emit(self._step_idx, "admit", uid=req.uid,
+                                  slot=slot, **extra)
             if self.paged and self.config.reserve_pages:
                 # pop_ready admitted against the free-page count (prefix
                 # pages discounted), so reserving the full prompt +
@@ -678,6 +706,10 @@ class Engine:
             sl.prefill_pos += n
             self.pool.positions[slot] = sl.prefill_pos
             self.metrics.on_prefill(n)
+            if self._tracer is not None:
+                self._tracer.emit(self._step_idx, "prefill_round",
+                                  uid=sl.request.uid, slot=slot, tokens=n,
+                                  pos=sl.prefill_pos)
             if sl.prefill_pos == len(prompt):
                 if sl.request.prefill_only:
                     # disaggregation: the pages are the product — finish
@@ -757,6 +789,10 @@ class Engine:
                                      jnp.asarray(out_idx),
                                      jnp.asarray(done),
                                      self._lm_mean, self._lm_var)
+            if self._tracer is not None:
+                self._tracer.emit(self._step_idx, "prefill_round",
+                                  slots=len(planned),
+                                  tokens=sum(n for _, n, _ in planned))
             for slot, n, end in planned:
                 sl = self._slots[slot]
                 sl.prefill_pos = end
@@ -808,6 +844,11 @@ class Engine:
             sl = self._slots[slot]
             req = sl.request
             tok, mi, decision = resolved[slot]
+            if self._tracer is not None:
+                self._tracer.emit(self._step_idx, "route", uid=req.uid,
+                                  token=tok, mi=mi,
+                                  decision=decision.value,
+                                  tok_idx=len(req.generated))
             if decision is Decision.ABSTAIN:
                 req.mi_trace.append(mi)
                 req.abstained = True
@@ -857,6 +898,9 @@ class Engine:
             self._lm_mean, self._lm_var, self.pool.states = self._decode_fn(
                 *args, self._lm_mean, self._lm_var)
         self.metrics.on_decode_pass()
+        if self._tracer is not None:
+            self._tracer.emit(self._step_idx, "decode_step",
+                              active=int(active.sum()))
         self.pool.positions[active] += 1
         for slot in np.flatnonzero(active):
             self._slots[slot].replay = None  # replay via _prev_states now
@@ -893,6 +937,11 @@ class Engine:
                 sl = self._slots[slot]
                 req = sl.request
                 tok, mi, decision = resolved[slot]
+                if self._tracer is not None:
+                    self._tracer.emit(self._step_idx, "route", uid=req.uid,
+                                      token=tok, mi=mi,
+                                      decision=decision.value,
+                                      tok_idx=len(req.generated))
                 if decision is Decision.ABSTAIN:
                     req.mi_trace.append(mi)
                     req.abstained = True
@@ -954,6 +1003,9 @@ class Engine:
                 self.params, jnp.asarray(head), jnp.asarray(pos0),
                 self.pool.states, table)).T          # (K-1, B) -> (B, K-1)
             self.metrics.on_draft_pass(k - 1)
+            if self._tracer is not None:
+                self._tracer.emit(self._step_idx, "spec_draft",
+                                  slots=len(live), drafted=k - 1)
         if self._draft_override is not None:
             drafts = self._draft_override(drafts)
 
@@ -1009,6 +1061,18 @@ class Engine:
                 mi = float(mi_np[slot, i])
                 tok = int(tok_np[slot, i])
                 decision = self.router.route(mi)
+                if decision is not Decision.ESCALATE:
+                    # An ESCALATE row is NOT counted here: it re-routes
+                    # next step in phase 0 under the same (uid, token)
+                    # key, and _resolve_escalations counts it there —
+                    # band totals match the plain engine's exactly.
+                    self.metrics.on_decision(mi, decision.value)
+                if self._tracer is not None:
+                    self._tracer.emit(self._step_idx, "route",
+                                      uid=req.uid, token=tok, mi=mi,
+                                      decision=decision.value,
+                                      tok_idx=len(req.generated),
+                                      speculative=True)
                 if decision is Decision.ESCALATE:
                     # Stop UNSERVED: row i's logits become the slot's
                     # current logits and next step's phase 0 — same
@@ -1059,6 +1123,10 @@ class Engine:
             if finish_reason is not None:
                 self._finish(slot, finish_reason, now)
         self.metrics.on_spec_round(drafted_total, accepted_total)
+        if self._tracer is not None:
+            self._tracer.emit(self._step_idx, "spec_verify",
+                              slots=len(live), drafted=drafted_total,
+                              accepted=accepted_total)
 
     # -- escalation ----------------------------------------------------------
     def _resolve_escalations(self, decode_slots, tok_np, mi_np):
@@ -1073,20 +1141,22 @@ class Engine:
             mi = float(mi_np[slot])
             tok = int(tok_np[slot])
             decision = self.router.route(mi)
+            self.metrics.on_decision(mi, decision.value)
             if decision is Decision.ESCALATE:
                 esc.append(slot)
             else:
                 out[slot] = (tok, mi, decision)
         if esc:
             if self.paged and self.config.batch_escalations:
-                out.update(self._escalate_batched(esc))
+                out.update(self._escalate_batched(esc, tok_np, mi_np))
             else:
                 for slot in esc:
                     out[slot] = self._escalate(slot, self._slots[slot],
-                                               float(mi_np[slot]))
+                                               float(mi_np[slot]),
+                                               int(tok_np[slot]))
         return out
 
-    def _escalate_batched(self, esc_slots):
+    def _escalate_batched(self, esc_slots, pfp_tok_np, pfp_mi_np):
         """ONE lockstep N-sample SVI pass resolving every escalating
         slot's second opinion — the way batched prefill amortizes chunk
         passes. Every row replays the inputs that produced its current
@@ -1153,7 +1223,18 @@ class Engine:
             mi = float(smi_np[slot])
             decision = (Decision.ABSTAIN if mi >= self.router.svi_mi_abstain
                         else Decision.CONTINUE)
-            out[slot] = (int(stok_np[slot]), mi, decision)
+            stok = int(stok_np[slot])
+            pfp_mi = float(pfp_mi_np[slot])
+            pfp_tok = int(pfp_tok_np[slot])
+            self.metrics.on_escalation_outcome(pfp_mi, pfp_tok, mi, stok,
+                                               decision.value)
+            if self._tracer is not None:
+                self._tracer.emit(self._step_idx, "escalate",
+                                  uid=self._slots[slot].request.uid,
+                                  pfp_mi=pfp_mi, svi_mi=mi,
+                                  agree=pfp_tok == stok,
+                                  outcome=decision.value, batched=True)
+            out[slot] = (stok, mi, decision)
         return out
 
     def _replay_window(self, slot: int, sl: _Slot):
@@ -1211,7 +1292,7 @@ class Engine:
                                    np.asarray([slot], np.int32))
         return sub, inputs, out_idx
 
-    def _escalate(self, slot: int, sl: _Slot, pfp_mi: float):
+    def _escalate(self, slot: int, sl: _Slot, pfp_mi: float, pfp_tok: int):
         """SVI second opinion for one gray-zone token. Returns the final
         (token, mi, decision): serve the SVI token, or abstain when the
         sampled ensemble is still uncertain."""
@@ -1227,9 +1308,16 @@ class Engine:
             self.params, inputs, sub, key, out_idx=out_idx)
         self.metrics.on_svi_pass(1)
         mi = float(smi)
-        if mi >= self.router.svi_mi_abstain:
-            return int(stok), mi, Decision.ABSTAIN
-        return int(stok), mi, Decision.CONTINUE
+        decision = (Decision.ABSTAIN if mi >= self.router.svi_mi_abstain
+                    else Decision.CONTINUE)
+        self.metrics.on_escalation_outcome(pfp_mi, pfp_tok, mi, int(stok),
+                                           decision.value)
+        if self._tracer is not None:
+            self._tracer.emit(self._step_idx, "escalate", uid=sl.request.uid,
+                              pfp_mi=pfp_mi, svi_mi=mi,
+                              agree=pfp_tok == int(stok),
+                              outcome=decision.value, batched=False)
+        return int(stok), mi, decision
 
     def _finish(self, slot: int, reason: str, now: float) -> None:
         sl = self._slots[slot]
@@ -1247,6 +1335,10 @@ class Engine:
         self._slots[slot] = None
         self.finished.append(sl.request)
         self.metrics.on_finish(sl.request, now)
+        if self._tracer is not None:
+            self._tracer.emit(self._step_idx, "finish", uid=sl.request.uid,
+                              reason=reason,
+                              tokens=len(sl.request.generated))
 
     # -- paged page-pressure handling ---------------------------------------
     def _ensure_pages(self, slot: int, upto_len: int) -> bool:
@@ -1262,7 +1354,11 @@ class Engine:
         before = self.pool.cow_copies
         if not self.pool.ensure_writable(slot, sl.write_start, upto_len):
             return False
-        self.metrics.on_cow(self.pool.cow_copies - before)
+        copied = self.pool.cow_copies - before
+        self.metrics.on_cow(copied)
+        if copied and self._tracer is not None:
+            self._tracer.emit(self._step_idx, "cow", uid=sl.request.uid,
+                              pages=copied)
         return True
 
     def _preempt(self, slot: int) -> None:
@@ -1275,11 +1371,17 @@ class Engine:
         self.pool.evict(slot)
         self._slots[slot] = None
         self.metrics.on_preemption()
+        if self._tracer is not None:
+            self._tracer.emit(self._step_idx, "preempt", uid=sl.request.uid,
+                              generated=len(sl.request.generated))
         displaced = self.scheduler.requeue(sl.request, float(self._step_idx))
         if displaced is not None:
             # the requeue displaced the newest un-started waiter to keep
             # the queue depth bounded; account it like a rejection
             self.metrics.on_requeue_overflow()
+            if self._tracer is not None:
+                self._tracer.emit(self._step_idx, "requeue_overflow",
+                                  uid=displaced.uid)
             self.finished.append(displaced)
 
     def _make_room(self, for_slot: int, upto_len: int) -> bool:
@@ -1314,6 +1416,8 @@ class Engine:
         if perm is None:
             return
         self.metrics.on_defrag()
+        if self._tracer is not None:
+            self._tracer.emit(self._step_idx, "defrag")
         if self._prev_states is not None:
             self._prev_states = lm.take_decode_slots(self._prev_states, perm)
 

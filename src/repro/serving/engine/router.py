@@ -63,6 +63,10 @@ class RouterConfig:
     mi_abstain: float = 2.0       # at or above: abstain immediately
     escalate_samples: int = 8     # SVI samples in the second-opinion pass
     svi_mi_abstain: Optional[float] = None  # default: mi_abstain
+    ood_mi: Optional[float] = None  # OOD-alarm threshold for the
+    #                                 uncertainty telemetry; default:
+    #                                 mi_abstain (routing itself never
+    #                                 reads this)
 
 
 def make_svi_fallback(cfg: ModelConfig, num_samples: int, *,

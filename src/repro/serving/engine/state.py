@@ -66,7 +66,7 @@ from __future__ import annotations
 
 import heapq
 import math
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -292,6 +292,12 @@ class PagedDecodeStatePool:
         live = self.live_pages
         return sum(1 for p, r in enumerate(self.page_ref)
                    if p > 0 and r > 0 and p > live)
+
+    def page_gauges(self) -> Tuple[int, int, int]:
+        """(live, total, fragmented) — the per-step page telemetry tuple
+        the engine hands to ``EngineMetrics.on_step``."""
+        return (self.live_pages, self.total_pages,
+                self.page_fragmentation())
 
     # -- lifecycle ----------------------------------------------------------
     def alloc(self, uid: int) -> int:

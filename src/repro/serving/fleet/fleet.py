@@ -20,6 +20,8 @@ import dataclasses
 from typing import List, Optional
 
 from repro.configs.base import ModelConfig
+from repro.obs.registry import Stopwatch
+from repro.obs.trace import Tracer
 from repro.serving.batcher import Request
 from repro.serving.engine.engine import Engine, EngineConfig
 from repro.serving.engine.router import RouterConfig, UncertaintyRouter
@@ -51,7 +53,7 @@ class Fleet:
                  fleet_config: FleetConfig = FleetConfig(), *,
                  router: Optional[UncertaintyRouter] = None,
                  scheduler_config: Optional[SchedulerConfig] = None,
-                 mesh=None):
+                 mesh=None, tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.config = config
         self.fleet_config = fleet_config
@@ -60,24 +62,39 @@ class Fleet:
                                        formulation=config.formulation,
                                        impl=config.impl)
         sched_cfg = scheduler_config or SchedulerConfig()
+        # One shared Tracer: the frontend emits on lane 'fleet', replica i
+        # on lane 'r<i>' (a DisaggPair fans out to 'r<i>.prefill' /
+        # 'r<i>.decode') — every lane shares one deterministic event
+        # sequence, so two identical runs produce byte-identical traces.
+        self._tracer = (tracer.bind("fleet") if isinstance(tracer, Tracer)
+                        else None)
         self.replicas: List = []
-        for _ in range(fleet_config.replicas):
+        for i in range(fleet_config.replicas):
             if fleet_config.disaggregate:
                 self.replicas.append(DisaggPair(
                     cfg, params, config, router=router,
-                    scheduler_config=sched_cfg, mesh=mesh))
+                    scheduler_config=sched_cfg, mesh=mesh, tracer=tracer,
+                    lane=f"r{i}"))
             else:
                 self.replicas.append(Engine(
                     cfg, params, config, router=router,
                     scheduler=RequestScheduler(sched_cfg,
                                                max_len=config.max_len),
-                    mesh=mesh))
+                    mesh=mesh, tracer=tracer, lane=f"r{i}"))
         self.router = PrefixRouter(min_tokens=fleet_config.route_min_tokens)
+        # ONE wall clock for the whole fleet: every replica engine's
+        # metrics and the frontend's share it, so the pooled throughput
+        # is exactly the sum of the per-replica throughputs.
+        clock = Stopwatch()
+        for r in self.replicas:
+            for e in (r.engines if hasattr(r, "engines") else (r,)):
+                e.metrics.set_clock(clock)
         pairs = (self.replicas if fleet_config.disaggregate else [])
         self.metrics = FleetMetrics(
             fleet_config.replicas,
             lambda: [r.metrics.summary() for r in self.replicas],
-            (lambda: pooled_handoff_gauges(pairs)) if pairs else None)
+            (lambda: pooled_handoff_gauges(pairs)) if pairs else None,
+            clock=clock)
         self.finished: List[Request] = []
         self._tick = 0
 
@@ -92,6 +109,11 @@ class Fleet:
 
     def submit(self, req: Request) -> bool:
         idx, matched, hit = self.router.route(req, self.replicas)
+        if self._tracer is not None:
+            # before the replica's own 'submit' event, so a request's
+            # routing always precedes its admission in the trace
+            self._tracer.emit(self._tick, "route_replica", uid=req.uid,
+                              replica=idx, matched=matched, prefix_hit=hit)
         ok = self.replicas[idx].submit(req)
         self.metrics.on_route(idx, matched, hit, ok)
         return ok

@@ -36,6 +36,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
+from repro.obs.trace import Tracer
 from repro.serving.batcher import Request
 from repro.serving.engine.engine import Engine, EngineConfig
 from repro.serving.engine.prefix import PrefixIndex
@@ -69,7 +70,8 @@ class DisaggPair:
                  config: EngineConfig = EngineConfig(), *,
                  router: Optional[UncertaintyRouter] = None,
                  scheduler_config: Optional[SchedulerConfig] = None,
-                 mesh=None):
+                 mesh=None, tracer: Optional[Tracer] = None,
+                 lane: str = "pair"):
         if config.page_size is None:
             raise ValueError("disaggregation requires the paged Gaussian "
                              "KV-cache (set page_size)")
@@ -101,14 +103,20 @@ class DisaggPair:
                                        formulation=config.formulation,
                                        impl=config.impl)
         sched_cfg = scheduler_config or SchedulerConfig()
+        # The engines trace on their own sub-lanes of the pair's lane;
+        # the pair itself emits only the handoff instants.
+        self._tracer = (tracer.bind(lane) if isinstance(tracer, Tracer)
+                        else None)
         self.prefill_engine = Engine(
             cfg, params, config, router=router,
             scheduler=RequestScheduler(sched_cfg, max_len=config.max_len),
-            mesh=mesh, pool=pool, prefix=prefix)
+            mesh=mesh, pool=pool, prefix=prefix, tracer=tracer,
+            lane=lane + ".prefill")
         self.decode_engine = Engine(
             cfg, params, config, router=router,
             scheduler=RequestScheduler(sched_cfg, max_len=config.max_len),
-            mesh=mesh, pool=pool, prefix=prefix)
+            mesh=mesh, pool=pool, prefix=prefix, tracer=tracer,
+            lane=lane + ".decode")
         self.finished: List[Request] = []
         self.metrics = _PairMetricsView(self)
         self._submitted = 0   # real requests offered to the pair
@@ -134,6 +142,12 @@ class DisaggPair:
     @property
     def now(self) -> int:
         return self._tick
+
+    @property
+    def engines(self):
+        """The pair's member engines (fleet wiring: shared-clock and
+        telemetry fan-out over every engine a replica holds)."""
+        return (self.prefill_engine, self.decode_engine)
 
     @property
     def active_slots(self) -> int:
@@ -218,7 +232,11 @@ class DisaggPair:
         for rec in records[self._rec_i:]:
             done = self._shadow_done.pop(rec.uid, None)
             if done is not None:
-                self.handoff_latencies.append(rec.admit_step - done)
+                ticks = rec.admit_step - done
+                self.handoff_latencies.append(ticks)
+                if self._tracer is not None:
+                    self._tracer.emit(self._tick, "handoff", uid=rec.uid,
+                                      ticks=ticks)
         self._rec_i = len(records)
         self._tick += 1
 
@@ -228,6 +246,11 @@ class DisaggPair:
         "preemptions", "requeue_overflow", "prefix_hits", "prefix_misses",
         "prefix_shared_pages", "prefill_tokens_saved", "cow_copies",
         "decode_passes", "verify_passes", "draft_passes", "svi_passes",
+        # uncertainty telemetry sums too (shadows never decode, so the
+        # prefill engine contributes zeros — summing keeps the key set
+        # uniform with the fleet reduction)
+        "band_continue", "band_escalate", "band_abstain", "ood_alarms",
+        "escalate_continue", "escalate_abstain",
     )
 
     def summary(self) -> dict:

@@ -3,14 +3,21 @@
 ``FleetMetrics`` owns the counters only the frontend can see (where each
 request was routed and why); everything per-replica is pulled from the
 replicas' own summaries at reduction time, so no event is double-booked.
-Pure host bookkeeping, like the engine metrics it aggregates.
+
+One wall clock for the whole fleet: the frontend constructs a shared
+:class:`~repro.obs.registry.Stopwatch` and hands it to every replica's
+``EngineMetrics``, and ``summary()`` freezes it while collecting — so
+the pooled ``throughput_tok_s`` is EXACTLY the sum of the per-replica
+throughputs. (Previously the fleet clock started at the first routed
+submit while each replica's started at its own first submit, so the
+pooled number could disagree with the per-replica sum by the start
+skew.)
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, List, Optional, Tuple
 
-from repro.serving.engine.metrics import percentile
+from repro.obs.registry import MetricsRegistry, Stopwatch, percentile
 
 # Replica work counters summed into the fleet summary (request-stream
 # counters like submitted/rejected live at the fleet boundary instead).
@@ -20,43 +27,61 @@ _SUM_KEYS = (
     "requeue_overflow", "prefix_hits", "prefix_misses",
     "prefix_shared_pages", "prefill_tokens_saved", "cow_copies",
     "decode_passes", "verify_passes", "draft_passes", "svi_passes",
+    # uncertainty telemetry pools by summation too
+    "band_continue", "band_escalate", "band_abstain", "ood_alarms",
+    "escalate_continue", "escalate_abstain",
 )
 
 
 class FleetMetrics:
     def __init__(self, num_replicas: int,
                  replica_summaries: Optional[Callable[[], List[dict]]] = None,
-                 pair_gauges: Optional[Callable[[], dict]] = None):
+                 pair_gauges: Optional[Callable[[], dict]] = None,
+                 clock: Optional[Stopwatch] = None):
         self.num_replicas = num_replicas
         self._replica_summaries = replica_summaries
         self._pair_gauges = pair_gauges
-        self.submitted = 0
-        self.rejected = 0
-        self.route_prefix_hits = 0    # routed to a replica's cached prefix
-        self.route_fallbacks = 0      # routed least-loaded (nothing cached)
-        self.route_tokens_matched = 0  # cached tokens at the routed replica
-        self.steps = 0
+        self.registry = MetricsRegistry()
+        self.clock = clock if clock is not None else Stopwatch()
+        self._c = {
+            "submitted": self.registry.counter(
+                "submitted", "requests offered to the fleet"),
+            "rejected": self.registry.counter(
+                "rejected", "requests the routed replica refused"),
+            "route_prefix_hits": self.registry.counter(
+                "route_prefix_hits", "routed to a replica's cached prefix"),
+            "route_fallbacks": self.registry.counter(
+                "route_fallbacks", "routed least-loaded (nothing cached)"),
+            "route_tokens_matched": self.registry.counter(
+                "route_tokens_matched",
+                "cached tokens at the routed replica"),
+            "steps": self.registry.counter("steps", "fleet ticks"),
+        }
         # per-step tuple of each replica's occupied slots
         self.occupancy_trace: List[Tuple[int, ...]] = []
-        self._t0: Optional[float] = None
+
+    def __getattr__(self, name):
+        c = self.__dict__.get("_c")
+        if c is not None and name in c:
+            return c[name].value
+        raise AttributeError(name)
 
     # -- events -------------------------------------------------------------
     def on_route(self, replica: int, matched: int, prefix_hit: bool,
                  accepted: bool) -> None:
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
-        self.submitted += 1
+        self.clock.start()
+        self._c["submitted"].inc()
         if not accepted:
-            self.rejected += 1
+            self._c["rejected"].inc()
             return
         if prefix_hit:
-            self.route_prefix_hits += 1
-            self.route_tokens_matched += matched
+            self._c["route_prefix_hits"].inc()
+            self._c["route_tokens_matched"].inc(matched)
         else:
-            self.route_fallbacks += 1
+            self._c["route_fallbacks"].inc()
 
     def on_step(self, occupancies: Tuple[int, ...]) -> None:
-        self.steps += 1
+        self._c["steps"].inc()
         self.occupancy_trace.append(occupancies)
 
     # -- reduction ----------------------------------------------------------
@@ -66,12 +91,16 @@ class FleetMetrics:
         return self.route_prefix_hits / max(routed, 1)
 
     def summary(self) -> dict:
-        reps = (self._replica_summaries() if self._replica_summaries
-                else [])
+        # Freeze the shared clock across the whole reduction: every
+        # replica summary reads the same elapsed value, so the pooled
+        # throughput below is exactly the per-replica sum.
+        with self.clock.frozen():
+            reps = (self._replica_summaries() if self._replica_summaries
+                    else [])
+            elapsed = self.clock.elapsed()
         out = {k: sum(r.get(k, 0) for r in reps) for k in _SUM_KEYS}
         out["prefix_hit_rate"] = out["prefix_hits"] / max(
             out["prefix_hits"] + out["prefix_misses"], 1)
-        elapsed = (time.perf_counter() - self._t0) if self._t0 else 0.0
         out["elapsed_s"] = elapsed
         out["throughput_tok_s"] = \
             out["tokens_generated"] / max(elapsed, 1e-9)
@@ -95,6 +124,8 @@ class FleetMetrics:
         out["final_occupancy"] = sum(occ[-1]) if occ else 0
         out["per_replica_tokens"] = [
             r.get("tokens_generated", 0) for r in reps]
+        out["per_replica_throughput_tok_s"] = [
+            r.get("throughput_tok_s", 0.0) for r in reps]
         # latency percentiles over the POOLED request records would need
         # raw traces; p50/p99 of the per-replica p50/p99s is not that.
         # Expose the per-replica values instead of a misleading merge.
