@@ -44,7 +44,15 @@ Row families, emitted through benchmarks/common.py:
                               passes per served token, plus the
                               batched-escalation pair (at most one SVI
                               pass per engine step, strictly fewer SVI
-                              passes than sequential second opinions).
+                              passes than sequential second opinions);
+  serving/warm_start/...      the fleet warm-start acceptance row: a cold
+                              replica (empty tuning cache, tune + persist
+                              at startup) vs a warm replica preloading the
+                              persisted fleet schedule DB — the derived
+                              column carries the tuning-cache consult
+                              counters proving zero schedule search on the
+                              warm hot path, and the cold/warm
+                              startup-to-first-decode wall times.
 
 Quick profile: 32 requests; --full: the acceptance-criteria 200-request
 run. ``python benchmarks/bench_serving.py --page-size 4 8 16`` sweeps
@@ -78,7 +86,8 @@ PAGE_SIZE = 8
 def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
                   svi_mi_abstain=None, page_size=None, slots=SLOTS,
                   page_budget=None, reserve_pages=True, prefix_sharing=False,
-                  speculate_k=0, batch_escalations=True, tracer=None):
+                  speculate_k=0, batch_escalations=True, tracer=None,
+                  impl=None):
     router = UncertaintyRouter(
         cfg, RouterConfig(mi_continue=mi_continue, mi_abstain=mi_abstain,
                           svi_mi_abstain=svi_mi_abstain,
@@ -89,6 +98,7 @@ def _build_engine(cfg, params, *, mi_continue=0.5, mi_abstain=3.0,
     return Engine(cfg, params,
                   EngineConfig(slots=slots, max_len=MAX_LEN,
                                num_uncertainty_samples=16, seed=0,
+                               impl=impl,
                                page_size=page_size, page_budget=page_budget,
                                reserve_pages=reserve_pages,
                                auto_defrag=page_size is not None,
@@ -493,6 +503,86 @@ def _fleet_row(lines, cfg, params, *, m=4):
         f";prefix_hit_rate={s['prefix_hit_rate']:.3f}"))
 
 
+def _warm_start_row(lines, cfg, params):
+    """Fleet warm-start acceptance row: a cold replica consults the tuning
+    cache with nothing in it (every query a miss) and has to tune + persist
+    at startup; a warm replica preloads the persisted fleet schedule DB and
+    compiles straight through — the derived column carries the consult
+    counters proving ZERO schedule search ran on the warm hot path, plus
+    the cold/warm startup-to-first-decode wall times."""
+    import os
+    import tempfile
+    import time as _time
+
+    from repro.tuning import cache as tc
+    from repro.tuning import measure as tm
+
+    def first_decode(engine):
+        b = engine.config.slots
+        feed = jnp.zeros((b, 1), jnp.int32)
+        pos = jnp.zeros((b, 1), jnp.int32)
+        clen = jnp.zeros(b, jnp.int32)
+        active = jnp.zeros(b, bool)
+        jax.block_until_ready(engine.decode_fn(
+            engine.params, feed, pos, clen, active, engine.pool.states,
+            *engine.logit_buffers))
+
+    tmp = tempfile.mkdtemp(prefix="repro-fleetdb-")
+    db_path = os.path.join(tmp, "db.json")
+    prev_path = os.path.join(tmp, "prev.json")
+    # This row owns the global cache for its cold/warm halves; stash the
+    # harness's warmed state (run.py --tune) and restore it after.
+    tc.global_cache().save(prev_path, merge=False)
+    try:
+        # cold replica: every consult misses; tune what was consulted and
+        # persist the DB (exactly what serve.py --save-schedule-db does)
+        tc.reset_global_cache()
+        t0 = _time.perf_counter()
+        with tc.record_shapes() as queries:
+            # the tuning cache only matters on the kernel stack; pin it so
+            # the row is meaningful under the default (xla) harness impl
+            engine = _build_engine(cfg, params, impl="kernel")
+            first_decode(engine)
+        t_cold_compile = _time.perf_counter() - t0
+        cold = tc.consult_counters()
+        cache = tc.global_cache()
+        for op, shape_key, dtype, backend in dict.fromkeys(queries):
+            if cache.get(op, shape_key, dtype, backend) is None:
+                tm.tune_into_cache(cache, op, shape_key, dtype, backend,
+                                   mode="rank")
+        cache.save(db_path)
+        t_cold = _time.perf_counter() - t0
+        db_entries = len(cache)
+
+        # warm replica: preload the fleet DB, compile straight through.
+        # Drop the cold replica's jit caches first — a real warm replica
+        # is a fresh process; without this the warm half would replay the
+        # cold executables and never consult (or honestly recompile).
+        jax.clear_caches()
+        tc.reset_global_cache()
+        t0 = _time.perf_counter()
+        tc.load_global_cache(db_path)
+        engine = _build_engine(cfg, params, impl="kernel")
+        first_decode(engine)
+        t_warm = _time.perf_counter() - t0
+        warm = tc.consult_counters()
+        assert warm["consults"] > 0 and warm["misses"] == 0, (
+            f"warm replica missed the tuning cache {warm['misses']} of "
+            f"{warm['consults']} consults — the fleet DB does not cover "
+            "the decode shape set")
+        lines.append(emit(
+            f"serving/warm_start/b{engine.config.slots}", t_warm,
+            f"cold_s={t_cold:.3f};cold_compile_s={t_cold_compile:.3f}"
+            f";warm_s={t_warm:.3f}"
+            f";startup_speedup={t_cold / max(t_warm, 1e-9):.2f}"
+            f";consults={warm['consults']};hits={warm['hits']}"
+            f";misses={warm['misses']};cold_misses={cold['misses']}"
+            f";db_entries={db_entries}"))
+    finally:
+        tc.reset_global_cache()
+        tc.load_global_cache(prev_path)
+
+
 def run(quick: bool = True, page_sizes=None):
     lines = []
     cfg = reduced_config(ARCH)
@@ -527,6 +617,9 @@ def run(quick: bool = True, page_sizes=None):
 
     # -- multi-replica disaggregated fleet vs single engine ----------------
     _fleet_row(lines, cfg, params, m=4 if quick else 8)
+
+    # -- fleet warm-start: preloaded schedule DB, zero hot-path search -----
+    _warm_start_row(lines, cfg, params)
     return lines
 
 

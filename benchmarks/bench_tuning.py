@@ -1,0 +1,122 @@
+"""Autotuner benchmark: tuned-vs-default schedule wall clock per op.
+
+Row families, emitted through benchmarks/common.py:
+
+  tuning/tuned_vs_default/...  one row per (op, shape) fixture: the
+                               kernel-impl wrapper timed under the fixed
+                               ``kernels/ops.py`` default schedule and
+                               under the autotuner's winner. The derived
+                               column carries both wall clocks, the
+                               speedup, the tuner mode (time on TPU, rank
+                               elsewhere), the candidate count and the
+                               winner's predicted seconds — so the perf
+                               trajectory accumulates tuner rows even on
+                               backends where the numbers measure the
+                               interpreter rather than the schedule;
+  tuning/calibration/...       one row per calibrated op: a small
+                               time-mode sweep fits the per-(op, backend)
+                               correction coefficients and the derived
+                               column reports the fit residual, sample
+                               count and whether calibrated re-ranking
+                               changed the cost model's top-1 candidate.
+
+The module tunes into a PRIVATE ScheduleCache so bench runs never mutate
+the process-global cache other benches dispatch on. Quick profile uses
+reduced-LM-sized shapes and few timing iters; --full widens the shapes
+and sweeps attention too. Off-TPU these are interpret-mode timings —
+relative ordering is about the interpreter, but the rows still pin the
+tuner end-to-end (search -> measure -> calibrate -> cache) and the
+schedule column records what won.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.tuning import cache as tc
+from repro.tuning import measure as tm
+from repro.tuning import search
+
+
+def _fixtures(quick: bool):
+    fixtures = [
+        ("dense", (8, 256, 256)),
+        ("rmsnorm", (8, 256)),
+        ("norm_dense_act", (8, 256, 256)),
+    ]
+    if not quick:
+        fixtures += [
+            ("dense", (64, 512, 512)),
+            ("attention", (1, 4, 4, 32, 32, 64)),
+            ("attention_paged", (2, 4, 4, 1, 32, 64)),
+        ]
+    return fixtures
+
+
+def _tuned_vs_default_row(lines, cache, op, shape_key, *, backend, iters):
+    runner = tm.make_runner(op, shape_key)
+    # schedule=None is exactly what a cache miss dispatches: the fixed
+    # MXU-aligned defaults baked into kernels/ops.py.
+    t_default = tm.measure_schedule(runner, None, iters=iters)
+    calibrated = cache.get_calibration(op, backend) is not None
+    result = tm.tune_into_cache(cache, op, shape_key, "float32", backend,
+                                iters=iters)
+    t_tuned = tm.measure_schedule(runner, result.best, iters=iters)
+    best = result.records[0]
+    predicted = best["predicted_s"]
+    derived = ";".join([
+        f"default_s={t_default:.6f}",
+        f"tuned_s={t_tuned:.6f}",
+        f"speedup={t_default / t_tuned:.3f}",
+        f"mode={result.mode}",
+        f"candidates={len(result.records)}",
+        f"predicted_s={predicted:.2e}" if predicted else "predicted_s=-",
+        f"calibrated_rank={int(calibrated)}",
+    ])
+    name = "x".join(str(d) for d in shape_key)
+    lines.append(emit(f"tuning/tuned_vs_default/{op}/{name}", t_tuned,
+                      derived, impl="kernel",
+                      schedule=result.best.describe()))
+
+
+def _calibration_row(lines, op, shape_key, *, backend, iters):
+    """Fit correction coefficients from a small time-mode sweep and report
+    whether calibrated re-ranking moves the cost model's top-1."""
+    result = tm.tune_op(op, shape_key, mode="time", limit=6, iters=iters)
+    fit = tm.fit_calibration(result.records, device_kind=backend)
+    if fit is None:
+        return
+    uncal = search.candidates(op, shape_key, limit=6)[0]
+    cal = search.candidates(op, shape_key, limit=6, calibration=fit)[0]
+    derived = ";".join([
+        f"records={fit['records']}",
+        f"residual_s={fit['residual_s']:.2e}",
+        f"measured_s={fit['measured_s']:.6f}",
+        f"reranked={int(cal.describe() != uncal.describe())}",
+    ])
+    name = "x".join(str(d) for d in shape_key)
+    lines.append(emit(f"tuning/calibration/{op}/{name}", fit["measured_s"],
+                      derived, impl="kernel", schedule=cal.describe()))
+
+
+def run(quick: bool = True):
+    lines = []
+    backend = tc.default_backend()
+    iters = 2 if quick else 5
+    cache = tc.ScheduleCache()  # private: never mutates the global cache
+    for op, shape_key in _fixtures(quick):
+        _tuned_vs_default_row(lines, cache, op, shape_key,
+                              backend=backend, iters=iters)
+    # One calibration fixture is enough for the trajectory row; the full
+    # profile adds the fused unit so both calibration tables accumulate.
+    cal_fixtures = [("dense", (8, 256, 256))]
+    if not quick:
+        cal_fixtures.append(("norm_dense_act", (8, 256, 256)))
+    for op, shape_key in cal_fixtures:
+        _calibration_row(lines, op, shape_key, backend=backend, iters=iters)
+    return lines
+
+
+if __name__ == "__main__":
+    from benchmarks.common import CSV_HEADER
+
+    print(CSV_HEADER)
+    run()

@@ -83,7 +83,8 @@ def main() -> None:
     from benchmarks import (bench_fig5_formulations, bench_fig7_batch_sweep,
                             bench_serving, bench_table1_quality,
                             bench_table2_schedules, bench_table3_maxpool,
-                            bench_table4_profiling, bench_table5_processors)
+                            bench_table4_profiling, bench_table5_processors,
+                            bench_tuning)
 
     benches = {
         "table1": bench_table1_quality,
@@ -94,6 +95,7 @@ def main() -> None:
         "fig7": bench_fig7_batch_sweep,
         "table5": bench_table5_processors,
         "serving": bench_serving,
+        "tuning": bench_tuning,
     }
     from benchmarks.common import CSV_HEADER
 
@@ -107,21 +109,23 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
             traceback.print_exc()
-    if "serving" in rows:
-        _write_serving_summary(rows["serving"], full=args.full,
-                               impl=args.impl)
+    for family in ("serving", "tuning"):
+        if family in rows:
+            _write_bench_summary(rows[family], family=family,
+                                 full=args.full, impl=args.impl)
     if failures:
         print(f"FAILURES: {[n for n, _ in failures]}", file=sys.stderr)
         sys.exit(1)
 
 
-def _write_serving_summary(lines, *, full: bool, impl) -> None:
-    """Persist the serving rows as results/BENCH_serving.json — a
-    machine-readable artifact (uploaded by CI) so the serving perf
-    trajectory is trackable across PRs instead of living only in logs.
-    Every row carries the run metadata (git sha, device kind, jax/jaxlib
-    versions, interpret-mode flag), so rows stay attributable after CI
-    concatenates artifacts across commits and machines."""
+def _write_bench_summary(lines, *, family: str, full: bool, impl) -> None:
+    """Persist one bench family's rows as results/BENCH_<family>.json — a
+    machine-readable artifact (uploaded by CI) so the perf trajectory
+    (serving AND autotuner rows) is trackable across PRs instead of
+    living only in logs. Every row carries the run metadata (git sha,
+    device kind, jax/jaxlib versions, interpret-mode flag), so rows stay
+    attributable after CI concatenates artifacts across commits and
+    machines."""
     from repro.core.dispatch import resolve_impl
     from repro.obs.runmeta import run_metadata
 
@@ -148,12 +152,12 @@ def _write_serving_summary(lines, *, full: bool, impl) -> None:
         "meta": meta,
         "rows": [parse(line) for line in lines],
     }
-    out = os.path.join("results", "BENCH_serving.json")
+    out = os.path.join("results", f"BENCH_{family}.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
-    print(f"# serving summary -> {out} ({len(payload['rows'])} rows)",
+    print(f"# {family} summary -> {out} ({len(payload['rows'])} rows)",
           flush=True)
 
 

@@ -13,6 +13,8 @@
 11. Fleet serving: two disaggregated replicas behind a prefix router
 12. Observability: deterministic traces (Perfetto-viewable), metrics
     registry exports, live per-op profile, uncertainty telemetry (repro.obs)
+13. Warm-start fleet schedule DB: tune once, persist, every replica
+    serves warm with zero schedule search on the hot path (repro.tuning)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -401,6 +403,46 @@ def main():
     # m.prom --profile-ops` exports all of this from a real run, and
     # `python -m repro.obs.validate` schema-checks the artifacts (the CI
     # obs-smoke job's gate).
+
+    print("== 13. Warm-start fleet schedule DB: tune once, serve warm ==")
+    # A fleet replica should never search schedules on its hot path. The
+    # COLD replica records every (op, shape, dtype, backend) its forward
+    # consults, tunes the missing entries (cost-model 'rank' mode here —
+    # free; wall-clock on TPU) and atomically merge-saves the per-backend
+    # DB — concurrent replicas flushing the same path merge instead of
+    # corrupting each other. Every WARM replica preloads the DB and the
+    # consult counters prove zero search ever ran.
+    import os as _os
+    import tempfile as _tempfile
+
+    from repro.tuning import cache as sched_cache
+    from repro.tuning import measure as sched_measure
+
+    db_path = _os.path.join(_tempfile.mkdtemp(), "fleet_schedules.json")
+    reset_global_cache()
+    with sched_cache.record_shapes() as queries:  # --- the cold replica
+        mlp_forward(pfp_params, xs, Context(mode=Mode.PFP, impl="kernel"))
+    cold = sched_cache.consult_counters()
+    cache = sched_cache.global_cache()
+    for op, shape_key, dtype, backend in dict.fromkeys(queries):
+        if cache.get(op, shape_key, dtype, backend) is None:
+            sched_measure.tune_into_cache(cache, op, shape_key, dtype,
+                                          backend, mode="rank")
+    cache.save(db_path)  # temp-file + atomic rename, merge-on-conflict
+    print(f"  cold replica: {cold['misses']} cache misses -> tuned and "
+          f"saved {len(cache)} entries to {_os.path.basename(db_path)}")
+    reset_global_cache()  # --- a warm replica is a fresh process
+    sched_cache.load_global_cache(db_path)
+    mlp_forward(pfp_params, xs, Context(mode=Mode.PFP, impl="kernel"))
+    warm = sched_cache.consult_counters()
+    print(f"  warm replica: {warm['consults']} consults = {warm['hits']} "
+          f"hits + {warm['misses']} misses (zero schedule search)")
+    assert warm["misses"] == 0, warm
+    reset_global_cache()  # keep the demo hermetic
+    # launch/serve.py wires this exact flow for real fleets:
+    #   serve --impl kernel --fuse-ops --save-schedule-db db.json   (cold)
+    #   serve --impl kernel --fuse-ops --schedule-db db.json \
+    #         --expect-warm-cache                                   (warm)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ another implementation / decorate the lookup" change.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -204,6 +205,12 @@ def pfp_dense(x, w, b=None, *, formulation: str = "srm",
     paper's three bias configurations, §5) — bias handling is shared by
     both implementations.
     """
+    if (isinstance(x, _PendingNorm) and formulation == "srm" and b is None
+            and is_gaussian(w) and _fusion_active(impl)):
+        # Fusion pass, step 2: a bias-free SRM dense over a pending norm
+        # stays pending — a following activation may complete the fused
+        # norm_dense_act unit.
+        return _PendingNormDense(x, w, impl)
     x = _to_compute_rep(x, formulation)
     out = get_op("dense", impl)(x, w, formulation)
     return _add_bias(out, b)
@@ -342,6 +349,12 @@ def _activation_kernel(x, kind):
 def pfp_activation(x: GaussianTensor, kind: str,
                    impl: Optional[str] = None) -> GaussianTensor:
     """Moment-matched activation. Consumes VAR, emits SRM (contract here)."""
+    if isinstance(x, _PendingNormDense):
+        # Fusion pass, step 3: the chain completed — run it as one kernel
+        # when the fused schedule is cached, else fall back unfused.
+        fused = x.fuse(kind, impl)
+        if fused is not None:
+            return fused
     return get_op("activation", impl)(x.to_var(), kind)
 
 
@@ -508,6 +521,9 @@ def pfp_rmsnorm(x: GaussianTensor, gain, *, eps: float = 1e-6,
     """RMSNorm under PFP. Emits VAR; with ``act`` the following
     moment-matched activation is fused at the registry level and the op
     emits SRM (activation contract)."""
+    if act is None and is_gaussian(x) and _fusion_active(impl):
+        # Fusion pass, step 1: defer — a dense may consume this norm.
+        return _PendingNorm(x, gain, None, "rmsnorm", eps, impl)
     return get_op("rmsnorm", impl)(x, gain, eps, act)
 
 
@@ -532,6 +548,8 @@ def pfp_layernorm(x: GaussianTensor, gain, bias=None, *, eps: float = 1e-6,
                   act: Optional[str] = None,
                   impl: Optional[str] = None) -> GaussianTensor:
     """LayerNorm under PFP. Emits VAR (SRM with fused ``act``)."""
+    if act is None and is_gaussian(x) and _fusion_active(impl):
+        return _PendingNorm(x, gain, bias, "layernorm", eps, impl)
     return get_op("layernorm", impl)(x, gain, bias, eps, act)
 
 
@@ -557,6 +575,208 @@ def pfp_glu_product(a: GaussianTensor, b: GaussianTensor,
                     impl: Optional[str] = None) -> GaussianTensor:
     """Product of independent Gaussians. Consumes SRM, emits SRM (exact)."""
     return get_op("glu_product", impl)(a.to_srm(), b.to_srm())
+
+
+# ---------------------------------------------------------------------------
+# norm_dense_act — the cross-op fused schedule unit (norm -> dense -> act)
+# ---------------------------------------------------------------------------
+# The transformer block's FFN entry is a fixed three-op chain: pre-norm,
+# a bias-free dense (the gate projection in gated MLPs, the up projection
+# otherwise), then a moment-matched activation. When the fusion pass is
+# enabled (OFF by default) the public wrappers stop executing eagerly and
+# instead hand out lazy "pending" GaussianTensors; if the chain completes
+# at an activation AND the tuned-schedule cache holds a schedule for the
+# fused unit, ONE Pallas kernel runs the whole chain (kernels/pfp_fused.py,
+# bit-for-bit with the unfused ops). Any other consumption of a pending —
+# attention projections, residuals, lm_head, a cache miss — materializes
+# the exact unfused chain, so enabling fusion can never change results.
+_FUSION = False
+_FUSABLE_ACTS = ("relu", "gelu", "silu", "tanh", "sigmoid")
+
+
+def set_fusion(enabled: bool) -> bool:
+    """Enable/disable the norm->dense->activation fusion pass process-wide.
+    Returns the previous setting so scopes nest."""
+    global _FUSION
+    prev = _FUSION
+    _FUSION = bool(enabled)
+    return prev
+
+
+def get_fusion() -> bool:
+    return _FUSION
+
+
+@contextlib.contextmanager
+def fusion(enabled: bool = True):
+    """Scoped :func:`set_fusion`."""
+    prev = set_fusion(enabled)
+    try:
+        yield
+    finally:
+        set_fusion(prev)
+
+
+def _fusion_active(impl: Optional[str]) -> bool:
+    return _FUSION and resolve_impl(impl) == "kernel"
+
+
+class _PendingFusion(GaussianTensor):
+    """Lazy GaussianTensor: materializes its unfused value on first
+    moment/rep access. Subclassing keeps ``is_gaussian`` and every layer
+    helper working unchanged. Pendings normally live only between two
+    consecutive dispatch calls inside one block trace; if one does reach
+    a pytree boundary (jit return, scan carry, eval_shape output) its
+    flatten forces the unfused value and it round-trips as a plain
+    GaussianTensor."""
+
+    def __init__(self):
+        object.__setattr__(self, "_value", None)
+
+    def _run(self) -> GaussianTensor:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _force(self) -> GaussianTensor:
+        if self._value is None:
+            object.__setattr__(self, "_value", self._run())
+        return self._value
+
+    @property
+    def mean(self):
+        return self._force().mean
+
+    @property
+    def second(self):
+        return self._force().second
+
+    @property
+    def rep(self):
+        return self._force().rep
+
+    # Pendings that reach a pytree boundary (a jit return, a scan carry,
+    # an eval_shape output — e.g. the lm_head chain, which ends without an
+    # activation) force themselves and flatten as the plain unfused value.
+    def tree_flatten(self):
+        value = self._force()
+        return (value.mean, value.second), (value.rep,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mean, second = children
+        return GaussianTensor(mean=mean, second=second, rep=aux[0])
+
+
+class _PendingNorm(_PendingFusion):
+    """A norm whose execution is deferred in case a dense+activation
+    follows. Materializes via the registered unfused norm op (memoized —
+    shared consumers like a gated MLP's two projections pay it once)."""
+
+    def __init__(self, x, gain, bias, kind, eps, impl):
+        super().__init__()
+        object.__setattr__(self, "x", x)
+        object.__setattr__(self, "gain", gain)
+        object.__setattr__(self, "bias", bias)
+        object.__setattr__(self, "kind", kind)
+        object.__setattr__(self, "eps", eps)
+        object.__setattr__(self, "impl", impl)
+
+    def _run(self) -> GaussianTensor:
+        if self.kind == "rmsnorm":
+            return get_op("rmsnorm", self.impl)(self.x, self.gain, self.eps,
+                                                None)
+        return get_op("layernorm", self.impl)(self.x, self.gain, self.bias,
+                                              self.eps, None)
+
+
+class _PendingNormDense(_PendingFusion):
+    """A bias-free SRM dense over a pending norm. If the next consumer is
+    a fusable activation (and the fused schedule is cached), the whole
+    chain runs as one kernel; otherwise materializes the exact unfused
+    dense over the (memoized) norm output."""
+
+    def __init__(self, pending_norm, w, impl):
+        super().__init__()
+        object.__setattr__(self, "pending_norm", pending_norm)
+        object.__setattr__(self, "w", w)
+        object.__setattr__(self, "impl", impl)
+
+    def _run(self) -> GaussianTensor:
+        h = self.pending_norm._force()
+        return get_op("dense", self.impl)(_to_compute_rep(h, "srm"),
+                                          self.w, "srm")
+
+    def fuse(self, act: str, impl: Optional[str]):
+        """Attempt the fused lowering; None -> caller falls back unfused.
+
+        The fused-unit schedule is consulted on EVERY attempt (hit or
+        miss) so shape recording discovers the unit and the profiler's
+        consult counters see it — a warm fleet DB therefore proves itself
+        with zero misses here too."""
+        if (self._value is not None or act not in _FUSABLE_ACTS
+                or not _fusion_active(impl)):
+            return None
+        norm = self.pending_norm
+        x, w = norm.x, self.w
+        dtype = _out_dtype(x, w)
+        shape_key = (_rows(x.shape), x.shape[-1], w.mean.shape[-1])
+        sched = _schedule_for("norm_dense_act", shape_key, dtype)
+        if sched is None:
+            return None  # cache miss: bit-for-bit unfused fallback
+        return _nda_run(x, norm.gain, norm.bias, w, None, norm.kind,
+                        norm.eps, act, sched, shape_key, dtype)
+
+
+# Registration routes tree operations through _PendingFusion's forcing
+# flatten instead of treating unregistered subclasses as opaque leaves.
+jax.tree_util.register_pytree_node_class(_PendingNorm)
+jax.tree_util.register_pytree_node_class(_PendingNormDense)
+
+
+def _nda_run(x, gain, bias, w, b, norm, eps, act, sched, shape_key, dtype):
+    """Run the fused kernel with an already-resolved fused schedule.
+    block_k is donated by the standalone dense op's schedule at the same
+    (K, N) so the fused accumulation tree matches the unfused chain."""
+    ops = _kernel_ops()
+    dense_sched = _schedule_for("dense", shape_key, dtype)
+    mu, srm = ops.pfp_norm_dense_act(
+        x.mean, x.second, gain, bias, w.mean, w.srm, b,
+        norm=norm, rep=x.rep, eps=eps, act=act, impl="kernel",
+        schedule=sched, dense_schedule=dense_sched)
+    return GaussianTensor(mu.astype(dtype), srm.astype(dtype), SRM)
+
+
+@register("norm_dense_act", "xla")
+def _norm_dense_act_xla(x, gain, bias, w, b, norm, eps, act):
+    # The fused unit's xla impl IS the unfused chain — the fallback
+    # semantics by construction.
+    if norm == "rmsnorm":
+        h = _rmsnorm_xla(x, gain, eps, None)
+    else:
+        h = _layernorm_xla(x, gain, bias, eps, None)
+    out = _add_bias(_dense_xla(_to_compute_rep(h, "srm"), w, "srm"), b)
+    return _activation_xla(out.to_var(), act)
+
+
+@register("norm_dense_act", "kernel")
+def _norm_dense_act_kernel(x, gain, bias, w, b, norm, eps, act):
+    dtype = _out_dtype(x, w)
+    shape_key = (_rows(x.shape), x.shape[-1], w.mean.shape[-1])
+    sched = _schedule_for("norm_dense_act", shape_key, dtype)
+    return _nda_run(x, gain, bias, w, b, norm, eps, act, sched, shape_key,
+                    dtype)
+
+
+def pfp_norm_dense_act(x: GaussianTensor, gain, bias, w, b=None, *,
+                       norm: str = "rmsnorm", eps: float = 1e-6,
+                       act: str = "silu",
+                       impl: Optional[str] = None) -> GaussianTensor:
+    """Fused norm -> bias-free dense -> activation. Emits SRM.
+
+    ``bias`` is the LayerNorm shift (None for rmsnorm); ``b`` the dense
+    bias (xla impl only). Most callers never invoke this directly — the
+    fusion pass rewrites eligible chains onto it when enabled."""
+    return get_op("norm_dense_act", impl)(x, gain, bias, w, b, norm, eps,
+                                          act)
 
 
 # ---------------------------------------------------------------------------
@@ -593,9 +813,10 @@ def pfp_residual(x, y, impl: Optional[str] = None) -> GaussianTensor:
 __all__ = [
     "IMPLS", "set_default_impl", "get_default_impl", "resolve_impl",
     "register", "get_op", "registered_ops", "set_profiler", "get_profiler",
+    "set_fusion", "get_fusion", "fusion",
     "pfp_dense", "pfp_einsum", "pfp_conv2d_im2col", "pfp_activation",
     "pfp_maxpool2d", "pfp_attention", "pfp_attention_cache",
     "pfp_attention_paged", "pfp_rmsnorm", "pfp_layernorm",
-    "pfp_glu_product", "pfp_embedding", "pfp_residual",
+    "pfp_glu_product", "pfp_norm_dense_act", "pfp_embedding", "pfp_residual",
     "ACTIVATION_MOMENTS", "DETERMINISTIC_ACTIVATIONS",
 ]

@@ -31,9 +31,10 @@ from repro.kernels.pfp_attention import (pfp_attention_cache_pallas,
                                          pfp_attention_paged_pallas,
                                          pfp_attention_pallas)
 from repro.kernels.pfp_dense import pfp_dense_pallas, pfp_dense_var_pallas
+from repro.kernels.pfp_fused import pfp_norm_dense_act_pallas
 from repro.kernels.pfp_maxpool import pfp_maxpool2d_pallas
 from repro.kernels.pfp_norms import pfp_layernorm_pallas, pfp_rmsnorm_pallas
-from repro.tuning.schedules import Schedule
+from repro.tuning.schedules import AXIS_DEFAULTS, Schedule
 
 Impl = Literal["kernel", "xla"]
 
@@ -50,6 +51,15 @@ def _block(schedule: Optional[Schedule], name: str, legacy: int,
     if schedule is not None and schedule.has(name):
         return min(schedule.block(name), _round_up(max(dim, 1), align))
     return legacy
+
+
+def _axis(schedule: Optional[Schedule], name: str):
+    """Resolve one categorical schedule axis (dims / k_order / epilogue /
+    prefetch); an absent axis — or no schedule at all — falls back to the
+    legacy default, so untuned calls lower exactly as before."""
+    if schedule is not None:
+        return schedule.axis(name)
+    return AXIS_DEFAULTS[name]
 
 
 def set_default_impl(impl: Impl) -> None:
@@ -112,6 +122,8 @@ def pfp_dense(
         mu, var = pfp_dense_pallas(
             mu2p, srm2p, mwp, swp,
             block_m=bm, block_n=bn, block_k=bk,
+            dims=_axis(schedule, "dims"),
+            k_order=_axis(schedule, "k_order"),
             interpret=_interpret(), first_layer=first_layer,
         )
         mu, var = mu[:m, :n], var[:m, :n]
@@ -150,7 +162,10 @@ def pfp_dense_var(
         vwp = _pad_to(_pad_to(var_w, bk, 0), bn, 1)
         mu, var = pfp_dense_var_pallas(
             mu2p, var2p, mwp, vwp,
-            block_m=bm, block_n=bn, block_k=bk, interpret=_interpret(),
+            block_m=bm, block_n=bn, block_k=bk,
+            dims=_axis(schedule, "dims"),
+            k_order=_axis(schedule, "k_order"),
+            interpret=_interpret(),
         )
         mu, var = mu[:m, :n], var[:m, :n]
     return mu.reshape(*lead, n), var.reshape(*lead, n)
@@ -222,7 +237,8 @@ def pfp_attention(q_mu, k_mu, v_mu, v_var, *, scale: float, causal: bool = True,
     bk = _block(schedule, "block_k", block_k, k_mu.shape[2], 8)
     return pfp_attention_pallas(
         q_mu, k_mu, v_mu, v_var, scale=scale, causal=causal,
-        block_q=bq, block_k=bk, interpret=_interpret(),
+        block_q=bq, block_k=bk, dims=_axis(schedule, "dims"),
+        interpret=_interpret(),
     )
 
 
@@ -254,7 +270,8 @@ def pfp_attention_cache(q_mu, k_mu, v_mu, v_var, q_start, kv_len, *,
     bk = _block(schedule, "block_k", block_k, k_mu.shape[2], 8)
     return pfp_attention_cache_pallas(
         q_mu, k_mu, v_mu, v_var, q_start, kv_len, scale=scale, causal=causal,
-        window=window, block_q=bq, block_k=bk, interpret=_interpret(),
+        window=window, block_q=bq, block_k=bk,
+        dims=_axis(schedule, "dims"), interpret=_interpret(),
     )
 
 
@@ -279,7 +296,8 @@ def pfp_attention_paged(q_mu, k_pages, v_pages, vv_pages, page_table,
     return pfp_attention_paged_pallas(
         q_mu, k_pages, v_pages, vv_pages, page_table, q_start, kv_len,
         scale=scale, causal=causal, window=window, block_q=bq,
-        interpret=_interpret(),
+        prefetch=int(_axis(schedule, "prefetch")),
+        dims=_axis(schedule, "dims"), interpret=_interpret(),
     )
 
 
@@ -322,10 +340,19 @@ def pfp_rmsnorm(mu, second, gain, *, rep: str = "var", eps: float = 1e-6,
     shape = mu.shape
     mu2, sec2, rows, d, bm = _norm_2d(mu, second, block_rows=block_rows,
                                       schedule=schedule)
+    # epilogue='split' runs the same MOMENT_FNS epilogue as a standalone
+    # activation kernel pass over the normalized fp32 moments instead of
+    # in-register — elementwise on identical values, so bit-identical; it
+    # trades an HBM round-trip for a smaller norm-kernel footprint.
+    split = act is not None and _axis(schedule, "epilogue") == "split"
     mo, so = pfp_rmsnorm_pallas(
         mu2, sec2, _vec_pad(gain, mu2.shape[1]), rep=rep, d=d, eps=eps,
-        act=act, block_rows=bm, interpret=_interpret())
-    return (mo[:rows, :d].reshape(shape), so[:rows, :d].reshape(shape))
+        act=None if split else act, block_rows=bm, interpret=_interpret())
+    mo = mo[:rows, :d].reshape(shape)
+    so = so[:rows, :d].reshape(shape)
+    if split:
+        return pfp_activation(mo, so, kind=act, impl="kernel")
+    return mo, so
 
 
 def pfp_layernorm(mu, second, gain, bias=None, *, rep: str = "var",
@@ -348,10 +375,16 @@ def pfp_layernorm(mu, second, gain, bias=None, *, rep: str = "var",
     mu2, sec2, rows, d, bm = _norm_2d(mu, second, block_rows=block_rows,
                                       schedule=schedule)
     cols = mu2.shape[1]
+    split = act is not None and _axis(schedule, "epilogue") == "split"
     mo, so = pfp_layernorm_pallas(
         mu2, sec2, _vec_pad(gain, cols), _vec_pad(bias, cols), rep=rep, d=d,
-        eps=eps, act=act, block_rows=bm, interpret=_interpret())
-    return (mo[:rows, :d].reshape(shape), so[:rows, :d].reshape(shape))
+        eps=eps, act=None if split else act, block_rows=bm,
+        interpret=_interpret())
+    mo = mo[:rows, :d].reshape(shape)
+    so = so[:rows, :d].reshape(shape)
+    if split:
+        return pfp_activation(mo, so, kind=act, impl="kernel")
+    return mo, so
 
 
 def pfp_glu_product(mu_a, srm_a, mu_b, srm_b, *, impl: Impl | None = None,
@@ -375,6 +408,79 @@ def pfp_glu_product(mu_a, srm_a, mu_b, srm_b, *, impl: Impl | None = None,
     return mo[:m, :cols].reshape(shape), so[:m, :cols].reshape(shape)
 
 
+def pfp_norm_dense_act(
+    mu, second, gain, bias, mu_w, srm_w, b=None, *,
+    norm: str = "rmsnorm", rep: str = "var", eps: float = 1e-6,
+    act: str = "silu", impl: Impl | None = None,
+    block_m: int = 128, block_n: int = 128, block_k: int = 512,
+    schedule: Optional[Schedule] = None,
+    dense_schedule: Optional[Schedule] = None,
+):
+    """Cross-op fused norm -> dense -> activation for (..., K) x (K, N).
+
+    Consumes the raw norm-input moments (``rep`` tells whether ``second``
+    holds variances or SRMs), the norm affine params, and the dense
+    weight moments (mean + SRM). Returns (mean, srm) — the activation
+    contract. ``bias`` is the LayerNorm shift (ignored for rmsnorm);
+    ``b`` is the dense bias, supported on the xla path only — the fusion
+    pass in ``core/dispatch.py`` fires exclusively on bias-free dense.
+
+    ``schedule`` carries the fused unit's own (block_m, block_n, dims)
+    axes; ``dense_schedule`` donates block_k from the standalone dense op
+    at the same (K, N) so the fused K-tiling — and therefore the fp32
+    accumulation tree — is structurally identical to the unfused chain
+    (the bit-for-bit fallback guarantee).
+    """
+    impl = impl or get_default_impl()
+    lead = mu.shape[:-1]
+    k = mu.shape[-1]
+    n = mu_w.shape[-1]
+    mu2 = mu.reshape(-1, k)
+    sec2 = second.reshape(-1, k)
+
+    if impl == "xla":
+        if norm == "rmsnorm":
+            hm, hv = ref.pfp_rmsnorm_ref(mu2, sec2, gain, rep=rep, eps=eps)
+        else:
+            nb = jnp.zeros_like(gain) if bias is None else bias
+            hm, hv = ref.pfp_layernorm_ref(mu2, sec2, gain, nb, rep=rep,
+                                           eps=eps)
+        ym, yv = ref.pfp_dense_ref(hm, hv + jnp.square(hm), mu_w, srm_w)
+        if b is not None:
+            ym = ym + b
+        fn = {"relu": ref.pfp_relu_ref, "gelu": ref.pfp_gelu_ref,
+              "silu": ref.pfp_silu_ref, "tanh": ref.pfp_tanh_ref,
+              "sigmoid": ref.pfp_sigmoid_ref}[act]
+        am, asrm = fn(ym, yv)
+        return am.reshape(*lead, n), asrm.reshape(*lead, n)
+
+    assert b is None, "fused kernel path requires a bias-free dense"
+    m = mu2.shape[0]
+    bm = _block(schedule, "block_m", min(block_m, _ceil_mult(m)), m, 8)
+    bn = _block(schedule, "block_n", min(block_n, _ceil_mult(n)), n, 128)
+    # block_k resolves against the DENSE schedule (fused schedules never
+    # carry it) exactly as ops.pfp_dense would at this shape.
+    bk = _block(dense_schedule, "block_k", min(block_k, _ceil_mult(k)),
+                k, 128)
+    k128 = _round_up(max(k, 1), 128)  # the standalone norm kernel's width
+    kp = _round_up(k128, bk)
+    mu2p = _pad_to(_pad_to(mu2, bm, 0), kp, 1)
+    sec2p = _pad_to(_pad_to(sec2, bm, 0), kp, 1)
+    gp = _vec_pad(gain, kp)
+    bp = gp * 0.0 if (norm == "rmsnorm" or bias is None) \
+        else _vec_pad(bias, kp)
+    mwp = _pad_to(_pad_to(mu_w, kp, 0), bn, 1)
+    swp = _pad_to(_pad_to(srm_w, kp, 0), bn, 1)
+    am, asrm = pfp_norm_dense_act_pallas(
+        mu2p, sec2p, gp, bp, mwp, swp,
+        norm=norm, rep=rep, d=k, k128=k128, eps=eps, act=act,
+        block_m=bm, block_n=bn, block_k=bk,
+        dims=_axis(schedule, "dims"), interpret=_interpret(),
+    )
+    am, asrm = am[:m, :n], asrm[:m, :n]
+    return am.reshape(*lead, n), asrm.reshape(*lead, n)
+
+
 def _ceil_mult(x: int, base: int = 128) -> int:
     """Largest 'nice' block <= x: next multiple of base if x >= base else x."""
     if x >= base:
@@ -387,5 +493,6 @@ __all__ = [
     "pfp_attention",
     "pfp_attention_cache", "pfp_attention_paged",
     "pfp_rmsnorm", "pfp_layernorm", "pfp_glu_product",
+    "pfp_norm_dense_act",
     "set_default_impl", "get_default_impl",
 ]

@@ -38,6 +38,18 @@ Grid: (B*H, Tq/bq, Tk/bk) with the Tk axis sequential; fp32 accumulators
 overrides them per shape via the ``ops.pfp_attention*`` schedule arguments —
 masking is by absolute index, so block choice never changes results. For
 the paged kernel block_k IS the page size (one page per K-step).
+
+Two further tuned axes (repro.tuning OP_AXES):
+
+  * ``dims``     — Mosaic dimension_semantics for the (batch*head, Tq)
+    grid axes ('parallel' / 'arbitrary'; Tk stays 'arbitrary' — it
+    carries the accumulators). Compiler annotation only, never results.
+  * ``prefetch`` — paged kernel only: scalar-prefetch DEPTH. Each K-step
+    DMAs ``prefetch`` logical pages (each via its own table-indirect
+    BlockSpec, so physically scattered pages still stream) and the body
+    consumes them in logical page order — the accumulator update sequence
+    is identical to depth 1, so results are bit-equal while the DMA
+    pipeline sees ``prefetch`` pages of lookahead per step.
 """
 from __future__ import annotations
 
@@ -48,6 +60,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.masking import NEG_INF, attention_valid_mask, mask_scores
+from repro.kernels.pfp_dense import _compiler_params
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -152,7 +165,8 @@ def _attn_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "causal", "block_q", "block_k", "interpret"),
+    static_argnames=("scale", "causal", "block_q", "block_k", "dims",
+                     "interpret"),
 )
 def pfp_attention_pallas(
     q_mu,
@@ -164,6 +178,7 @@ def pfp_attention_pallas(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
+    dims: str = "parallel",
     interpret: bool = False,
 ):
     """(B, H, Tq, D) x (B, Hkv, Tk, D) -> mean/var (B, H, Tq, D), fp32.
@@ -203,8 +218,7 @@ def pfp_attention_pallas(
         scale=scale, bq=bq, bk=bk, tq=tq, tk=tk_p, tk_valid=tk,
         causal=causal, nk=nk,
     )
-    fn = pl.pallas_call(
-        kernel,
+    common = dict(
         grid=(bh, tq_p // bq, nk),
         in_specs=[q_spec, kv_spec, kv_spec, kv_spec],
         out_specs=[out_spec, out_spec],
@@ -215,6 +229,10 @@ def pfp_attention_pallas(
         scratch_shapes=_attn_scratch(bq, d),
         interpret=interpret,
     )
+    params = _compiler_params((dims, dims, "arbitrary"))
+    if params is not None and not interpret:
+        common["compiler_params"] = params
+    fn = pl.pallas_call(kernel, **common)
     out_mu, out_var = fn(q_mu, k_mu, v_mu, v_var)
     out_mu = out_mu.reshape(b, h, tq_p, d)[:, :, :tq]
     out_var = out_var.reshape(b, h, tq_p, d)[:, :, :tq]
@@ -265,11 +283,45 @@ def _cache_attn_kernel(
                   acc_mu_ref, acc_var_ref)
 
 
-def _paged_attn_kernel(q_start_ref, kv_len_ref, table_ref, *args, **kw):
-    # The page table steers the KV BlockSpec index map only; the body is
-    # the cache kernel verbatim.
+def _paged_attn_kernel(q_start_ref, kv_len_ref, table_ref, q_ref, *rest,
+                       scale: float, bq: int, bk: int, heads: int,
+                       causal: bool, window, nk: int, depth: int):
+    """Depth-generic paged body: each grid K-step carries ``depth``
+    logical pages (one table-indirect BlockSpec each — pages stay
+    physically scattered) and replays the cache kernel's accumulator
+    update once per page in logical order, so any depth is bit-identical
+    to depth 1. The page table itself steers only the index maps."""
     del table_ref
-    _cache_attn_kernel(q_start_ref, kv_len_ref, *args, **kw)
+    k_refs = rest[0:depth]
+    vmu_refs = rest[depth:2 * depth]
+    vvar_refs = rest[2 * depth:3 * depth]
+    (out_mu_ref, out_var_ref,
+     m_ref, l_ref, acc_mu_ref, acc_var_ref) = rest[3 * depth:]
+
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    kb = pl.program_id(2)
+    b = bh // heads
+
+    @pl.when(kb == 0)
+    def _init():
+        _init_accumulators(m_ref, l_ref, acc_mu_ref, acc_var_ref)
+
+    for j in range(depth):
+        s = _score_tile(q_ref, k_refs[j], scale)
+        k_idx = ((kb * depth + j) * bk
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1))
+        q_idx = (q_start_ref[b] + qi * bq
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+        valid = attention_valid_mask(q_idx, k_idx, causal=causal,
+                                     window=window, kv_len=kv_len_ref[b])
+        _accumulate(s, valid, vmu_refs[j], vvar_refs[j],
+                    m_ref, l_ref, acc_mu_ref, acc_var_ref)
+
+    @pl.when(kb == nk - 1)
+    def _done():
+        _finalize(out_mu_ref, out_var_ref, m_ref, l_ref,
+                  acc_mu_ref, acc_var_ref)
 
 
 def _grid_spec(num_scalars, grid, in_specs, out_specs, bq, d):
@@ -288,7 +340,7 @@ def _grid_spec(num_scalars, grid, in_specs, out_specs, bq, d):
 @functools.partial(
     jax.jit,
     static_argnames=("scale", "causal", "window", "block_q", "block_k",
-                     "interpret"),
+                     "dims", "interpret"),
 )
 def pfp_attention_cache_pallas(
     q_mu, k_mu, v_mu, v_var, q_start, kv_len,
@@ -298,6 +350,7 @@ def pfp_attention_cache_pallas(
     window=None,
     block_q: int = 128,
     block_k: int = 128,
+    dims: str = "parallel",
     interpret: bool = False,
 ):
     """KV-cache attention with per-batch dynamic valid lengths.
@@ -338,8 +391,7 @@ def pfp_attention_cache_pallas(
         scale=scale, bq=bq, bk=bk, heads=h, causal=causal, window=window,
         nk=nk,
     )
-    fn = pl.pallas_call(
-        kernel,
+    common = dict(
         grid_spec=_grid_spec(2, (bh, tq_p // bq, nk),
                              [q_spec, kv_spec, kv_spec, kv_spec],
                              [out_spec, out_spec], bq, d),
@@ -349,6 +401,10 @@ def pfp_attention_cache_pallas(
         ],
         interpret=interpret,
     )
+    params = _compiler_params((dims, dims, "arbitrary"))
+    if params is not None and not interpret:
+        common["compiler_params"] = params
+    fn = pl.pallas_call(kernel, **common)
     out_mu, out_var = fn(q_start.astype(jnp.int32), kv_len.astype(jnp.int32),
                          q_mu, k_mu, v_mu, v_var)
     out_mu = out_mu.reshape(b, h, tq_p, d)[:, :, :tq]
@@ -358,7 +414,8 @@ def pfp_attention_cache_pallas(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "causal", "window", "block_q", "interpret"),
+    static_argnames=("scale", "causal", "window", "block_q", "prefetch",
+                     "dims", "interpret"),
 )
 def pfp_attention_paged_pallas(
     q_mu, k_pages, v_pages, vv_pages, page_table, q_start, kv_len,
@@ -367,25 +424,35 @@ def pfp_attention_paged_pallas(
     causal: bool = True,
     window=None,
     block_q: int = 128,
+    prefetch: int = 1,
+    dims: str = "parallel",
     interpret: bool = False,
 ):
     """Paged KV-cache attention: page-table-indirect K/V DMA.
 
     q (B, H, Tq, D) x pages (NP, Hkv, page_size, D); page_table (B, P)
     int32 maps batch b's j-th logical page to a physical page row. The
-    table is scalar-prefetched and consumed by the KV BlockSpec index map,
-    so each K-step DMAs exactly one page — the pool is never gathered into
-    a per-batch contiguous cache. block_k IS the page size; kv_len gives
-    per-batch valid length, i.e. per-page valid row counts.
+    table is scalar-prefetched and consumed by the KV BlockSpec index
+    maps, so each K-step DMAs its pages straight from the pool — the pool
+    is never gathered into a per-batch contiguous cache. block_k IS the
+    page size; kv_len gives per-batch valid length, i.e. per-page valid
+    row counts. ``prefetch`` logical pages ride each K-step (P is padded
+    to a multiple with physical page 0 as a trash target — those pages
+    sit at absolute key positions >= kv_len, so masking zeroes them).
     """
     b, h, tq, d = q_mu.shape
     np_, hkv, ps, _ = k_pages.shape
     assert h % hkv == 0, (h, hkv)
     group = h // hkv
     p = page_table.shape[1]
+    depth = max(1, min(int(prefetch), p))
     bq = min(block_q, tq)
     tq_p = tq + ((-tq) % bq)
     q_mu = _pad_t(q_mu, tq_p)
+
+    p_pad = p + ((-p) % depth)
+    if p_pad != p:
+        page_table = jnp.pad(page_table, ((0, 0), (0, p_pad - p)))
 
     bh = b * h
     q_mu = q_mu.reshape(bh, tq_p, d)
@@ -396,22 +463,27 @@ def pfp_attention_paged_pallas(
 
     q_spec = pl.BlockSpec((1, bq, d),
                           lambda bh_, i, k_, qs, kl, tab: (bh_, i, 0))
-    kv_spec = pl.BlockSpec(
-        (1, ps, d),
-        lambda bh_, i, k_, qs, kl, tab: (
-            tab[bh_ // h, k_] * hkv + (bh_ % h) // group, 0, 0))
+
+    def kv_spec(j):
+        return pl.BlockSpec(
+            (1, ps, d),
+            lambda bh_, i, k_, qs, kl, tab: (
+                tab[bh_ // h, k_ * depth + j] * hkv + (bh_ % h) // group,
+                0, 0))
+
     out_spec = pl.BlockSpec((1, bq, d),
                             lambda bh_, i, k_, qs, kl, tab: (bh_, i, 0))
 
+    nk = p_pad // depth
     kernel = functools.partial(
         _paged_attn_kernel,
         scale=scale, bq=bq, bk=ps, heads=h, causal=causal, window=window,
-        nk=p,
+        nk=nk, depth=depth,
     )
-    fn = pl.pallas_call(
-        kernel,
-        grid_spec=_grid_spec(3, (bh, tq_p // bq, p),
-                             [q_spec, kv_spec, kv_spec, kv_spec],
+    kv_specs = ([kv_spec(j) for j in range(depth)] * 3)
+    common = dict(
+        grid_spec=_grid_spec(3, (bh, tq_p // bq, nk),
+                             [q_spec] + kv_specs,
                              [out_spec, out_spec], bq, d),
         out_shape=[
             jax.ShapeDtypeStruct((bh, tq_p, d), jnp.float32),
@@ -419,9 +491,14 @@ def pfp_attention_paged_pallas(
         ],
         interpret=interpret,
     )
+    params = _compiler_params((dims, dims, "arbitrary"))
+    if params is not None and not interpret:
+        common["compiler_params"] = params
+    fn = pl.pallas_call(kernel, **common)
+    kv_args = ([k_pages] * depth + [v_pages] * depth + [vv_pages] * depth)
     out_mu, out_var = fn(q_start.astype(jnp.int32), kv_len.astype(jnp.int32),
                          page_table.astype(jnp.int32),
-                         q_mu, k_pages, v_pages, vv_pages)
+                         q_mu, *kv_args)
     out_mu = out_mu.reshape(b, h, tq_p, d)[:, :, :tq]
     out_var = out_var.reshape(b, h, tq_p, d)[:, :, :tq]
     return out_mu, out_var

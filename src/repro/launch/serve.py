@@ -13,6 +13,10 @@ Usage:
       --arch granite-8b --reduced --engine --tokens 8
   PYTHONPATH=src python -m repro.launch.serve --devices 2 --reduced \
       --engine --tokens 4            # CI interpret-mode smoke
+  PYTHONPATH=src python -m repro.launch.serve --devices 2 --reduced \
+      --impl kernel --save-schedule-db db.json   # tune + persist fleet DB
+  PYTHONPATH=src python -m repro.launch.serve --devices 2 --reduced \
+      --impl kernel --schedule-db db.json --expect-warm-cache  # warm start
 """
 import argparse
 import json
@@ -297,7 +301,7 @@ def _run_fleet(args, cfg, params, router, sched_cfg, mesh, dims, max_len,
     return 0
 
 
-def main():
+def _parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--mesh", default=None,
@@ -401,8 +405,31 @@ def main():
                     help="after the run, time ONE eager per-op-fenced "
                          "decode pass at the dispatch registry and print "
                          "the per-layer breakdown (paper Table 4, live)")
-    args = ap.parse_args()
+    # -- autoscheduler / warm-start fleet schedule DB -----------------------
+    ap.add_argument("--schedule-db", default=None, metavar="PATH",
+                    help="preload a persistent tuned-schedule DB "
+                         "(repro.tuning fleet cache) before building the "
+                         "engine, so every compile starts warm — no "
+                         "schedule search on the serving hot path")
+    ap.add_argument("--save-schedule-db", default=None, metavar="PATH",
+                    help="record every (op, shape, dtype) the run consults, "
+                         "tune any missing entry (cost-model 'rank' mode), "
+                         "and merge-save the DB to PATH (atomic write; "
+                         "concurrent replica writers lose nothing)")
+    ap.add_argument("--expect-warm-cache", action="store_true",
+                    help="exit nonzero if any tuning-cache consult missed "
+                         "during the run (CI: prove a preloaded "
+                         "--schedule-db covers the model's full shape set)")
+    ap.add_argument("--fuse-ops", action="store_true",
+                    help="enable the dispatch fusion pass: eligible "
+                         "norm->dense->activation chains run as one fused "
+                         "Pallas kernel when a tuned norm_dense_act "
+                         "schedule is cached (falls back to the unfused "
+                         "chain otherwise)")
+    return ap.parse_args()
 
+
+def _serve(args):
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
     else:
@@ -572,6 +599,62 @@ def main():
           f"({summary['tokens_generated']} tokens) — one PFP pass per decode "
           "step; escalations spent SVI samples only on gray-zone tokens.")
     return 0
+
+
+def _tuning_epilogue(args, queries):
+    """Post-run autoscheduler bookkeeping: prove the preloaded DB kept
+    the hot path search-free (--expect-warm-cache) and/or persist what
+    this run consulted (--save-schedule-db)."""
+    from repro.tuning import cache as sched_cache
+
+    counters = sched_cache.consult_counters()
+    if args.schedule_db or args.expect_warm_cache or args.save_schedule_db:
+        print(f"tuning-cache consults: {counters['consults']} "
+              f"({counters['hits']} hits, {counters['misses']} misses)")
+    if args.expect_warm_cache and counters["misses"] > 0:
+        print("ERROR: --expect-warm-cache but the run missed the tuning "
+              f"cache {counters['misses']} times (the schedule DB does not "
+              "cover this model's shape set)", file=sys.stderr)
+        return 1
+    if args.save_schedule_db:
+        from repro.tuning import measure as sched_measure
+
+        cache = sched_cache.global_cache()
+        tuned = 0
+        for op, shape_key, dtype, backend in dict.fromkeys(queries or ()):
+            if cache.get(op, shape_key, dtype, backend) is None:
+                sched_measure.tune_into_cache(cache, op, shape_key, dtype,
+                                              backend, mode="rank")
+                tuned += 1
+        path = cache.save(args.save_schedule_db)
+        print(f"schedule-db: tuned {tuned} new entries, saved "
+              f"{len(cache)} total -> {path}")
+    return 0
+
+
+def main():
+    import contextlib
+
+    args = _parse_args()
+    from repro.core import dispatch
+    from repro.tuning import cache as sched_cache
+
+    if args.fuse_ops:
+        dispatch.set_fusion(True)
+    if args.schedule_db:
+        n = len(sched_cache.load_global_cache(args.schedule_db))
+        print(f"schedule-db: preloaded {n} tuned entries "
+              f"from {args.schedule_db}")
+    # Scope the warm-start proof to this run's consults, not import-time
+    # warmup some earlier code path may have done.
+    sched_cache.consult_counters(reset=True)
+    with contextlib.ExitStack() as stack:
+        queries = (stack.enter_context(sched_cache.record_shapes())
+                   if args.save_schedule_db else None)
+        rc = _serve(args)
+    if rc == 0:
+        rc = _tuning_epilogue(args, queries)
+    return rc
 
 
 if __name__ == "__main__":

@@ -27,6 +27,21 @@ def git_sha() -> str:
     return "unknown"
 
 
+@functools.lru_cache(maxsize=1)
+def device_kind() -> str:
+    """Kind string of device 0 ('unknown' without a usable backend).
+
+    Cached per process — the tuner's cost model consults this on every
+    candidate scored, and the answer cannot change under one runtime.
+    """
+    try:
+        import jax
+
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "unknown"
+
+
 def run_metadata() -> dict:
     """Provenance dict for result files. Device facts degrade to
     'unknown' rather than raise — a docs build without a usable backend
@@ -34,11 +49,10 @@ def run_metadata() -> dict:
     import jax
 
     try:
-        dev = jax.devices()[0]
-        device_kind = dev.device_kind
+        kind = device_kind()
         backend = jax.default_backend()
     except Exception:
-        device_kind = backend = "unknown"
+        kind = backend = "unknown"
     try:
         import jaxlib
         jaxlib_version = jaxlib.__version__
@@ -48,7 +62,7 @@ def run_metadata() -> dict:
 
     return {
         "git_sha": git_sha(),
-        "device_kind": device_kind,
+        "device_kind": kind,
         "backend": backend,
         "jax_version": jax.__version__,
         "jaxlib_version": jaxlib_version,
@@ -56,4 +70,4 @@ def run_metadata() -> dict:
     }
 
 
-__all__ = ["run_metadata", "git_sha"]
+__all__ = ["run_metadata", "git_sha", "device_kind"]

@@ -12,18 +12,24 @@ to the fixed MXU-aligned defaults in ``kernels/ops.py``. The pieces:
 """
 from repro.tuning.autotune import autotune, collect_queries
 from repro.tuning.cache import (ScheduleCache, ScheduleCacheWarning,
-                                consult_digest, global_cache,
-                                load_global_cache, lookup, record_shapes,
-                                reset_global_cache)
-from repro.tuning.measure import TuneResult, tune_op
-from repro.tuning.schedules import (DEFAULT_SCHEDULES, OP_BLOCK_NAMES,
-                                    TUNABLE_OPS, Schedule)
-from repro.tuning.search import candidates, cost_summary, score
+                                consult_counters, consult_digest,
+                                global_cache, load_global_cache, lookup,
+                                record_shapes, reset_global_cache)
+from repro.tuning.measure import (TuneResult, fit_calibration,
+                                  tune_into_cache, tune_op)
+from repro.tuning.schedules import (AXIS_DEFAULTS, DEFAULT_SCHEDULES,
+                                    OP_AXES, OP_BLOCK_NAMES, TUNABLE_OPS,
+                                    Schedule)
+from repro.tuning.search import (candidates, cost_summary, predicted_seconds,
+                                 score, time_features, vmem_limit_bytes)
 
 __all__ = [
     "Schedule", "ScheduleCache", "ScheduleCacheWarning", "TuneResult",
-    "DEFAULT_SCHEDULES", "OP_BLOCK_NAMES", "TUNABLE_OPS",
+    "AXIS_DEFAULTS", "DEFAULT_SCHEDULES", "OP_AXES", "OP_BLOCK_NAMES",
+    "TUNABLE_OPS",
     "autotune", "collect_queries", "candidates", "cost_summary", "score",
-    "tune_op", "lookup", "record_shapes", "consult_digest", "global_cache",
-    "load_global_cache", "reset_global_cache",
+    "predicted_seconds", "time_features", "vmem_limit_bytes",
+    "tune_op", "tune_into_cache", "fit_calibration",
+    "lookup", "record_shapes", "consult_counters", "consult_digest",
+    "global_cache", "load_global_cache", "reset_global_cache",
 ]

@@ -72,9 +72,8 @@ def autotune(forward: Callable, params, batch, *, ctx=None,
             if verbose:
                 print(f"  [hit ] {op} {shape_key} -> {hit.describe()}")
             continue
-        result = measure.tune_op(op, shape_key, dtype, mode=mode, limit=limit,
-                                 iters=iters)
-        cache.put(op, shape_key, dtype, backend, result.best)
+        result = measure.tune_into_cache(cache, op, shape_key, dtype, backend,
+                                         mode=mode, limit=limit, iters=iters)
         chosen[query] = result.best
         if verbose:
             print(f"  [tune] {op} {shape_key} ({result.mode}) -> "
@@ -100,7 +99,22 @@ def _model_and_batch(name: str, batch: int, key):
         params = svi_to_pfp(lenet5_init(key))
         x = jax.random.normal(key, (batch, 28, 28, 1))
         return lenet5_forward, params, x
-    raise SystemExit(f"unknown --model {name!r} (mlp | lenet5)")
+    if name == "lm":
+        # Reduced transformer LM (the serving config): tunes the
+        # attention / norm / dense shape set the engine dispatches.
+        from repro.configs import reduced_config
+        from repro.models import lm as lm_mod
+
+        cfg = reduced_config("granite-8b")
+        params = svi_to_pfp(lm_mod.init_params(cfg, key))
+        tokens = {"tokens": jax.random.randint(key, (max(batch, 1), 16), 0,
+                                               cfg.vocab_size)}
+
+        def forward(p, b, ctx):
+            return lm_mod.forward(p, cfg, b, ctx)
+
+        return forward, params, tokens
+    raise SystemExit(f"unknown --model {name!r} (mlp | lenet5 | lm)")
 
 
 def _smoke() -> None:
@@ -135,7 +149,7 @@ def _smoke() -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--model", default="mlp", help="mlp | lenet5")
+    ap.add_argument("--model", default="mlp", help="mlp | lenet5 | lm")
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--mode", default=None, choices=measure.MEASURE_MODES,
                     help="default: time on TPU, rank (cost model) elsewhere")
@@ -144,12 +158,20 @@ def main() -> None:
                     help="max candidates per (op, shape)")
     ap.add_argument("--force", action="store_true",
                     help="re-tune even on cache hits")
+    ap.add_argument("--fuse", action="store_true",
+                    help="enable the norm->dense->activation fusion pass "
+                         "while collecting shapes, so the fused "
+                         "norm_dense_act units are discovered and tuned")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: enumerate + cache round-trip, no timing")
     args = ap.parse_args()
     if args.smoke:
         _smoke()
         return
+    if args.fuse:
+        from repro.core import dispatch
+
+        dispatch.set_fusion(True)
     forward, params, x = _model_and_batch(args.model, args.batch,
                                           jax.random.PRNGKey(0))
     chosen = autotune(forward, params, x, mode=args.mode, limit=args.limit,

@@ -26,11 +26,16 @@ import contextlib
 import json
 import os
 import warnings
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 from repro.tuning.schedules import Schedule, shape_key_str
 
-CACHE_VERSION = 1
+# v2 adds per-entry calibration provenance ({"schedule": .., "meta": ..}
+# entries) and a per-(op, backend) fitted-calibration table. v1 files
+# (bare schedule entries) still load — they are treated as
+# schedule-only, uncalibrated entries.
+CACHE_VERSION = 2
+_COMPAT_VERSIONS = (1, 2)
 DEFAULT_CACHE_ENV = "REPRO_SCHEDULE_CACHE"
 
 ShapeKey = Tuple[int, ...]
@@ -45,12 +50,35 @@ def cache_key(op: str, shape_key: ShapeKey, dtype: str, backend: str) -> str:
     return f"{op}|{shape_key_str(shape_key)}|{dtype}|{backend}"
 
 
+def _entry_wins(meta_new: Optional[Mapping],
+                meta_old: Optional[Mapping]) -> bool:
+    """Merge-on-conflict policy: the newest *calibrated* entry wins.
+
+    Calibrated (has a measured timing) beats uncalibrated regardless of
+    age; among equals, the later ``tuned_at`` stamp wins; exact ties keep
+    the incumbent (returns False)."""
+    def rank(meta):
+        meta = meta or {}
+        calibrated = meta.get("measured_s") is not None
+        return (1 if calibrated else 0, float(meta.get("tuned_at") or 0.0))
+
+    return rank(meta_new) > rank(meta_old)
+
+
 class ScheduleCache:
-    """In-memory schedule store with JSON save/load."""
+    """In-memory schedule store with JSON save/load.
+
+    Alongside each schedule the cache can carry *calibration provenance*
+    (``meta``: predicted vs measured seconds, mode, device kind, tuning
+    timestamp) and a per-``op|backend`` fitted-calibration table (the
+    correction coefficients ``tuning.measure.fit_calibration`` produces).
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._entries: Dict[str, Schedule] = {}
+        self._meta: Dict[str, dict] = {}
+        self._calibration: Dict[str, dict] = {}  # "op|backend" -> fit
 
     # -- core mapping -------------------------------------------------------
     def get(self, op: str, shape_key: ShapeKey, dtype: str,
@@ -58,14 +86,23 @@ class ScheduleCache:
         return self._entries.get(cache_key(op, shape_key, dtype, backend))
 
     def put(self, op: str, shape_key: ShapeKey, dtype: str, backend: str,
-            schedule: Schedule) -> None:
+            schedule: Schedule, meta: Optional[Mapping] = None) -> None:
         if schedule.op != op:
             raise ValueError(f"schedule for op {schedule.op!r} stored under "
                              f"op {op!r}")
-        self._entries[cache_key(op, shape_key, dtype, backend)] = schedule
+        key = cache_key(op, shape_key, dtype, backend)
+        self._entries[key] = schedule
+        if meta is not None:
+            self._meta[key] = dict(meta)
+
+    def get_meta(self, op: str, shape_key: ShapeKey, dtype: str,
+                 backend: str) -> Optional[dict]:
+        return self._meta.get(cache_key(op, shape_key, dtype, backend))
 
     def clear(self) -> None:
         self._entries.clear()
+        self._meta.clear()
+        self._calibration.clear()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -73,18 +110,53 @@ class ScheduleCache:
     def entries(self) -> Dict[str, Schedule]:
         return dict(self._entries)
 
+    # -- fitted calibration table ------------------------------------------
+    def put_calibration(self, op: str, backend: str, fit: Mapping) -> None:
+        self._calibration[f"{op}|{backend}"] = dict(fit)
+
+    def get_calibration(self, op: str, backend: str) -> Optional[dict]:
+        return self._calibration.get(f"{op}|{backend}")
+
+    def calibrations(self) -> Dict[str, dict]:
+        return dict(self._calibration)
+
     # -- persistence --------------------------------------------------------
-    def save(self, path: Optional[str] = None) -> str:
+    def save(self, path: Optional[str] = None, *, merge: bool = True) -> str:
+        """Atomic write (temp + rename). With ``merge`` (the default) any
+        entries a concurrent writer has flushed to ``path`` since our load
+        are folded in under the newest-calibrated-entry-wins policy —
+        two fleet replicas saving the same DB lose nothing."""
         path = path or self.path
         if path is None:
             raise ValueError("no cache path given")
+        if merge and os.path.exists(path):
+            with warnings.catch_warnings():
+                # A concurrent writer's torn/corrupt file must not block
+                # our save; its entries just don't merge.
+                warnings.simplefilter("ignore", ScheduleCacheWarning)
+                disk = ScheduleCache().load(path)
+            for key, schedule in disk._entries.items():
+                if (key not in self._entries
+                        or _entry_wins(disk._meta.get(key),
+                                       self._meta.get(key))):
+                    self._entries[key] = schedule
+                    if key in disk._meta:
+                        self._meta[key] = disk._meta[key]
+            for key, fit in disk._calibration.items():
+                if (key not in self._calibration
+                        or _entry_wins(fit, self._calibration[key])):
+                    self._calibration[key] = fit
         payload = {
             "version": CACHE_VERSION,
-            "entries": {k: s.to_json() for k, s in self._entries.items()},
+            "entries": {
+                k: {"schedule": s.to_json(), "meta": self._meta.get(k)}
+                for k, s in self._entries.items()
+            },
+            "calibration": self._calibration,
         }
         directory = os.path.dirname(os.path.abspath(path))
         os.makedirs(directory, exist_ok=True)
-        tmp = path + ".tmp"
+        tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         os.replace(tmp, path)
@@ -113,19 +185,39 @@ class ScheduleCache:
                 f"schedule cache {path!r} is malformed; falling back to "
                 "default schedules", ScheduleCacheWarning)
             return self
-        if payload.get("version") != CACHE_VERSION:
+        version = payload.get("version")
+        if version not in _COMPAT_VERSIONS:
             warnings.warn(
                 f"schedule cache {path!r} has stale version "
-                f"{payload.get('version')!r} (want {CACHE_VERSION}); "
+                f"{version!r} (want {CACHE_VERSION}); "
                 "ignoring it — re-run autotune to regenerate",
                 ScheduleCacheWarning)
             return self
         bad = 0
         for key, entry in payload["entries"].items():
             try:
-                self._entries[str(key)] = Schedule.from_json(entry)
+                if version >= 2:
+                    schedule = Schedule.from_json(entry["schedule"])
+                    meta = entry.get("meta")
+                else:  # v1: the entry IS the schedule payload
+                    schedule = Schedule.from_json(entry)
+                    meta = None
+                incoming = str(key)
+                if (incoming in self._entries
+                        and not _entry_wins(meta, self._meta.get(incoming))):
+                    continue
+                self._entries[incoming] = schedule
+                if meta is not None:
+                    self._meta[incoming] = dict(meta)
             except (ValueError, KeyError, TypeError):
                 bad += 1
+        cal = payload.get("calibration")
+        if isinstance(cal, dict):
+            for key, fit in cal.items():
+                if isinstance(fit, dict) and (
+                        key not in self._calibration
+                        or _entry_wins(fit, self._calibration[key])):
+                    self._calibration[str(key)] = fit
         if bad:
             warnings.warn(
                 f"schedule cache {path!r}: skipped {bad} malformed "
@@ -140,6 +232,10 @@ class ScheduleCache:
 _GLOBAL_CACHE = ScheduleCache()
 _RECORDERS: List[List[Query]] = []
 _CONSULTS: Dict[str, str] = {}  # op -> describe() of the last schedule used
+# Monotone consult totals since process start / last reset. The serving
+# warm-start gate (`launch/serve.py --expect-warm-cache`) reads these to
+# prove a preloaded fleet DB left zero tuning-cache misses on the hot path.
+_COUNTERS: Dict[str, int] = {"consults": 0, "hits": 0, "misses": 0}
 
 
 def global_cache() -> ScheduleCache:
@@ -158,6 +254,7 @@ def reset_global_cache() -> None:
     _GLOBAL_CACHE.clear()
     _GLOBAL_CACHE.path = None
     _CONSULTS.clear()
+    consult_counters(reset=True)
 
 
 def default_backend() -> str:
@@ -205,6 +302,8 @@ def lookup(op: str, shape_key: ShapeKey, dtype: str) -> Optional[Schedule]:
                 _GLOBAL_CACHE.put(op, shape_key, str(dtype), backend,
                                   schedule)
     _CONSULTS[op] = schedule.describe() if schedule is not None else "default"
+    _COUNTERS["consults"] += 1
+    _COUNTERS["hits" if schedule is not None else "misses"] += 1
     return schedule
 
 
@@ -228,6 +327,17 @@ def consults_snapshot(reset: bool = False) -> Dict[str, str]:
     snap = dict(_CONSULTS)
     if reset:
         _CONSULTS.clear()
+    return snap
+
+
+def consult_counters(reset: bool = False) -> Dict[str, int]:
+    """Total consults/hits/misses seen by :func:`lookup` since the last
+    reset. ``serve.py --expect-warm-cache`` asserts ``misses == 0`` after
+    preloading a fleet schedule DB."""
+    snap = dict(_COUNTERS)
+    if reset:
+        for key in _COUNTERS:
+            _COUNTERS[key] = 0
     return snap
 
 

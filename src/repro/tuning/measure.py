@@ -146,10 +146,22 @@ def make_runner(op: str, shape_key: ShapeKey,
         gain = arr(d)
         if op == "rmsnorm":
             return lambda s: ops.pfp_rmsnorm(mu, var, gain, rep="var",
-                                             impl="kernel", schedule=s)
+                                             act="gelu", impl="kernel",
+                                             schedule=s)
         bias = arr(d)
         return lambda s: ops.pfp_layernorm(mu, var, gain, bias, rep="var",
-                                           impl="kernel", schedule=s)
+                                           act="gelu", impl="kernel",
+                                           schedule=s)
+    if op == "norm_dense_act":
+        m, k, n = shape_key
+        mu, var = arr(m, k), arr(m, k, positive=True)
+        gain = arr(k)
+        mu_w = arr(k, n, scale=0.1)
+        srm_w = (arr(k, n, positive=True, scale=0.1)
+                 + jnp.square(mu_w))
+        return lambda s: ops.pfp_norm_dense_act(
+            mu, var, gain, None, mu_w, srm_w, None, norm="rmsnorm",
+            rep="var", act="silu", impl="kernel", schedule=s)
     raise ValueError(f"unknown tunable op {op!r}")
 
 
@@ -170,15 +182,22 @@ def measure_schedule(run: Callable[[Schedule], object], schedule: Schedule,
 
 def tune_op(op: str, shape_key: ShapeKey, dtype: str = "float32", *,
             mode: Optional[str] = None, limit: int = 8,
-            iters: int = 5) -> TuneResult:
+            iters: int = 5,
+            calibration: Optional[Dict] = None) -> TuneResult:
     """Search the candidate space for one (op, shape, dtype) and return the
-    winner plus the per-candidate record table (best-first)."""
+    winner plus the per-candidate record table (best-first).
+
+    ``calibration`` (a fit from :func:`fit_calibration`, usually pulled
+    from the cache's per-(op, backend) table) re-ranks the candidate list
+    by calibrated predicted seconds before measurement — in ``rank`` mode
+    it decides the winner outright."""
     mode = mode or default_mode()
     if mode not in MEASURE_MODES:
         raise ValueError(f"unknown measure mode {mode!r}; "
                          f"expected one of {MEASURE_MODES}")
     shape_key = tuple(int(d) for d in shape_key)
-    cands = search.candidates(op, shape_key, limit=limit)
+    cands = search.candidates(op, shape_key, limit=limit,
+                              calibration=calibration)
     records: List[Dict] = []
     run = make_runner(op, shape_key, dtype) if mode == "time" else None
     for cand in cands:
@@ -190,6 +209,9 @@ def tune_op(op: str, shape_key: ShapeKey, dtype: str = "float32", *,
             "arithmetic_intensity": cost.arithmetic_intensity,
             "grid_steps": cost.grid_steps,
             "mxu_aligned": cost.mxu_aligned,
+            "time_features": search.time_features(op, shape_key, cand),
+            "predicted_s": search.predicted_seconds(op, shape_key, cand,
+                                                    calibration),
             "seconds": None,
         }
         if mode == "time":
@@ -199,6 +221,74 @@ def tune_op(op: str, shape_key: ShapeKey, dtype: str = "float32", *,
         order = sorted(range(len(cands)), key=lambda i: records[i]["seconds"])
         cands = [cands[i] for i in order]
         records = [records[i] for i in order]
-    # rank mode: candidates() already returns best-first by cost model.
+    # rank mode: candidates() already returns best-first by cost model
+    # (calibrated when a fit exists).
     return TuneResult(op=op, shape_key=shape_key, dtype=dtype, mode=mode,
                       best=cands[0], records=records)
+
+
+# ---------------------------------------------------------------------------
+# Cost-model calibration (measured vs predicted)
+# ---------------------------------------------------------------------------
+def fit_calibration(records: List[Dict], *,
+                    device_kind: Optional[str] = None) -> Optional[Dict]:
+    """Fit per-(op, backend) correction coefficients from measured records.
+
+    Non-negative least squares (clipped lstsq) of measured seconds onto
+    the three analytic time-model terms. Returns None when fewer than
+    three measured records exist (an under-determined fit would be worse
+    than the uncalibrated model)."""
+    samples = [(r["time_features"], r["seconds"])
+               for r in records if r.get("seconds") is not None]
+    if len(samples) < 3:
+        return None
+    X = np.asarray([f for f, _ in samples], dtype=np.float64)
+    y = np.asarray([s for _, s in samples], dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+    coef = np.clip(coef, 0.0, None)
+    if not np.any(coef > 0.0):
+        return None
+    pred = X @ coef
+    return {
+        "coef": [float(c) for c in coef],
+        "records": len(samples),
+        "residual_s": float(np.sqrt(np.mean(np.square(pred - y)))),
+        "device_kind": device_kind,
+        "tuned_at": time.time(),
+        # Calibration entries share the merge policy with schedule
+        # entries: a fitted table ("measured") beats none.
+        "measured_s": float(np.median(y)),
+    }
+
+
+def tune_into_cache(cache, op: str, shape_key: ShapeKey,
+                    dtype: str, backend: str, *,
+                    mode: Optional[str] = None, limit: int = 8,
+                    iters: int = 5) -> TuneResult:
+    """One full tuner step against a :class:`~repro.tuning.cache.ScheduleCache`:
+    pull the op's fitted calibration (if any), search/measure, store the
+    winner with its calibration provenance, and — in ``time`` mode —
+    refit the per-(op, backend) correction coefficients from the fresh
+    measurements."""
+    calibration = cache.get_calibration(op, backend)
+    result = tune_op(op, shape_key, dtype, mode=mode, limit=limit,
+                     iters=iters, calibration=calibration)
+    best = result.records[0]
+    measured = best["seconds"]
+    predicted = best["predicted_s"]
+    meta = {
+        "mode": result.mode,
+        "predicted_s": predicted,
+        "measured_s": measured,
+        "correction": (measured / predicted
+                       if measured is not None and predicted else None),
+        "device_kind": backend,
+        "calibrated_rank": calibration is not None,
+        "tuned_at": time.time(),
+    }
+    cache.put(op, result.shape_key, dtype, backend, result.best, meta=meta)
+    if result.mode == "time":
+        fit = fit_calibration(result.records, device_kind=backend)
+        if fit is not None:
+            cache.put_calibration(op, backend, fit)
+    return result

@@ -22,7 +22,9 @@ flattening or padding the wrappers perform:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple, Union
+
+AxisValue = Union[int, str]
 
 # Block-parameter names per op, in canonical order. conv2d_im2col and the
 # batched-expert einsum route through the dense kernel and share its
@@ -31,7 +33,10 @@ from typing import Dict, Mapping, Optional, Tuple
 # and "dense_var" the Eq. 7 four-matmul 'var' formulation: same block
 # axes, but distinct ops so each variant's schedules are tuned against
 # the kernel that actually runs and never collide with three-matmul
-# entries at the same shape.
+# entries at the same shape. "norm_dense_act" is the cross-op fused
+# norm -> dense -> activation unit; its K tiling is inherited from the
+# plain "dense" schedule at the same (k, n) so the fused accumulation
+# order always matches the unfused chain bit-for-bit.
 OP_BLOCK_NAMES: Dict[str, Tuple[str, ...]] = {
     "dense": ("block_m", "block_n", "block_k"),
     "dense_first": ("block_m", "block_n", "block_k"),
@@ -48,9 +53,56 @@ OP_BLOCK_NAMES: Dict[str, Tuple[str, ...]] = {
     "maxpool2d": ("block_rows", "block_cols"),
     "rmsnorm": ("block_rows",),
     "layernorm": ("block_rows",),
+    "norm_dense_act": ("block_m", "block_n"),
 }
 
 TUNABLE_OPS = tuple(OP_BLOCK_NAMES)
+
+# Categorical schedule axes (paper §6: the search space beyond block
+# shapes). Every value is a real, numerically-safe lowering — candidates
+# only ever permute grid iteration order / compiler annotations, never
+# the per-output accumulation order, so any emitted candidate matches the
+# xla oracle:
+#
+#   dims      Mosaic ``dimension_semantics`` for the *spatial* grid axes
+#             ("parallel" lets the compiler reorder/parallelize them; the
+#             K axis always stays "arbitrary" — it carries the
+#             accumulator). Ignored in interpret mode.
+#   k_order   dense-family grid order: "mnk" (legacy, K innermost),
+#             "nmk" (spatial axes swapped, K still innermost) or
+#             "unrolled" (grid is (m, n); full K strips stay resident and
+#             the K-tile loop is unrolled inside the kernel body).
+#   epilogue  norm kernels: "fused" applies the activation epilogue in the
+#             norm kernel (legacy); "split" emits norm + separate
+#             activation kernel (bit-identical — same MOMENT_FNS on the
+#             same fp32 values, one extra HBM round-trip).
+#   prefetch  paged attention: pages fetched per grid step via the
+#             scalar-prefetched page table (1 = legacy). Deeper prefetch
+#             shrinks the grid; the in-kernel page loop preserves the
+#             logical page order so accumulation is unchanged.
+_DIMS = ("parallel", "arbitrary")
+_K_ORDERS = ("mnk", "nmk", "unrolled")
+OP_AXES: Dict[str, Dict[str, Tuple[AxisValue, ...]]] = {
+    "dense": {"dims": _DIMS, "k_order": _K_ORDERS},
+    "dense_first": {"dims": _DIMS, "k_order": _K_ORDERS},
+    "dense_var": {"dims": _DIMS, "k_order": _K_ORDERS},
+    "attention": {"dims": _DIMS},
+    "attention_cache": {"dims": _DIMS},
+    "attention_paged": {"dims": _DIMS, "prefetch": (1, 2, 4)},
+    "rmsnorm": {"epilogue": ("fused", "split")},
+    "layernorm": {"epilogue": ("fused", "split")},
+    "norm_dense_act": {"dims": _DIMS},
+}
+
+# The value each categorical axis takes when absent from a schedule —
+# absent axis == legacy lowering, so DEFAULT_SCHEDULES (and every v1
+# cache entry) keep their pre-axis behavior bit-for-bit.
+AXIS_DEFAULTS: Dict[str, AxisValue] = {
+    "dims": "parallel",
+    "k_order": "mnk",
+    "epilogue": "fused",
+    "prefetch": 1,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,33 +110,48 @@ class Schedule:
     """One point in an op's schedule space (hashable, JSON-able)."""
 
     op: str
-    blocks: Tuple[Tuple[str, int], ...]  # sorted (name, value) pairs
+    blocks: Tuple[Tuple[str, AxisValue], ...]  # sorted (name, value) pairs
 
     @classmethod
-    def make(cls, op: str, **blocks: int) -> "Schedule":
+    def make(cls, op: str, **blocks: AxisValue) -> "Schedule":
         names = OP_BLOCK_NAMES.get(op)
         if names is None:
             raise ValueError(f"unknown tunable op {op!r}; "
                              f"expected one of {TUNABLE_OPS}")
+        axes = OP_AXES.get(op, {})
         for name, value in blocks.items():
-            if name not in names:
-                raise ValueError(f"{op}: unknown block param {name!r}; "
-                                 f"expected a subset of {names}")
-            if not isinstance(value, int) or value <= 0:
-                raise ValueError(f"{op}.{name}: block sizes must be positive "
-                                 f"ints, got {value!r}")
+            if name in axes:
+                if value not in axes[name]:
+                    raise ValueError(
+                        f"{op}.{name}: expected one of {axes[name]}, "
+                        f"got {value!r}")
+            elif name in names:
+                if not isinstance(value, int) or isinstance(value, bool) \
+                        or value <= 0:
+                    raise ValueError(
+                        f"{op}.{name}: block sizes must be positive "
+                        f"ints, got {value!r}")
+            else:
+                raise ValueError(f"{op}: unknown schedule param {name!r}; "
+                                 f"expected a subset of "
+                                 f"{names + tuple(axes)}")
         return cls(op=op, blocks=tuple(sorted(blocks.items())))
 
-    def block(self, name: str, default: Optional[int] = None) -> Optional[int]:
+    def block(self, name: str,
+              default: Optional[AxisValue] = None) -> Optional[AxisValue]:
         for key, value in self.blocks:
             if key == name:
                 return value
         return default
 
+    def axis(self, name: str) -> AxisValue:
+        """Categorical axis value, falling back to the legacy default."""
+        return self.block(name, AXIS_DEFAULTS[name])
+
     def has(self, name: str) -> bool:
         return any(key == name for key, _ in self.blocks)
 
-    def as_dict(self) -> Dict[str, int]:
+    def as_dict(self) -> Dict[str, AxisValue]:
         return dict(self.blocks)
 
     def describe(self) -> str:
@@ -107,8 +174,9 @@ class Schedule:
 
 def _short(name: str) -> str:
     return {"block_m": "bm", "block_n": "bn", "block_k": "bk",
-            "block_q": "bq", "block_rows": "br", "block_cols": "bc"}.get(
-                name, name)
+            "block_q": "bq", "block_rows": "br", "block_cols": "bc",
+            "dims": "ds", "k_order": "ko", "epilogue": "ep",
+            "prefetch": "pf"}.get(name, name)
 
 
 # Today's fixed defaults from kernels/ops.py — the miss fallback. Keeping
@@ -130,6 +198,8 @@ DEFAULT_SCHEDULES: Dict[str, Schedule] = {
     "maxpool2d": Schedule.make("maxpool2d", block_rows=256, block_cols=128),
     "rmsnorm": Schedule.make("rmsnorm", block_rows=256),
     "layernorm": Schedule.make("layernorm", block_rows=256),
+    "norm_dense_act": Schedule.make("norm_dense_act", block_m=128,
+                                    block_n=128),
 }
 
 

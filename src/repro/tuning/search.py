@@ -17,15 +17,45 @@ ranking picks the winner.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
-from typing import Dict, List, Sequence, Tuple
+import os
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.tuning.schedules import (DEFAULT_SCHEDULES, OP_BLOCK_NAMES,
-                                    Schedule)
+from repro.tuning.schedules import (DEFAULT_SCHEDULES, OP_AXES,
+                                    OP_BLOCK_NAMES, Schedule)
 
-# v5e-class core: ~16 MB VMEM; keep headroom for double buffering.
+# Fallback VMEM budget (v5e-class core: ~16 MB); the real budget is
+# derived from the running device's kind — see :func:`vmem_limit_bytes`.
 VMEM_LIMIT_BYTES = 16 * 2 ** 20
 VMEM_HEADROOM = 0.75
+
+# Per-core VMEM by device-kind substring (lowercased match). v2–v5
+# cores all carry ~16 MB; Trillium (v6) doubled VMEM capacity.
+_VMEM_MB_BY_KIND = (("v6", 32), ("trillium", 32),
+                    ("v5", 16), ("v4", 16), ("v3", 16), ("v2", 16))
+
+
+@functools.lru_cache(maxsize=1)
+def vmem_limit_bytes() -> int:
+    """VMEM budget for the device actually running, from
+    ``obs/runmeta.device_kind`` — ``VMEM_LIMIT_BYTES`` when the kind is
+    unrecognized (CPU interpret mode ranks against the v5e budget so
+    off-TPU tuning produces TPU-plausible schedules). Override with
+    ``REPRO_VMEM_LIMIT_BYTES`` for tests / unlisted targets."""
+    env = os.environ.get("REPRO_VMEM_LIMIT_BYTES")
+    if env:
+        return int(env)
+    try:
+        from repro.obs.runmeta import device_kind
+
+        kind = device_kind().lower()
+    except Exception:
+        return VMEM_LIMIT_BYTES
+    for tag, mb in _VMEM_MB_BY_KIND:
+        if tag in kind:
+            return mb * 2 ** 20
+    return VMEM_LIMIT_BYTES
 
 _SUBLANE = 8    # fp32 sublane multiple
 _LANE = 128     # lane multiple (MXU/VPU width)
@@ -74,14 +104,21 @@ def cost_summary(op: str, shape_key: ShapeKey, schedule: Schedule) -> CostSummar
         n_mm = {"dense": 3, "dense_first": 2, "dense_var": 4}[op]
         x_bufs = 1 if op == "dense_first" else 2
         n_acc = 2 if op == "dense_var" else n_mm
-        vmem = (x_bufs * bm * bk + 2 * bk * bn + n_acc * bm * bn) * 4
         flops = n_mm * 2 * m * n * k
         # In the (M/bm, N/bn, K/bk) grid each x tile is re-read once per
         # N-block and each w tile once per M-block (K is the inner
         # sequential axis): small bm re-streams the whole weight matrix.
         io = (x_bufs * m * k * _steps(n, bn) + 2 * k * n * _steps(m, bm)
               + 2 * m * n) * 4
-        steps = _steps(m, bm) * _steps(n, bn) * _steps(k, bk)
+        if schedule.axis("k_order") == "unrolled":
+            # Grid is (M/bm, N/bn); full K strips stay resident and the
+            # K-tile loop runs inside the kernel body.
+            kp = _round_up(k, bk)
+            vmem = (x_bufs * bm * kp + 2 * kp * bn + n_acc * bm * bn) * 4
+            steps = _steps(m, bm) * _steps(n, bn)
+        else:  # "mnk" / "nmk": same footprint, K innermost either way
+            vmem = (x_bufs * bm * bk + 2 * bk * bn + n_acc * bm * bn) * 4
+            steps = _steps(m, bm) * _steps(n, bn) * _steps(k, bk)
         aligned = bm % _SUBLANE == 0 and bn % _LANE == 0 and bk % _LANE == 0
     elif op in ("attention", "attention_cache", "attention_paged"):
         # The cache/paged variants run the same online-softmax core over
@@ -91,13 +128,16 @@ def cost_summary(op: str, shape_key: ShapeKey, schedule: Schedule) -> CostSummar
         b, h, hkv, tq, tk, d = shape_key
         bq = min(get("block_q", 128), _round_up(tq, _SUBLANE))
         bk = min(get("block_k", 128), _round_up(tk, _SUBLANE))
-        vmem = (bq * d + 3 * bk * d          # q tile + k/v_mu/v_var tiles
-                + bq * bk                    # score tile
+        # Scalar-prefetch depth (paged only): pf pages of KV are resident
+        # per grid step, shrinking the K grid by the same factor.
+        pf = int(schedule.axis("prefetch")) if op == "attention_paged" else 1
+        vmem = (bq * d + 3 * bk * pf * d     # q tile + k/v_mu/v_var tiles
+                + bq * bk * pf               # score tile
                 + 4 * bq * d                 # acc_mu/acc_var + two outputs
                 + 2 * bq * _LANE) * 4        # running max / normalizer
         flops = b * h * tq * tk * (6 * d + 8)
         io = (b * h * tq * d * 3 + b * hkv * tk * d * 3 * _steps(tq, bq)) * 4
-        steps = b * h * _steps(tq, bq) * _steps(tk, bk)
+        steps = b * h * _steps(tq, bq) * _steps(tk, bk * pf)
         aligned = bq % _SUBLANE == 0 and bk % _SUBLANE == 0
     elif op in ("activation", "glu_product", "maxpool2d"):
         rows, cols = _elementwise_rows_cols(op, shape_key)
@@ -110,6 +150,23 @@ def cost_summary(op: str, shape_key: ShapeKey, schedule: Schedule) -> CostSummar
         io = tiles * rows * cols * 4
         steps = _steps(rows, br) * _steps(cols, bc)
         aligned = br % _SUBLANE == 0 and bc % _LANE == 0
+    elif op == "norm_dense_act":
+        # Fused norm -> dense -> activation unit: grid (M/bm, N/bn); the
+        # full (padded) K axis stays resident per step — x mu/second
+        # strips + gain/bias vectors + w mu/srm strips, three
+        # accumulators (mu / srm / mu^2 correction).
+        m, k, n = shape_key
+        kp = _round_up(k, _LANE)
+        bm = min(get("block_m", 128), _round_up(m, _SUBLANE))
+        bn = min(get("block_n", 128), _round_up(n, _LANE))
+        vmem = (2 * bm * kp + 2 * kp + 2 * kp * bn + 3 * bm * bn) * 4
+        flops = 3 * 2 * m * n * k + 12 * m * k + 50 * m * n
+        # The fusion's whole point: x is normalized in-kernel, so the
+        # norm's intermediate never round-trips HBM.
+        io = (2 * m * k * _steps(n, bn) + 2 * k * n * _steps(m, bm)
+              + 2 * m * n) * 4
+        steps = _steps(m, bm) * _steps(n, bn)
+        aligned = bm % _SUBLANE == 0 and bn % _LANE == 0
     else:  # rmsnorm / layernorm: full (padded) feature axis stays resident
         rows, d = shape_key
         dp = _round_up(d, _LANE)
@@ -117,12 +174,16 @@ def cost_summary(op: str, shape_key: ShapeKey, schedule: Schedule) -> CostSummar
         vmem = (4 * br * dp + 2 * dp) * 4
         flops = 12 * rows * d
         io = 4 * rows * d * 4
+        if schedule.axis("epilogue") == "split":
+            # Separate activation kernel: one extra HBM round-trip for
+            # the (mu, var) intermediate.
+            io += 4 * rows * d * 4
         steps = _steps(rows, br)
         aligned = br % _SUBLANE == 0
     return CostSummary(
         vmem_bytes=vmem, flops=flops, bytes_moved=io, grid_steps=steps,
         mxu_aligned=aligned,
-        fits_vmem=vmem <= VMEM_LIMIT_BYTES * VMEM_HEADROOM,
+        fits_vmem=vmem <= vmem_limit_bytes() * VMEM_HEADROOM,
     )
 
 
@@ -139,6 +200,43 @@ def score(op: str, shape_key: ShapeKey, schedule: Schedule):
     arithmetic intensity, then fewer grid steps (less invocation overhead)."""
     c = cost_summary(op, shape_key, schedule)
     return (c.fits_vmem, c.mxu_aligned, c.arithmetic_intensity, -c.grid_steps)
+
+
+# ---------------------------------------------------------------------------
+# Analytic time model + calibration hook
+# ---------------------------------------------------------------------------
+# Uncalibrated machine constants (v5e-class ballpark). Their absolute
+# values barely matter: tuning/measure.py fits per-(op, backend)
+# multipliers onto the three terms from real timings, and it is those
+# fitted coefficients — not these constants — that re-rank candidates.
+PEAK_FLOPS_PER_S = 100e12
+HBM_BYTES_PER_S = 800e9
+STEP_OVERHEAD_S = 1e-6
+
+
+def time_features(op: str, shape_key: ShapeKey,
+                  schedule: Schedule) -> Tuple[float, float, float]:
+    """The three additive terms of the analytic time model, in seconds:
+    (compute-bound, memory-bound, grid-invocation overhead)."""
+    c = cost_summary(op, shape_key, schedule)
+    return (c.flops / PEAK_FLOPS_PER_S,
+            c.bytes_moved / HBM_BYTES_PER_S,
+            c.grid_steps * STEP_OVERHEAD_S)
+
+
+def predicted_seconds(op: str, shape_key: ShapeKey, schedule: Schedule,
+                      calibration: Optional[Mapping] = None) -> float:
+    """Predicted wall clock under the (optionally calibrated) time model.
+
+    ``calibration`` is the per-(op, backend) dict that
+    ``tuning.measure.fit_calibration`` produces — its ``coef`` triple
+    rescales the compute / memory / overhead terms.
+    """
+    coef = (1.0, 1.0, 1.0)
+    if calibration:
+        coef = tuple(float(c) for c in calibration.get("coef", coef))
+    return sum(c * x
+               for c, x in zip(coef, time_features(op, shape_key, schedule)))
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +263,8 @@ _AXIS_MENU: Dict[str, Dict[str, Sequence[int]]] = {
                   "block_cols": (128, 256)},
     "rmsnorm": {"block_rows": (8, 16, 64, 128, 256, 512)},
     "layernorm": {"block_rows": (8, 16, 64, 128, 256, 512)},
+    "norm_dense_act": {"block_m": (8, 16, 32, 64, 128, 256),
+                       "block_n": (128, 256, 512)},
 }
 
 # The dim of the logical shape each block axis tiles, per op — used to clamp
@@ -181,6 +281,7 @@ _AXIS_DIM = {
     "attention_paged": {"block_q": (3, _SUBLANE)},
     "rmsnorm": {"block_rows": (0, _SUBLANE)},
     "layernorm": {"block_rows": (0, _SUBLANE)},
+    "norm_dense_act": {"block_m": (0, _SUBLANE), "block_n": (2, _LANE)},
 }
 
 
@@ -199,22 +300,39 @@ def _clamped_axis_values(op: str, name: str, shape_key: ShapeKey) -> List[int]:
 
 
 def candidates(op: str, shape_key: ShapeKey, *,
-               limit: int | None = None) -> List[Schedule]:
+               limit: int | None = None,
+               calibration: Optional[Mapping] = None) -> List[Schedule]:
     """Enumerate the filtered, ranked schedule space for ``op`` at
     ``shape_key``. Always non-empty: the default schedule is included (its
-    clamped form always fits — it is what runs today). Best-ranked first."""
+    clamped form always fits — it is what runs today). Best-ranked first.
+
+    The space is the cross product of the clamped block-shape menus and
+    the op's categorical axes (dimension_semantics, K-loop order, fused
+    epilogue, scalar-prefetch depth). With ``calibration`` (a fitted
+    per-(op, backend) coefficient record) candidates are re-ranked by
+    calibrated predicted seconds instead of the raw heuristic tuple."""
     if op not in OP_BLOCK_NAMES:
         raise ValueError(f"unknown tunable op {op!r}")
     names = OP_BLOCK_NAMES[op]
     axes = [_clamped_axis_values(op, name, shape_key) for name in names]
-    pool = {Schedule.make(op, **dict(zip(names, combo)))
-            for combo in itertools.product(*axes)}
+    cat = OP_AXES.get(op, {})
+    cat_names = tuple(cat)
+    all_names = names + cat_names
+    pool = {Schedule.make(op, **dict(zip(all_names, combo)))
+            for combo in itertools.product(*axes, *cat.values())}
     pool.add(DEFAULT_SCHEDULES[op])
     # describe() tie-break: a total, hash-seed-independent order so the
     # tuner is deterministic across processes.
-    ranked = sorted(pool,
-                    key=lambda s: (score(op, shape_key, s), s.describe()),
-                    reverse=True)
+    if calibration:
+        ranked = sorted(
+            pool,
+            key=lambda s: (not cost_summary(op, shape_key, s).fits_vmem,
+                           predicted_seconds(op, shape_key, s, calibration),
+                           s.describe()))
+    else:
+        ranked = sorted(pool,
+                        key=lambda s: (score(op, shape_key, s), s.describe()),
+                        reverse=True)
     kept = [s for s in ranked if cost_summary(op, shape_key, s).fits_vmem]
     if not kept:  # paranoid: never return an empty space
         kept = [DEFAULT_SCHEDULES[op]]

@@ -30,9 +30,10 @@ from repro.models import lm
 from repro.models.simple import (lenet5_forward, lenet5_init, mlp_forward,
                                  mlp_init)
 from repro.nn.module import Context
-from repro.tuning import (DEFAULT_SCHEDULES, TUNABLE_OPS, Schedule,
-                          ScheduleCache, ScheduleCacheWarning, autotune,
-                          candidates, collect_queries, cost_summary, tune_op)
+from repro.tuning import (AXIS_DEFAULTS, DEFAULT_SCHEDULES, OP_AXES,
+                          TUNABLE_OPS, Schedule, ScheduleCache,
+                          ScheduleCacheWarning, autotune, candidates,
+                          collect_queries, cost_summary, tune_op)
 from repro.tuning import cache as tcache
 from repro.tuning import search
 
@@ -79,9 +80,14 @@ def test_candidate_space_is_sound(op, shape_key):
     cands = candidates(op, shape_key)
     assert cands, (op, shape_key)
     assert len(set(cands)) == len(cands), "duplicate candidates"
+    axes = OP_AXES.get(op, {})
     for sched in cands:
         assert sched.op == op
-        assert all(v > 0 for v in sched.as_dict().values())
+        for name, v in sched.as_dict().items():
+            if name in axes:  # categorical axis: value from its domain
+                assert v in axes[name], (name, v)
+            else:             # block shape: positive int
+                assert isinstance(v, int) and v > 0, (name, v)
         cost = cost_summary(op, shape_key, sched)
         assert cost.fits_vmem, (sched.describe(), cost.vmem_bytes)
         assert cost.grid_steps >= 1
@@ -218,6 +224,68 @@ def test_every_elementwise_candidate_matches_oracle(op, shape_key):
 
 
 # ---------------------------------------------------------------------------
+# New categorical axes: every lowering variant matches the oracle
+# (dimension_semantics, K-loop order, fused-epilogue, scalar-prefetch)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k_order", ["mnk", "nmk", "unrolled"])
+@pytest.mark.parametrize("dims", ["parallel", "arbitrary"])
+def test_dense_axis_lowerings_match_oracle(k_order, dims):
+    m, k, n = 33, 100, 64
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, 11))
+    mu_x, var_x = _gauss_pair(kx, (m, k))
+    srm_x = var_x + jnp.square(mu_x)
+    mu_w, var_w = _gauss_pair(kw, (k, n), 0.1)
+    srm_w = var_w + jnp.square(mu_w)
+    want = ops.pfp_dense(mu_x, srm_x, mu_w, srm_w, impl="xla")
+    sched = Schedule.make("dense", block_m=16, block_n=32, block_k=64,
+                          k_order=k_order, dims=dims)
+    got = ops.pfp_dense(mu_x, srm_x, mu_w, srm_w, impl="kernel",
+                        schedule=sched)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-3, atol=1e-4,
+                               err_msg=sched.describe())
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-2, atol=1e-5,
+                               err_msg=sched.describe())
+
+
+@pytest.mark.parametrize("op", ["rmsnorm", "layernorm"])
+def test_norm_epilogue_split_matches_fused(op):
+    from repro.tuning.measure import make_runner
+
+    run = make_runner(op, (26, 48))
+    fused = run(Schedule.make(op, block_rows=8, epilogue="fused"))
+    split = run(Schedule.make(op, block_rows=8, epilogue="split"))
+    # Same MOMENT_FNS on the same fp32 values; the split variant only adds
+    # one HBM round-trip between norm and activation.
+    for f, s in zip(fused, split):
+        np.testing.assert_allclose(np.asarray(f), np.asarray(s),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("prefetch", [1, 2, 4])
+def test_paged_prefetch_depth_matches_legacy(prefetch):
+    from repro.tuning.measure import make_runner
+
+    run = make_runner("attention_paged", (2, 4, 4, 1, 32, 64))
+    want = run(None)  # legacy: one page per grid step
+    got = run(Schedule.make("attention_paged", block_q=8, prefetch=prefetch))
+    # Deeper prefetch shrinks the grid but the in-kernel page loop keeps
+    # the logical page order, so accumulation is unchanged.
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_axis_defaults_mean_legacy_lowering():
+    # An axis absent from a schedule must behave exactly like the legacy
+    # value — DEFAULT_SCHEDULES carry no axis entries, so a v1 cache entry
+    # (or a miss) keeps its pre-axis lowering bit-for-bit.
+    for op, sched in DEFAULT_SCHEDULES.items():
+        for axis in OP_AXES.get(op, {}):
+            assert not sched.has(axis)
+            assert sched.axis(axis) == AXIS_DEFAULTS[axis]
+
+
+# ---------------------------------------------------------------------------
 # Cache behavior
 # ---------------------------------------------------------------------------
 def test_cache_save_load_round_trip(tmp_path):
@@ -310,6 +378,66 @@ def test_cache_hit_short_circuits_measurement(monkeypatch, tmp_path):
                      force=True)
     assert calls["n"] == 2 * len(first), "force=True re-tunes"
     assert third == first  # deterministic tuner
+
+
+def test_concurrent_writers_merge_on_save(tmp_path):
+    """Two fleet replicas flushing the same DB path lose nothing: save is
+    temp-file + atomic rename with merge-on-conflict (the newest
+    CALIBRATED entry wins; an uncalibrated writer never clobbers a
+    calibrated one)."""
+    path = str(tmp_path / "db.json")
+
+    def s(bm):
+        return Schedule.make("dense", block_m=bm, block_n=128, block_k=128)
+
+    a = ScheduleCache()
+    a.put("dense", (8, 64, 64), "float32", "cpu", s(8))
+    a.save(path)
+    b = ScheduleCache()  # a second replica that never saw a's entry
+    b.put("dense", (16, 64, 64), "float32", "cpu", s(16))
+    b.save(path)
+    merged = ScheduleCache().load(path)
+    assert len(merged) == 2, "the first replica's flush must survive"
+
+    def winner():
+        return ScheduleCache().load(path).get(
+            "dense", (8, 64, 64), "float32", "cpu").block("block_m")
+
+    # calibrated (measured) beats the resident uncalibrated entry...
+    c = ScheduleCache()
+    c.put("dense", (8, 64, 64), "float32", "cpu", s(32),
+          meta={"measured_s": 1e-3, "tuned_at": 1.0})
+    c.save(path)
+    assert winner() == 32
+    # ...a LATER uncalibrated writer cannot clobber it back...
+    d = ScheduleCache()
+    d.put("dense", (8, 64, 64), "float32", "cpu", s(64),
+          meta={"tuned_at": 2.0})
+    d.save(path)
+    assert winner() == 32
+    # ...and among calibrated entries the newest tuned_at wins.
+    e = ScheduleCache()
+    e.put("dense", (8, 64, 64), "float32", "cpu", s(256),
+          meta={"measured_s": 2e-3, "tuned_at": 3.0})
+    e.save(path)
+    assert winner() == 256
+    # atomic write: no temp files left next to the DB
+    assert [p.name for p in tmp_path.iterdir()] == ["db.json"]
+
+
+def test_meta_and_calibration_round_trip(tmp_path):
+    path = str(tmp_path / "db.json")
+    cache = ScheduleCache()
+    cache.put("dense", (8, 64, 64), "float32", "cpu",
+              Schedule.make("dense", block_m=8, block_n=128, block_k=128),
+              meta={"mode": "time", "measured_s": 1e-3, "tuned_at": 1.0})
+    cache.put_calibration("dense", "cpu",
+                          {"coef": [0.0, 1.5, 2.5], "records": 4})
+    cache.save(path)
+    loaded = ScheduleCache().load(path)
+    meta = loaded.get_meta("dense", (8, 64, 64), "float32", "cpu")
+    assert meta["mode"] == "time" and meta["measured_s"] == 1e-3
+    assert loaded.get_calibration("dense", "cpu")["coef"] == [0.0, 1.5, 2.5]
 
 
 def test_backend_key_is_device_kind():
@@ -408,6 +536,70 @@ def test_tuned_schedule_changes_lowering_not_results():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_warm_db_compiles_once_and_never_searches(tmp_path):
+    """The no-retrace spy: a replica preloading a persisted DB consults
+    the cache only while tracing (zero misses — no schedule search), and
+    a second identical call replays the compiled fn with ZERO new
+    consults, proving each tuned op compiled exactly once per shape."""
+    params = svi_to_pfp(mlp_init(KEY, d_hidden=64))
+    x = jax.random.normal(jax.random.fold_in(KEY, 8), (8, 784))
+    path = str(tmp_path / "db.json")
+    autotune(mlp_forward, params, x, mode="rank", save_path=path)
+    tcache.reset_global_cache()
+    assert len(tcache.load_global_cache(path)) > 0  # the warm replica
+
+    fwd = jax.jit(lambda p, xx: mlp_forward(p, xx,
+                                            Context(mode=Mode.PFP,
+                                                    impl="kernel")))
+    tcache.consult_counters(reset=True)
+    jax.block_until_ready(fwd(params, x))
+    first = dict(tcache.consult_counters())
+    assert first["consults"] > 0 and first["misses"] == 0, first
+    jax.block_until_ready(fwd(params, x))
+    assert dict(tcache.consult_counters()) == first, \
+        "a second call must replay the compiled fn — zero new consults"
+
+
+def test_calibration_reranks_candidates():
+    """Acceptance: a fitted calibration demonstrably changes the chosen
+    schedule for this interpret-mode fixture. Ground-truth timings are
+    synthesized from the grid-overhead term (a device whose per-step
+    launch cost dominates); the least-squares fit recovers that weighting
+    and the calibrated ranking — sorted by calibrated predicted seconds
+    instead of the raw heuristic tuple — picks a different winner."""
+    from repro.tuning.measure import fit_calibration
+
+    op, shape_key = "dense", (8, 256, 256)
+    full = candidates(op, shape_key)
+    feats = [search.time_features(op, shape_key, c) for c in full]
+    assert len({f[2] for f in feats}) > 1, "fixture must vary grid overhead"
+    records = [{"time_features": f, "seconds": f[2]} for f in feats]
+    fit = fit_calibration(records, device_kind="test-device")
+    assert fit is not None and fit["records"] == len(records)
+    uncal = candidates(op, shape_key, limit=8)
+    cal = candidates(op, shape_key, limit=8, calibration=fit)
+    assert cal[0] != uncal[0], "calibrated re-ranking must change the winner"
+    # Re-ranking reorders the same space — it never invents candidates.
+    assert set(cal) <= set(full) and set(uncal) <= set(full)
+    # And the calibrated winner's measured ground truth is minimal.
+    best_s = min(r["seconds"] for r in records)
+    assert search.time_features(op, shape_key, cal[0])[2] == best_s
+
+
+def test_tune_into_cache_stores_calibration_provenance(tmp_path):
+    from repro.tuning.measure import tune_into_cache
+
+    cache = ScheduleCache(str(tmp_path / "db.json"))
+    result = tune_into_cache(cache, "dense", (8, 64, 64), "float32", "cpu",
+                             mode="rank")
+    meta = cache.get_meta("dense", (8, 64, 64), "float32", "cpu")
+    assert meta["mode"] == "rank"
+    assert meta["device_kind"] == "cpu"
+    assert meta["calibrated_rank"] is False  # no fit existed yet
+    assert meta["predicted_s"] == result.records[0]["predicted_s"]
+    assert cache.get("dense", (8, 64, 64), "float32", "cpu") == result.best
+
+
 # ---------------------------------------------------------------------------
 # Acceptance: full-model parity under warmed non-default schedules
 # ---------------------------------------------------------------------------
@@ -424,7 +616,8 @@ _VARIANTS = [
      "glu_product": dict(block_rows=8, block_cols=128),
      "maxpool2d": dict(block_rows=8, block_cols=256),
      "rmsnorm": dict(block_rows=8),
-     "layernorm": dict(block_rows=8)},
+     "layernorm": dict(block_rows=8),
+     "norm_dense_act": dict(block_m=8, block_n=128)},
     {"dense": dict(block_m=32, block_n=256, block_k=256),
      "dense_first": dict(block_m=32, block_n=256, block_k=256),
      "dense_var": dict(block_m=32, block_n=256, block_k=256),
@@ -435,7 +628,8 @@ _VARIANTS = [
      "glu_product": dict(block_rows=64, block_cols=256),
      "maxpool2d": dict(block_rows=64, block_cols=64),
      "rmsnorm": dict(block_rows=64),
-     "layernorm": dict(block_rows=64)},
+     "layernorm": dict(block_rows=64),
+     "norm_dense_act": dict(block_m=32, block_n=256)},
     {"dense": dict(block_m=256, block_n=512, block_k=1024),
      "dense_first": dict(block_m=256, block_n=512, block_k=1024),
      "dense_var": dict(block_m=256, block_n=512, block_k=1024),
@@ -446,7 +640,8 @@ _VARIANTS = [
      "glu_product": dict(block_rows=512, block_cols=512),
      "maxpool2d": dict(block_rows=512, block_cols=128),
      "rmsnorm": dict(block_rows=512),
-     "layernorm": dict(block_rows=512)},
+     "layernorm": dict(block_rows=512),
+     "norm_dense_act": dict(block_m=256, block_n=512)},
 ]
 
 
