@@ -11,6 +11,13 @@ Row families, emitted through benchmarks/common.py:
                               abstention/escalation rates — paged runs add
                               page-occupancy, fragmentation and preemption
                               counts;
+  serving/moe_decode/...      the MoE serving lift: the engine decode loop
+                              on the reduced DeepSeek-MoE config (routed
+                              top-k experts, aux-loss-free) — derived
+                              carries the lockstep decode-step time, the
+                              loadgen throughput and the expert-capacity
+                              drop accounting (assignments / dropped /
+                              drop rate);
   serving/op_profile/...      ONE eager lockstep decode pass through the
                               dispatch profiler (every op fenced): the
                               derived column is the live Table-4-style
@@ -131,6 +138,41 @@ def _decode_step_row(lines, cfg, params, *, page_size=None):
     lines.append(emit(
         f"serving/{name}/b{engine.config.slots}", t_step,
         f"tok_s={engine.config.slots / t_step:.1f}",
+        schedule=schedule_note(engine.decode_fn, *args)))
+
+
+def _moe_decode_row(lines, *, n_requests):
+    """Uncertainty-aware MoE decode: the engine decode loop on the reduced
+    DeepSeek-MoE config (routed top-k experts through the grid-level
+    batched-expert kernel path on --impl kernel). The derived column
+    carries one lockstep decode-step wall time plus the aux-loss-free
+    routing accounting (assignments / dropped / drop rate) a loadgen run
+    records through the moe_drop_rate gauge."""
+    cfg = reduced_config("deepseek-moe-16b")
+    params = svi_to_pfp(lm.init_params(cfg, jax.random.PRNGKey(0)))
+    engine = _build_engine(cfg, params)
+    positions = np.full(engine.config.slots, 8, np.int32)
+    args = [params,
+            jnp.zeros((engine.config.slots, 1), jnp.int32),
+            jnp.asarray(positions[:, None]),
+            jnp.asarray(positions + 1),
+            jnp.ones((engine.config.slots,), bool),
+            engine.pool.states,
+            *engine.logit_buffers]
+    t_step = time_fn(engine.decode_fn, *args)
+    trace = poisson_trace(n_requests, rate=0.5, vocab_size=cfg.vocab_size,
+                          seed=1, prompt_len=(4, 16), max_new_tokens=(2, 8))
+    s = run_load(engine, trace)
+    assert s["final_occupancy"] == 0, "slot leak in MoE loadgen run"
+    assert s["moe_assignments"] > 0, "MoE decode recorded no routing aux"
+    lines.append(emit(
+        f"serving/moe_decode/b{engine.config.slots}", t_step,
+        f"tok_s={engine.config.slots / t_step:.1f}"
+        f";tput={s['throughput_tok_s']:.1f}tok_s"
+        f";moe_assignments={s['moe_assignments']}"
+        f";moe_dropped={s['moe_dropped_assignments']}"
+        f";drop_rate={s['moe_drop_rate']:.4f}"
+        f";experts={cfg.num_experts};top_k={cfg.top_k}",
         schedule=schedule_note(engine.decode_fn, *args)))
 
 
@@ -597,6 +639,9 @@ def run(quick: bool = True, page_sizes=None):
     _loadgen_row(lines, cfg, params, n_requests=n_requests)
     for ps in (page_sizes or (PAGE_SIZE,)):
         _loadgen_row(lines, cfg, params, n_requests=n_requests, page_size=ps)
+
+    # -- uncertainty-aware MoE decode: routed experts + drop accounting ----
+    _moe_decode_row(lines, n_requests=8 if quick else 32)
 
     # -- live Table-4: per-op fenced decode profile ------------------------
     _op_profile_row(lines, cfg, params)

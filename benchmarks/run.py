@@ -81,7 +81,7 @@ def main() -> None:
         _tune_paper_models(full=args.full, save_path=args.schedule_cache)
 
     from benchmarks import (bench_fig5_formulations, bench_fig7_batch_sweep,
-                            bench_serving, bench_table1_quality,
+                            bench_moe, bench_serving, bench_table1_quality,
                             bench_table2_schedules, bench_table3_maxpool,
                             bench_table4_profiling, bench_table5_processors,
                             bench_tuning)
@@ -96,6 +96,7 @@ def main() -> None:
         "table5": bench_table5_processors,
         "serving": bench_serving,
         "tuning": bench_tuning,
+        "moe": bench_moe,
     }
     from benchmarks.common import CSV_HEADER
 
@@ -109,7 +110,7 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
             traceback.print_exc()
-    for family in ("serving", "tuning"):
+    for family in ("serving", "tuning", "moe"):
         if family in rows:
             _write_bench_summary(rows[family], family=family,
                                  full=args.full, impl=args.impl)

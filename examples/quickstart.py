@@ -15,6 +15,9 @@
     registry exports, live per-op profile, uncertainty telemetry (repro.obs)
 13. Warm-start fleet schedule DB: tune once, persist, every replica
     serves warm with zero schedule search on the hot path (repro.tuning)
+14. Uncertainty-aware MoE decode: routed top-k experts through the
+    grid-level batched-expert kernel, drop accounting on the aux-loss-free
+    path (nn/moe.py, kernels/pfp_moe.py)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -443,6 +446,44 @@ def main():
     #   serve --impl kernel --fuse-ops --save-schedule-db db.json   (cold)
     #   serve --impl kernel --fuse-ops --schedule-db db.json \
     #         --expect-warm-cache                                   (warm)
+
+    print("== 14. Uncertainty-aware MoE decode (DeepSeek-style routing) ==")
+    # A Mixture-of-Experts LM through the same engine: the router picks
+    # top-k experts per token on the MEAN path (deterministic control
+    # flow), while the Gaussian moments ride through ONE grid-level
+    # batched-expert Pallas call per MoE layer (kernels/pfp_moe.py —
+    # E independent Eq. 12 dense problems, expert axis on the grid).
+    # Decode runs the aux-loss-free path: no load-balance loss term in
+    # the graph, but the capacity-drop accounting still surfaces through
+    # the engine's moe_drop_rate gauge.
+    from repro.configs import reduced_config
+    from repro.models import lm as lmmod
+    from repro.serving.engine import (Engine, EngineConfig, RequestScheduler,
+                                      RouterConfig, SchedulerConfig,
+                                      UncertaintyRouter, poisson_trace,
+                                      run_load)
+
+    moe_cfg = reduced_config("deepseek-moe-16b")
+    moe_params = svi_to_pfp(lmmod.init_params(moe_cfg, jax.random.PRNGKey(7)))
+    engine = Engine(
+        moe_cfg, moe_params,
+        EngineConfig(slots=2, max_len=24, seed=0),
+        router=UncertaintyRouter(moe_cfg, RouterConfig(escalate_samples=4)),
+        scheduler=RequestScheduler(SchedulerConfig(prefill_chunk=8),
+                                   max_len=24))
+    summary = run_load(engine, poisson_trace(
+        4, rate=0.5, vocab_size=moe_cfg.vocab_size, seed=3,
+        prompt_len=(4, 8), max_new_tokens=(2, 4)))
+    print(f"  served {summary['completed']} requests through "
+          f"{moe_cfg.num_experts} experts (top-{moe_cfg.top_k}): "
+          f"{summary['moe_assignments']:.0f} routed assignments, "
+          f"{summary['moe_dropped_assignments']:.0f} dropped at capacity "
+          f"(drop rate {summary['moe_drop_rate']:.3f})")
+    assert summary["final_occupancy"] == 0  # the MoE pool drains too
+    # `--arch deepseek-moe-16b --impl kernel` on launch/serve.py runs this
+    # with the batched-expert kernel + tuned dense_batched schedules;
+    # ModelConfig(moe_dispatch='a2a') flips dispatch/combine to explicit
+    # shard_map all-to-alls on a (data, model) mesh (nn/moe.py).
 
 
 if __name__ == "__main__":

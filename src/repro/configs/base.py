@@ -29,6 +29,10 @@ class ModelConfig:
     num_shared_experts: int = 0
     first_dense_layers: int = 0      # leading dense-FFN layers (DeepSeekMoE)
     capacity_factor: float = 1.25
+    # 'scatter' = GSPMD scatter/gather dispatch; 'a2a' = explicit shard_map
+    # all-to-all dispatch/combine over the 'data' mesh axis (nn/moe.py) —
+    # falls back to scatter when no mesh is bound or sizes don't divide.
+    moe_dispatch: str = "scatter"
 
     # VLM (backbone only; frontend is a stub per assignment)
     cross_attn_every: int = 0        # every Nth layer is a cross-attn layer

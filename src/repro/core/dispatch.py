@@ -269,30 +269,45 @@ def _einsum_kernel(subscripts, x, w, formulation):
         # Dense-shaped contraction: both formulations have a blocked
         # kernel ('dense' / 'dense_var' schedules).
         return _dense_kernel(x, w, formulation)
-    if formulation != "srm":
-        return _einsum_xla(subscripts, x, w, formulation)
-    if _parse_batched_mm(spec):
-        # Batched per-expert contraction: vmap the blocked dense kernel over
-        # the shared leading axis (Pallas batches by extending the grid).
-        # Schedules key on the PER-EXPERT (c, d, f) dense problem.
-        ops = _kernel_ops()
-        dtype = _out_dtype(x, w)
-        expert_key = (x.shape[1], x.shape[2], w.shape[-1])
-        if not is_gaussian(x):
-            sched = _schedule_for("dense_first", expert_key, dtype)
-            fn = jax.vmap(lambda xe, mw, vw: ops.pfp_dense(
-                xe, xe, mw, vw, impl="kernel", first_layer=True,
-                schedule=sched))
-            mu, var = fn(x, w.mean, w.var)
-        else:
-            sched = _schedule_for("dense", expert_key, dtype)
-            fn = jax.vmap(lambda mx, sx, mw, sw: ops.pfp_dense(
-                mx, sx, mw, sw, impl="kernel", schedule=sched))
-            mu, var = fn(x.mean, x.srm, w.mean, w.srm)
-        return GaussianTensor(mu.astype(dtype), var.astype(dtype), VAR)
-    # General contractions (depthwise convs etc.) have no blocked kernel
-    # yet; the XLA formulation is the registered fallback.
+    if _parse_batched_mm(spec) and formulation in ("srm", "var") \
+            and is_gaussian(w):
+        # Batched per-expert contraction (the MoE 'ecd,edf->ecf'): one
+        # grid-level Pallas call with the expert axis on the grid.
+        return _dense_batched_kernel(x, w, formulation)
+    if spec == "wbtr,wr->btr" and formulation in ("srm", "var") \
+            and is_gaussian(w):
+        # Depthwise tap contraction (causal depthwise conv in
+        # nn/recurrent.py): lifts onto the batched-expert kernel as an
+        # R-batched matvec instead of falling back to XLA.
+        return _depthwise_kernel(x, w, formulation)
+    # General contractions have no blocked kernel; the XLA formulation is
+    # the registered fallback — counted so silent fallbacks surface in
+    # the per-op profile.
+    if _PROFILER is not None:
+        _PROFILER.on_fallback(f"einsum:{spec}:{formulation}")
     return _einsum_xla(subscripts, x, w, formulation)
+
+
+def _depthwise_kernel(x, w, formulation):
+    """'wbtr,wr->btr' via dense_batched: out[b,t,r] = sum_w x[w,b,t,r]*w[w,r]
+    is, per channel r, a (B*T, W) x (W, 1) matvec — an R-batched dense."""
+    mean_like = x.mean if is_gaussian(x) else x
+    wd, b, t, r = mean_like.shape
+
+    def to_tokens(a):  # (W, B, T, R) -> (R, B*T, W)
+        return jnp.transpose(a, (3, 1, 2, 0)).reshape(r, b * t, wd)
+
+    def to_weights(a):  # (W, R) -> (R, W, 1)
+        return jnp.transpose(a)[:, :, None]
+
+    if is_gaussian(x):
+        xb = GaussianTensor(to_tokens(x.mean), to_tokens(x.second), x.rep)
+    else:
+        xb = to_tokens(x)
+    wb = GaussianTensor(to_weights(w.mean), to_weights(w.second), w.rep)
+    out = _dense_batched_kernel(xb, wb, formulation)  # (R, B*T, 1), VAR
+    back = lambda a: jnp.transpose(a.reshape(r, b, t), (1, 2, 0))
+    return GaussianTensor(back(out.mean), back(out.var), VAR)
 
 
 def pfp_einsum(subscripts: str, x, w, *, formulation: str = "srm",
@@ -300,6 +315,57 @@ def pfp_einsum(subscripts: str, x, w, *, formulation: str = "srm",
     """PFP generalized contraction. Consumes SRM, emits VAR."""
     return get_op("einsum", impl)(subscripts, _to_compute_rep(x, formulation),
                                   w, formulation)
+
+
+# ---------------------------------------------------------------------------
+# dense_batched — grid-level batched-expert dense (MoE expert MLPs)
+# ---------------------------------------------------------------------------
+@register("dense_batched", "xla")
+def _dense_batched_xla(x, w, formulation):
+    # The vmapped per-expert PFP dense chain — the oracle the grid-level
+    # kernel is accepted against (kernels/ref.py vmaps the same chain).
+    def per_expert(xe, we):
+        return pfp_layers.pfp_einsum("ck,kn->cn", xe, we,
+                                     formulation=formulation)
+
+    return jax.vmap(per_expert)(x, w)
+
+
+@register("dense_batched", "kernel")
+def _dense_batched_kernel(x, w, formulation):
+    if formulation not in ("srm", "var"):
+        return _dense_batched_xla(x, w, formulation)
+    ops = _kernel_ops()
+    dtype = _out_dtype(x, w)
+    mean_like = x.mean if is_gaussian(x) else x
+    shape_key = (mean_like.shape[0], mean_like.shape[1], mean_like.shape[2],
+                 w.mean.shape[-1])
+    sched = _schedule_for("dense_batched", shape_key, dtype)
+    if not is_gaussian(x):
+        # First-layer simplification (Eq. 13) with a leading expert axis.
+        mu, var = ops.pfp_dense_batched(x, x, w.mean, w.var, impl="kernel",
+                                        first_layer=True, schedule=sched)
+    elif formulation == "var":
+        mu, var = ops.pfp_dense_batched_var(x.mean, x.var, w.mean, w.var,
+                                            impl="kernel", schedule=sched)
+    else:
+        mu, var = ops.pfp_dense_batched(x.mean, x.srm, w.mean, w.srm,
+                                        impl="kernel", schedule=sched)
+    return GaussianTensor(mu.astype(dtype), var.astype(dtype), VAR)
+
+
+def pfp_dense_batched(x, w, *, formulation: str = "srm",
+                      impl: Optional[str] = None) -> GaussianTensor:
+    """Batched-expert PFP dense: (E, C, K) x (E, K, N) -> (E, C, N), one
+    independent PFP dense per leading index. Consumes SRM, emits VAR.
+
+    This is the MoE expert-MLP contraction ('ecd,edf->ecf'). The kernel
+    impl runs ONE Pallas call with the expert axis on the grid and
+    ``block_e`` experts resident per grid step (kernels/pfp_moe.py); the
+    xla impl is the vmapped per-expert chain the kernel is tested against.
+    """
+    return get_op("dense_batched", impl)(_to_compute_rep(x, formulation), w,
+                                         formulation)
 
 
 # ---------------------------------------------------------------------------
@@ -814,7 +880,8 @@ __all__ = [
     "IMPLS", "set_default_impl", "get_default_impl", "resolve_impl",
     "register", "get_op", "registered_ops", "set_profiler", "get_profiler",
     "set_fusion", "get_fusion", "fusion",
-    "pfp_dense", "pfp_einsum", "pfp_conv2d_im2col", "pfp_activation",
+    "pfp_dense", "pfp_dense_batched", "pfp_einsum", "pfp_conv2d_im2col",
+    "pfp_activation",
     "pfp_maxpool2d", "pfp_attention", "pfp_attention_cache",
     "pfp_attention_paged", "pfp_rmsnorm", "pfp_layernorm",
     "pfp_glu_product", "pfp_norm_dense_act", "pfp_embedding", "pfp_residual",

@@ -32,6 +32,8 @@ from repro.kernels.pfp_attention import (pfp_attention_cache_pallas,
                                          pfp_attention_pallas)
 from repro.kernels.pfp_dense import pfp_dense_pallas, pfp_dense_var_pallas
 from repro.kernels.pfp_fused import pfp_norm_dense_act_pallas
+from repro.kernels.pfp_moe import (pfp_dense_batched_pallas,
+                                   pfp_dense_batched_var_pallas)
 from repro.kernels.pfp_maxpool import pfp_maxpool2d_pallas
 from repro.kernels.pfp_norms import pfp_layernorm_pallas, pfp_rmsnorm_pallas
 from repro.tuning.schedules import AXIS_DEFAULTS, Schedule
@@ -169,6 +171,80 @@ def pfp_dense_var(
         )
         mu, var = mu[:m, :n], var[:m, :n]
     return mu.reshape(*lead, n), var.reshape(*lead, n)
+
+
+def pfp_dense_batched(
+    mu_x, srm_x, mu_w, srm_w,
+    *, impl: Impl | None = None,
+    block_e: int = 1, block_c: int = 128, block_n: int = 128,
+    block_k: int = 512, first_layer: bool = False,
+    schedule: Optional[Schedule] = None,
+):
+    """Batched-expert joint PFP dense for (E, C, K) x (E, K, N).
+
+    The MoE expert-MLP operator: E independent SRM dense problems in ONE
+    Pallas call with the expert axis leading the grid (``block_e``
+    experts per grid step — the tuner's expert-grid blocking axis). The
+    xla impl is the vmapped per-expert oracle chain. Returns (mean, var),
+    each (E, C, N)."""
+    impl = impl or get_default_impl()
+    e, c, kdim = mu_x.shape
+    n = mu_w.shape[-1]
+
+    if impl == "xla":
+        if first_layer:
+            return ref.pfp_dense_batched_first_layer_ref(mu_x, mu_w, srm_w)
+        return ref.pfp_dense_batched_ref(mu_x, srm_x, mu_w, srm_w)
+
+    be = _block(schedule, "block_e", min(block_e, e), e, 1)
+    bc = _block(schedule, "block_c", min(block_c, _ceil_mult(c)), c, 8)
+    bn = _block(schedule, "block_n", min(block_n, _ceil_mult(n)), n, 128)
+    bk = _block(schedule, "block_k", min(block_k, _ceil_mult(kdim)), kdim, 128)
+    mxp = _pad_to(_pad_to(_pad_to(mu_x, be, 0), bc, 1), bk, 2)
+    sxp = _pad_to(_pad_to(_pad_to(srm_x, be, 0), bc, 1), bk, 2)
+    mwp = _pad_to(_pad_to(_pad_to(mu_w, be, 0), bk, 1), bn, 2)
+    swp = _pad_to(_pad_to(_pad_to(srm_w, be, 0), bk, 1), bn, 2)
+    mu, var = pfp_dense_batched_pallas(
+        mxp, sxp, mwp, swp,
+        block_e=be, block_c=bc, block_n=bn, block_k=bk,
+        dims=_axis(schedule, "dims"), k_order=_axis(schedule, "k_order"),
+        interpret=_interpret(), first_layer=first_layer,
+    )
+    return mu[:e, :c, :n], var[:e, :c, :n]
+
+
+def pfp_dense_batched_var(
+    mu_x, var_x, mu_w, var_w,
+    *, impl: Impl | None = None,
+    block_e: int = 1, block_c: int = 128, block_n: int = 128,
+    block_k: int = 512, schedule: Optional[Schedule] = None,
+):
+    """Batched-expert joint PFP dense, Eq. 7 'var' formulation, for
+    (E, C, K) x (E, K, N). Consumes (mu, var) operands directly; shares
+    the `dense_batched` schedule table (block legality is identical).
+    Returns (mean, var), each (E, C, N)."""
+    impl = impl or get_default_impl()
+    e, c, kdim = mu_x.shape
+    n = mu_w.shape[-1]
+
+    if impl == "xla":
+        return ref.pfp_dense_batched_var_ref(mu_x, var_x, mu_w, var_w)
+
+    be = _block(schedule, "block_e", min(block_e, e), e, 1)
+    bc = _block(schedule, "block_c", min(block_c, _ceil_mult(c)), c, 8)
+    bn = _block(schedule, "block_n", min(block_n, _ceil_mult(n)), n, 128)
+    bk = _block(schedule, "block_k", min(block_k, _ceil_mult(kdim)), kdim, 128)
+    mxp = _pad_to(_pad_to(_pad_to(mu_x, be, 0), bc, 1), bk, 2)
+    vxp = _pad_to(_pad_to(_pad_to(var_x, be, 0), bc, 1), bk, 2)
+    mwp = _pad_to(_pad_to(_pad_to(mu_w, be, 0), bk, 1), bn, 2)
+    vwp = _pad_to(_pad_to(_pad_to(var_w, be, 0), bk, 1), bn, 2)
+    mu, var = pfp_dense_batched_var_pallas(
+        mxp, vxp, mwp, vwp,
+        block_e=be, block_c=bc, block_n=bn, block_k=bk,
+        dims=_axis(schedule, "dims"), k_order=_axis(schedule, "k_order"),
+        interpret=_interpret(),
+    )
+    return mu[:e, :c, :n], var[:e, :c, :n]
 
 
 def pfp_activation(mu, var, *, kind: str = "relu", impl: Impl | None = None,
@@ -489,7 +565,8 @@ def _ceil_mult(x: int, base: int = 128) -> int:
 
 
 __all__ = [
-    "pfp_dense", "pfp_dense_var", "pfp_activation", "pfp_maxpool2d",
+    "pfp_dense", "pfp_dense_var", "pfp_dense_batched",
+    "pfp_dense_batched_var", "pfp_activation", "pfp_maxpool2d",
     "pfp_attention",
     "pfp_attention_cache", "pfp_attention_paged",
     "pfp_rmsnorm", "pfp_layernorm", "pfp_glu_product",

@@ -45,6 +45,14 @@ def pfp_dense_var_ref(mu_x, var_x, mu_w, var_w):
     return mu, var
 
 
+# -- pfp_moe (batched-expert dense) ------------------------------------------
+# The vmapped per-expert chain IS the oracle the grid-level kernel is
+# accepted against (ISSUE 10): vmap over the shared leading expert axis.
+pfp_dense_batched_ref = jax.vmap(pfp_dense_ref)
+pfp_dense_batched_first_layer_ref = jax.vmap(pfp_dense_first_layer_ref)
+pfp_dense_batched_var_ref = jax.vmap(pfp_dense_var_ref)
+
+
 # -- pfp_activations ---------------------------------------------------------
 def pfp_relu_ref(mu, var):
     return pfp_math.relu_moments(mu.astype(jnp.float32), var.astype(jnp.float32))

@@ -66,6 +66,10 @@ _PREFIX_KEYS = (
     "mean_shared_pages", "final_prefix_held_pages",
 )
 
+_MOE_KEYS = (
+    "moe_assignments", "moe_dropped_assignments", "moe_drop_rate",
+)
+
 _SPEC_KEYS = (
     "spec_rounds", "draft_tokens", "accepted_draft_tokens",
     "draft_acceptance_rate", "accepted_tokens_per_verify", "verify_passes",
@@ -358,6 +362,11 @@ def _parse_args():
                          "block with ONE chunked PFP pass (paged only); "
                          "the run is checked bit-for-bit against a plain "
                          "engine on the same trace")
+    ap.add_argument("--expect-moe-drop", action="store_true",
+                    help="exit nonzero unless the run recorded MoE routing "
+                         "accounting (moe_assignments > 0) and a finite "
+                         "drop rate — CI: prove the aux-loss-free decode "
+                         "path surfaces expert-capacity drops (moe only)")
     ap.add_argument("--expect-accept-rate", type=float, default=None,
                     metavar="R",
                     help="exit nonzero if the draft acceptance rate falls "
@@ -512,7 +521,8 @@ def _serve(args):
         layout += f"/spec-k{args.speculate}"
     print(f"== engine summary ({cfg.name}, mesh={dims}, "
           f"impl={args.impl or 'default'}, kv={layout}) ==")
-    keys = _SUMMARY_KEYS + (_PAGED_KEYS if args.page_size else ()) + \
+    keys = _SUMMARY_KEYS + (_MOE_KEYS if cfg.family == "moe" else ()) + \
+        (_PAGED_KEYS if args.page_size else ()) + \
         (_PREFIX_KEYS if args.prefix_sharing else ()) + \
         (_SPEC_KEYS if args.speculate else ())
     for k in keys:
@@ -558,6 +568,19 @@ def _serve(args):
               "(page churn too low to exercise the paged pool)",
               file=sys.stderr)
         return 1
+    if args.expect_moe_drop:
+        if cfg.family != "moe":
+            print(f"ERROR: --expect-moe-drop on a non-MoE arch "
+                  f"({cfg.name} is family={cfg.family})", file=sys.stderr)
+            return 1
+        if summary["moe_assignments"] == 0:
+            print("ERROR: --expect-moe-drop but the run recorded no MoE "
+                  "routing assignments (aux accounting never reached the "
+                  "engine metrics)", file=sys.stderr)
+            return 1
+        print(f"moe routing: {summary['moe_assignments']} assignments, "
+              f"{summary['moe_dropped_assignments']} dropped "
+              f"(rate {summary['moe_drop_rate']:.4f})")
     if args.expect_prefix_hits and summary["prefix_hits"] == 0:
         print("ERROR: --expect-prefix-hits but no admission mapped shared "
               "prefix pages (trace lacks a common prefix, or donors never "

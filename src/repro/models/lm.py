@@ -33,7 +33,7 @@ from repro.nn.layers import (NORMS, dense_apply, dense_init, embedding_apply,
                              embedding_init, residual_add,
                              sinusoidal_embedding)
 from repro.nn.mlp import mlp_apply, mlp_init
-from repro.nn.moe import moe_apply, moe_init
+from repro.nn.moe import moe_apply, moe_init, zero_aux
 from repro.nn.pjit_hints import constrain
 from repro.nn.module import Context
 from repro.nn.recurrent import (RecurrentState, init_recurrent_state,
@@ -91,10 +91,11 @@ def _block_init(kind: str, cfg: ModelConfig, key):
 def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
                  positions, image_emb=None, state=None, cache_len=None,
                  page_table=None, write_start=None,
-                 standard_positions=False):
-    """Returns (x, new_state, aux_loss)."""
+                 standard_positions=False, moe_aux_loss=True):
+    """Returns (x, new_state, aux) — aux is the MoE aux dict ('loss',
+    'moe_dropped', 'moe_assignments'), zeros for non-MoE blocks."""
     norm_apply = NORMS[cfg.norm][1]
-    aux = jnp.zeros((), jnp.float32)
+    aux = zero_aux()
     new_state = None
 
     if kind in ("attn", "cross", "moe"):
@@ -120,7 +121,8 @@ def _block_apply(kind: str, params, x, ctx: Context, cfg: ModelConfig, *,
             ffn_out, aux = moe_apply(
                 params["moe"], h, ctx, num_experts=cfg.num_experts,
                 top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                activation=cfg.activation)
+                activation=cfg.activation, aux_loss=moe_aux_loss,
+                dispatch_mode=cfg.moe_dispatch)
         else:
             ffn_out = mlp_apply(params["mlp"], h, ctx, activation=cfg.activation)
         x = residual_add(x, ffn_out)
@@ -218,12 +220,16 @@ def _embed_inputs(params, cfg: ModelConfig, inputs, ctx: Context):
 
 
 def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
-            remat: bool = False, states=None, collect_states: bool = False):
+            remat: bool = False, states=None, collect_states: bool = False,
+            moe_aux_loss: bool = True):
     """Full-sequence pass.
 
     states/collect_states support the prefill program: pass initialized
     per-layer states and get back the filled ones alongside the output.
-    Returns (logits, aux_loss, new_states).
+    Returns (logits, aux, new_states) — aux is the summed MoE aux dict
+    ({'loss', 'moe_dropped', 'moe_assignments'} f32 scalars).
+    ``moe_aux_loss=False`` is the aux-loss-free inference path: decode and
+    prefill graphs never build the router's load-balance loss term.
     """
     x, positions, standard_positions = _embed_inputs(params, cfg, inputs, ctx)
     x = constrain(x, "batch", "seq", "embed")
@@ -239,7 +245,10 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
     write_start = inputs.get("write_start")
 
     lpg, num_groups, tail = _group_counts(cfg)
-    aux_total = jnp.zeros((), jnp.float32)
+    aux_total = zero_aux()
+
+    def _acc(acc, aux):
+        return {k: acc[k] + aux[k] for k in acc}
 
     for i in range(cfg.first_dense_layers):
         st = None if states is None else states.get(f"head{i}")
@@ -249,8 +258,9 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                                       cache_len=cache_len,
                                       page_table=page_table,
                                       write_start=write_start,
-                                      standard_positions=standard_positions)
-        aux_total = aux_total + aux
+                                      standard_positions=standard_positions,
+                                      moe_aux_loss=moe_aux_loss)
+        aux_total = _acc(aux_total, aux)
         if collect_states and states is not None:
             states[f"head{i}"] = new_st
 
@@ -277,14 +287,15 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                         positions=positions, image_emb=image_emb, state=st_,
                         cache_len=cache_len, page_table=page_table,
                         write_start=write_start,
-                        standard_positions=standard_positions)
+                        standard_positions=standard_positions,
+                        moe_aux_loss=moe_aux_loss)
 
                 # Nested remat: per-layer checkpoints inside the remat'd
                 # group bound the backward live-set to ONE layer.
                 if remat:
                     run_block = jax.checkpoint(run_block)
                 x, nst, aux = run_block(x, gp[f"b{i}"], st)
-                aux_acc = aux_acc + aux
+                aux_acc = _acc(aux_acc, aux)
                 if st is not None:
                     new_sts[f"b{i}"] = nst
             x = x.astype(in_dtype)  # carry dtype stability across scan steps
@@ -310,8 +321,9 @@ def forward(params, cfg: ModelConfig, inputs, ctx: Context, *,
                                       cache_len=cache_len,
                                       page_table=page_table,
                                       write_start=write_start,
-                                      standard_positions=standard_positions)
-        aux_total = aux_total + aux
+                                      standard_positions=standard_positions,
+                                      moe_aux_loss=moe_aux_loss)
+        aux_total = _acc(aux_total, aux)
         if collect_states and states is not None:
             states[f"tail{i}"] = new_st
 
@@ -512,9 +524,22 @@ def decode_step(params, cfg: ModelConfig, inputs, states, ctx: Context):
     pages), optional 'image_embeddings'.
     Returns (logits, new_states).
     """
-    logits, _, new_states = forward(
-        params, cfg, inputs, ctx, states=dict(states), collect_states=True)
+    logits, _, new_states = decode_step_with_aux(params, cfg, inputs, states,
+                                                 ctx)
     return logits, new_states
+
+
+def decode_step_with_aux(params, cfg: ModelConfig, inputs, states,
+                         ctx: Context):
+    """:func:`decode_step` that also returns the MoE aux dict
+    ({'loss', 'moe_dropped', 'moe_assignments'}) — the serving engine reads
+    the drop counters per step. Runs the aux-loss-free inference path: the
+    'loss' entry stays zero and the decode graph never builds the router's
+    load-balance term. Returns (logits, aux, new_states)."""
+    logits, aux, new_states = forward(
+        params, cfg, inputs, ctx, states=dict(states), collect_states=True,
+        moe_aux_loss=False)
+    return logits, aux, new_states
 
 
 def draft_decode_step(params, cfg: ModelConfig, inputs, states,
@@ -552,7 +577,8 @@ def prefill(params, cfg: ModelConfig, inputs, ctx: Context, max_len: int):
              else inputs["frame_embeddings"].shape[0])
     states = init_decode_state(cfg, batch, max_len)
     logits, _, new_states = forward(params, cfg, inputs, ctx,
-                                    states=states, collect_states=True)
+                                    states=states, collect_states=True,
+                                    moe_aux_loss=False)
     if is_gaussian(logits):
         last = GaussianTensor(logits.mean[:, -1:], logits.second[:, -1:],
                               logits.rep)

@@ -45,6 +45,7 @@ class OpProfiler:
         self.cache_hits = 0
         self.cache_misses = 0
         self.cache_by_op: Dict[str, List] = {}  # op -> [consults, hits]
+        self.fallbacks: Dict[str, int] = {}  # label -> count
 
     # -- dispatch hooks -----------------------------------------------------
     def wrap(self, name: str, impl: str, fn):
@@ -74,6 +75,12 @@ class OpProfiler:
             per[1] += 1
         else:
             self.cache_misses += 1
+
+    def on_fallback(self, label: str) -> None:
+        """A kernel-impl call that had no blocked lowering and ran the XLA
+        formulation instead (e.g. a general einsum contraction). Counted
+        per label so 'kernel impl' profiles can't silently hide XLA work."""
+        self.fallbacks[label] = self.fallbacks.get(label, 0) + 1
 
     # -- reduction ----------------------------------------------------------
     @property
@@ -105,6 +112,7 @@ class OpProfiler:
             "cache_by_op": {op: {"consults": c, "hits": h}
                             for op, (c, h) in sorted(
                                 self.cache_by_op.items())},
+            "fallbacks": dict(sorted(self.fallbacks.items())),
         }
 
     def format_table(self) -> str:
@@ -120,6 +128,10 @@ class OpProfiler:
         lines.append(
             f"tuning cache: {self.cache_consults} consults, "
             f"{self.cache_hits} hits, {self.cache_misses} misses")
+        if self.fallbacks:
+            parts = ", ".join(f"{k} x{n}"
+                              for k, n in sorted(self.fallbacks.items()))
+            lines.append(f"xla fallbacks: {parts}")
         return "\n".join(lines)
 
 

@@ -385,33 +385,36 @@ class Engine:
     def _decode_step(self, params, tokens, positions, cache_len, active,
                      states, lm_mean, lm_var):
         """Lockstep decode for the whole slot batch + select-merge so only
-        ``active`` slots observe the state/logit update."""
+        ``active`` slots observe the state/logit update. The 4th output is
+        the MoE aux dict (drop accounting; zeros on dense families) from
+        the aux-loss-free decode pass."""
         inputs = {"tokens": tokens, "positions": positions,
                   "cache_len": cache_len}
-        logits, new_states = lm.decode_step(params, self.cfg, inputs, states,
-                                            self._ctx())
+        logits, aux, new_states = lm.decode_step_with_aux(
+            params, self.cfg, inputs, states, self._ctx())
         mean, var = self._split_logits(logits)
         mean = mean[:, -1].astype(jnp.float32)
         var = var[:, -1].astype(jnp.float32)
         merged = lm.select_decode_slots(new_states, states, active)
         return (jnp.where(active[:, None], mean, lm_mean),
-                jnp.where(active[:, None], var, lm_var), merged)
+                jnp.where(active[:, None], var, lm_var), merged, aux)
 
     def _decode_step_paged(self, params, tokens, positions, cache_len,
                            active, states, page_table, lm_mean, lm_var):
         """Lockstep decode over the shared page pool. No select-merge: an
         inactive slot's cache_len sits at its position, so the paged
         insert redirects its write to the trash page — the pool is only
-        ever touched on ``active`` slots' own pages."""
+        ever touched on ``active`` slots' own pages. The 4th output is the
+        MoE aux dict (drop accounting; zeros on dense families)."""
         inputs = {"tokens": tokens, "positions": positions,
                   "cache_len": cache_len, "page_table": page_table}
-        logits, new_states = lm.decode_step(params, self.cfg, inputs, states,
-                                            self._ctx())
+        logits, aux, new_states = lm.decode_step_with_aux(
+            params, self.cfg, inputs, states, self._ctx())
         mean, var = self._split_logits(logits)
         mean = mean[:, -1].astype(jnp.float32)
         var = var[:, -1].astype(jnp.float32)
         return (jnp.where(active[:, None], mean, lm_mean),
-                jnp.where(active[:, None], var, lm_var), new_states)
+                jnp.where(active[:, None], var, lm_var), new_states, aux)
 
     def _batch_chunk_step(self, params, inputs, states, out_idx, done,
                           lm_mean, lm_var):
@@ -892,12 +895,16 @@ class Engine:
                 jnp.asarray(active),
                 self.pool.states)
         if self.paged:
-            self._lm_mean, self._lm_var, self.pool.states = self._decode_fn(
-                *args, self.pool.device_table(), self._lm_mean, self._lm_var)
+            self._lm_mean, self._lm_var, self.pool.states, aux = \
+                self._decode_fn(*args, self.pool.device_table(),
+                                self._lm_mean, self._lm_var)
         else:
-            self._lm_mean, self._lm_var, self.pool.states = self._decode_fn(
-                *args, self._lm_mean, self._lm_var)
+            self._lm_mean, self._lm_var, self.pool.states, aux = \
+                self._decode_fn(*args, self._lm_mean, self._lm_var)
         self.metrics.on_decode_pass()
+        if self.cfg.family == "moe":
+            self.metrics.on_moe_drop(float(aux["moe_dropped"]),
+                                     float(aux["moe_assignments"]))
         if self._tracer is not None:
             self._tracer.emit(self._step_idx, "decode_step",
                               active=int(active.sum()))

@@ -77,6 +77,10 @@ _COUNTERS = {
     "decode_passes": "plain (1-token) PFP decode passes",
     "draft_passes": "mean-only draft decode passes",
     "svi_passes": "SVI second-opinion passes launched",
+    # MoE routing telemetry (stays zero on dense families)
+    "moe_dropped_assignments": "routed (token, expert) assignments dropped "
+                               "at capacity",
+    "moe_assignments": "routed (token, expert) assignments offered",
 }
 
 
@@ -89,6 +93,9 @@ class EngineMetrics:
         self._occ = self.registry.gauge("occupancy", "occupied slots")
         self._live_pages = self.registry.gauge("live_pages",
                                                "live pool pages")
+        self._moe_drop_rate = self.registry.gauge(
+            "moe_drop_rate", "fraction of routed assignments dropped at "
+            "expert capacity (cumulative)")
         self.uncertainty = UncertaintyTelemetry(self.registry)
         self.records: List[RequestRecord] = []
         self.occupancy_trace: List[int] = []
@@ -209,6 +216,17 @@ class EngineMetrics:
     def on_draft_pass(self, n: int = 1) -> None:
         self._c["draft_passes"].inc(n)
 
+    def on_moe_drop(self, dropped: float, assignments: float) -> None:
+        """One MoE forward's drop accounting: ``dropped`` of
+        ``assignments`` routed (token, expert) pairs hit a full expert and
+        were zeroed. Updates the cumulative ``moe_drop_rate`` gauge."""
+        self._c["moe_dropped_assignments"].inc(int(dropped))
+        self._c["moe_assignments"].inc(int(assignments))
+        total = self._c["moe_assignments"].value
+        if total:
+            self._moe_drop_rate.set(
+                self._c["moe_dropped_assignments"].value / total)
+
     def on_svi_pass(self, batch: int = 1) -> None:
         """One SVI second-opinion launch resolving ``batch`` slots at once
         (the sequential path calls this with batch=1 per escalation)."""
@@ -325,6 +343,11 @@ class EngineMetrics:
             # when this drops below 1.0
             "pfp_passes_per_token": (c["decode_passes"] + c["verify_passes"])
             / max(c["tokens_generated"], 1),
+            # MoE routing gauges (all zero on dense families)
+            "moe_dropped_assignments": c["moe_dropped_assignments"],
+            "moe_assignments": c["moe_assignments"],
+            "moe_drop_rate": c["moe_dropped_assignments"] / max(
+                c["moe_assignments"], 1),
         }
         out.update(self.uncertainty.summary())
         return out

@@ -33,13 +33,19 @@ def make_svi_train_step(
 ):
     """Build a jittable SVI train step.
 
-    forward_fn(params, batch, ctx) -> (logits, aux_loss). batch must carry
+    forward_fn(params, batch, ctx) -> (logits, aux_loss) — aux_loss may be
+    the scalar loss or lm.forward's MoE aux dict (its 'loss' entry is the
+    term the objective consumes). batch must carry
     'targets'. One reparameterized MC sample per microbatch (standard SVI).
     """
 
     def loss_fn(params, batch, key, step):
         ctx = Context(mode=Mode.SVI, key=key)
         logits, aux = forward_fn(params, batch, ctx)
+        if isinstance(aux, dict):
+            # lm.forward returns the MoE aux dict; the training objective
+            # only consumes the load-balance loss term.
+            aux = aux["loss"]
         kl_scale = kl_schedule(step)
         loss, stats = elbo_loss(
             logits, batch["targets"], params,

@@ -84,6 +84,15 @@ def make_runner(op: str, shape_key: ShapeKey,
         mu_w, var_w = arr(k, n, scale=0.1), arr(k, n, positive=True, scale=0.1)
         return lambda s: ops.pfp_dense_var(mu_x, var_x, mu_w, var_w,
                                            impl="kernel", schedule=s)
+    if op == "dense_batched":
+        e, c, k, n = shape_key
+        mu_x, var_x = arr(e, c, k), arr(e, c, k, positive=True)
+        mu_w = arr(e, k, n, scale=0.1)
+        var_w = arr(e, k, n, positive=True, scale=0.1)
+        srm_x = var_x + jnp.square(mu_x)
+        srm_w = var_w + jnp.square(mu_w)
+        return lambda s: ops.pfp_dense_batched(mu_x, srm_x, mu_w, srm_w,
+                                               impl="kernel", schedule=s)
     if op == "attention":
         b, h, hkv, tq, tk, d = shape_key
         q = arr(b, h, tq, d)

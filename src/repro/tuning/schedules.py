@@ -11,6 +11,7 @@ Shape keys are the *logical* shapes the dispatch layer sees, before any
 flattening or padding the wrappers perform:
 
     dense       (m, k, n)               m = flattened leading dims
+    dense_batched (e, c, k, n)          e = experts, c = capacity rows
     attention   (b, h, hkv, tq, tk, d)  also attention_cache / _paged
                                         (tk = logical cache / P*page_size)
     activation  (rows, cols)            rows = flattened leading dims
@@ -26,9 +27,15 @@ from typing import Dict, Mapping, Optional, Tuple, Union
 
 AxisValue = Union[int, str]
 
-# Block-parameter names per op, in canonical order. conv2d_im2col and the
-# batched-expert einsum route through the dense kernel and share its
-# "dense" schedules (keyed on their im2col / per-expert shapes).
+# Block-parameter names per op, in canonical order. conv2d_im2col routes
+# through the dense kernel and shares its "dense" schedules (keyed on its
+# im2col shapes). "dense_batched" is the grid-level batched-expert MoE
+# kernel (kernels/pfp_moe.py): the (E, C, K) x (E, K, N) expert-MLP
+# contraction in one Pallas call, with ``block_e`` experts resident per
+# grid step (the expert-grid blocking axis — block_e=1 matches the
+# vmapped-per-expert grid). Its first-layer and Eq. 7 variants share the
+# same schedule table: block legality depends only on the padded shape,
+# never on the matmul count.
 # "dense_first" is the Eq. 13 two-matmul variant (deterministic inputs)
 # and "dense_var" the Eq. 7 four-matmul 'var' formulation: same block
 # axes, but distinct ops so each variant's schedules are tuned against
@@ -41,6 +48,7 @@ OP_BLOCK_NAMES: Dict[str, Tuple[str, ...]] = {
     "dense": ("block_m", "block_n", "block_k"),
     "dense_first": ("block_m", "block_n", "block_k"),
     "dense_var": ("block_m", "block_n", "block_k"),
+    "dense_batched": ("block_e", "block_c", "block_n", "block_k"),
     "attention": ("block_q", "block_k"),
     # KV-cache decode attention (per-batch q_start/kv_len scalars) and its
     # paged variant. Both share the "attention" shape key layout; the paged
@@ -86,6 +94,7 @@ OP_AXES: Dict[str, Dict[str, Tuple[AxisValue, ...]]] = {
     "dense": {"dims": _DIMS, "k_order": _K_ORDERS},
     "dense_first": {"dims": _DIMS, "k_order": _K_ORDERS},
     "dense_var": {"dims": _DIMS, "k_order": _K_ORDERS},
+    "dense_batched": {"dims": _DIMS, "k_order": _K_ORDERS},
     "attention": {"dims": _DIMS},
     "attention_cache": {"dims": _DIMS},
     "attention_paged": {"dims": _DIMS, "prefetch": (1, 2, 4)},
@@ -175,6 +184,7 @@ class Schedule:
 def _short(name: str) -> str:
     return {"block_m": "bm", "block_n": "bn", "block_k": "bk",
             "block_q": "bq", "block_rows": "br", "block_cols": "bc",
+            "block_e": "be", "block_c": "bcap",
             "dims": "ds", "k_order": "ko", "epilogue": "ep",
             "prefetch": "pf"}.get(name, name)
 
@@ -188,6 +198,8 @@ DEFAULT_SCHEDULES: Dict[str, Schedule] = {
                                  block_k=512),
     "dense_var": Schedule.make("dense_var", block_m=128, block_n=128,
                                block_k=512),
+    "dense_batched": Schedule.make("dense_batched", block_e=1, block_c=128,
+                                   block_n=128, block_k=512),
     "attention": Schedule.make("attention", block_q=128, block_k=128),
     "attention_cache": Schedule.make("attention_cache", block_q=128,
                                      block_k=128),

@@ -120,6 +120,32 @@ def cost_summary(op: str, shape_key: ShapeKey, schedule: Schedule) -> CostSummar
             vmem = (x_bufs * bm * bk + 2 * bk * bn + n_acc * bm * bn) * 4
             steps = _steps(m, bm) * _steps(n, bn) * _steps(k, bk)
         aligned = bm % _SUBLANE == 0 and bn % _LANE == 0 and bk % _LANE == 0
+    elif op == "dense_batched":
+        # Batched-expert MoE kernel: E independent Eq. 12 dense problems
+        # on an E-leading grid, ``block_e`` experts resident per step.
+        # Per-expert tile footprints are the dense kernel's, scaled by
+        # block_e; the grid-step count divides by block_e — THAT is the
+        # term the expert-grid blocking axis buys (the vmapped baseline
+        # is structurally block_e=1: one grid step per expert tile).
+        e, c, k, n = shape_key
+        be = min(get("block_e", 1), max(e, 1))
+        bc = min(get("block_c", 128), _round_up(c, _SUBLANE))
+        bn = min(get("block_n", 128), _round_up(n, _LANE))
+        bk = min(get("block_k", 512), _round_up(k, _LANE))
+        flops = 3 * 2 * e * c * n * k
+        # Same re-read structure as dense, per expert: x tiles re-read
+        # once per N-block, w tiles once per C-block.
+        io = (2 * e * c * k * _steps(n, bn) + 2 * e * k * n * _steps(c, bc)
+              + 2 * e * c * n) * 4
+        if schedule.axis("k_order") == "unrolled":
+            kp = _round_up(k, bk)
+            vmem = be * (2 * bc * kp + 2 * kp * bn + 3 * bc * bn) * 4
+            steps = _steps(e, be) * _steps(c, bc) * _steps(n, bn)
+        else:
+            vmem = be * (2 * bc * bk + 2 * bk * bn + 3 * bc * bn) * 4
+            steps = (_steps(e, be) * _steps(c, bc) * _steps(n, bn)
+                     * _steps(k, bk))
+        aligned = bc % _SUBLANE == 0 and bn % _LANE == 0 and bk % _LANE == 0
     elif op in ("attention", "attention_cache", "attention_paged"):
         # The cache/paged variants run the same online-softmax core over
         # the same (b, h, hkv, tq, tk, d) shape key; attention_paged has no
@@ -250,6 +276,10 @@ _AXIS_MENU: Dict[str, Dict[str, Sequence[int]]] = {
     "dense": _DENSE_MENU,
     "dense_first": _DENSE_MENU,
     "dense_var": _DENSE_MENU,
+    "dense_batched": {"block_e": (1, 2, 4, 8),
+                      "block_c": (8, 16, 32, 64, 128, 256),
+                      "block_n": (128, 256, 512),
+                      "block_k": (128, 256, 512, 1024)},
     "attention": {"block_q": (16, 32, 64, 128, 256),
                   "block_k": (32, 64, 128, 256, 512)},
     "attention_cache": {"block_q": (16, 32, 64, 128, 256),
@@ -276,6 +306,8 @@ _AXIS_DIM = {
     "dense": _DENSE_DIM,
     "dense_first": _DENSE_DIM,
     "dense_var": _DENSE_DIM,
+    "dense_batched": {"block_e": (0, 1), "block_c": (1, _SUBLANE),
+                      "block_k": (2, _LANE), "block_n": (3, _LANE)},
     "attention": {"block_q": (3, _SUBLANE), "block_k": (4, _SUBLANE)},
     "attention_cache": {"block_q": (3, _SUBLANE), "block_k": (4, _SUBLANE)},
     "attention_paged": {"block_q": (3, _SUBLANE)},

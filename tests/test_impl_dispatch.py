@@ -251,6 +251,41 @@ def test_batched_expert_einsum_parity():
     _assert_close(a.var, b.var, rtol=1e-3, atol=1e-4)
 
 
+def test_depthwise_einsum_parity():
+    # The recurrent block's causal depthwise conv taps ("wbtr,wr->btr")
+    # used to be a silent XLA fallback under impl='kernel'; it now runs as
+    # an R-batched matvec on the batched-expert dense kernel.
+    x = _gauss(jax.random.fold_in(KEY, 16), (4, 2, 6, 24), rep=SRM)
+    w = _gauss(jax.random.fold_in(KEY, 17), (4, 24), 0.1, rep=SRM)
+    a = dispatch.pfp_einsum("wbtr,wr->btr", x, w, impl="xla")
+    b = dispatch.pfp_einsum("wbtr,wr->btr", x, w, impl="kernel")
+    assert a.rep == b.rep
+    _assert_close(a.mean, b.mean, rtol=1e-4, atol=1e-5)
+    _assert_close(a.second, b.second, rtol=1e-3, atol=1e-5)
+
+
+def test_profiler_counts_einsum_fallbacks():
+    # A spec with no kernel mapping must be COUNTED when it falls back to
+    # the XLA impl, so 'kernel impl' profiles can't silently hide XLA work
+    # — and the lifted specs must not count.
+    from repro.obs.profiler import profile_ops
+
+    x = _gauss(jax.random.fold_in(KEY, 18), (3, 5, 7), rep=SRM)
+    w = _gauss(jax.random.fold_in(KEY, 19), (5, 7), 0.1, rep=SRM)
+    lifted_x = _gauss(jax.random.fold_in(KEY, 16), (4, 2, 6, 24), rep=SRM)
+    lifted_w = _gauss(jax.random.fold_in(KEY, 17), (4, 24), 0.1, rep=SRM)
+    # disable_jit=False: the counter fires in the Python dispatch layer
+    # (trace time), and the lifted spec's Pallas path stays jitted.
+    with profile_ops(disable_jit=False) as prof:
+        dispatch.pfp_einsum("abc,bc->abc", x, w, impl="kernel")
+        dispatch.pfp_einsum("wbtr,wr->btr", lifted_x, lifted_w,
+                            impl="kernel")
+    falls = prof.summary()["fallbacks"]
+    assert any(label.startswith("einsum:abc,bc->abc") for label in falls)
+    assert not any("wbtr" in label for label in falls)
+    assert "xla fallbacks" in prof.format_table()
+
+
 @pytest.mark.parametrize("kv_heads", [4, 2, 1])  # MHA, GQA, MQA
 def test_attention_op_parity_gqa_shapes(kv_heads):
     kq, kk, kv, kw = jax.random.split(jax.random.fold_in(KEY, 13), 4)

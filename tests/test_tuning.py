@@ -609,6 +609,7 @@ _VARIANTS = [
     {"dense": dict(block_m=8, block_n=128, block_k=128),
      "dense_first": dict(block_m=8, block_n=128, block_k=128),
      "dense_var": dict(block_m=8, block_n=128, block_k=128),
+     "dense_batched": dict(block_e=2, block_c=8, block_n=128, block_k=128),
      "attention": dict(block_q=16, block_k=32),
      "attention_cache": dict(block_q=16, block_k=32),
      "attention_paged": dict(block_q=16),
@@ -621,6 +622,7 @@ _VARIANTS = [
     {"dense": dict(block_m=32, block_n=256, block_k=256),
      "dense_first": dict(block_m=32, block_n=256, block_k=256),
      "dense_var": dict(block_m=32, block_n=256, block_k=256),
+     "dense_batched": dict(block_e=4, block_c=32, block_n=256, block_k=256),
      "attention": dict(block_q=32, block_k=64),
      "attention_cache": dict(block_q=32, block_k=64),
      "attention_paged": dict(block_q=32),
@@ -633,6 +635,8 @@ _VARIANTS = [
     {"dense": dict(block_m=256, block_n=512, block_k=1024),
      "dense_first": dict(block_m=256, block_n=512, block_k=1024),
      "dense_var": dict(block_m=256, block_n=512, block_k=1024),
+     "dense_batched": dict(block_e=8, block_c=256, block_n=512,
+                           block_k=1024),
      "attention": dict(block_q=256, block_k=512),
      "attention_cache": dict(block_q=256, block_k=512),
      "attention_paged": dict(block_q=256),
